@@ -1,0 +1,101 @@
+"""Perf-iteration helper: lower one cell and print its biggest collectives
+and materializing ops — the 'profile' of the dry-run methodology.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.hlo_inspect --arch qwen2.5-14b \
+      --shape decode_32k [--top 15] [--layers 1] [--sp]
+"""
+from __future__ import annotations
+
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+import argparse
+import re
+from collections import defaultdict
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--top", type=int, default=15)
+    ap.add_argument("--layers", type=int, default=None,
+                    help="layer-count override (unrolled) for fast iteration")
+    ap.add_argument("--sp", action="store_true")
+    ap.add_argument("--multi", action="store_true")
+    ap.add_argument("--dump", default=None, help="write full HLO text here")
+    args = ap.parse_args()
+
+    from repro.launch.dryrun import lower_cell, _DTYPE_BYTES
+
+    lowered, mesh, meta = lower_cell(
+        args.arch, args.shape, args.multi, sp=args.sp,
+        layers_override=args.layers, unroll=args.layers is not None)
+    compiled = lowered.compile()
+    txt = compiled.as_text()
+    if args.dump:
+        with open(args.dump, "w") as f:
+            f.write(txt)
+
+    coll_re = re.compile(
+        r"(\w+)\[([\d,]*)\][^=]*\s(all-gather|all-reduce|reduce-scatter|"
+        r"all-to-all|collective-permute)\(")
+    sizes = defaultdict(float)
+    lines = {}
+    for line in txt.splitlines():
+        m = coll_re.search(line)
+        if not m:
+            continue
+        dt, dims, op = m.groups()
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = _DTYPE_BYTES[dt]
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        key = f"{op} {dt}[{dims}]"
+        sizes[key] += n
+        lines.setdefault(key, line.strip()[:220])
+
+    total = sum(sizes.values())
+    print(f"== {meta} total collective bytes/device: {total/2**30:.3f} GiB ==")
+    for key, n in sorted(sizes.items(), key=lambda kv: -kv[1])[:args.top]:
+        print(f"{n/2**30:9.3f} GiB  {key}")
+        print(f"            {lines[key]}")
+
+    # top materializing ops by charged HBM bytes (the fused-traffic model)
+    from repro.launch.dryrun import _OPLINE_RE, _MATERIALIZING
+    mat = defaultdict(float)
+    mat_count = defaultdict(int)
+    for line in txt.splitlines():
+        m = _OPLINE_RE.search(line)
+        if not m:
+            continue
+        dt, dims, op = m.groups()
+        if op not in _MATERIALIZING or dt not in _DTYPE_BYTES:
+            continue
+        n = 2 * _DTYPE_BYTES[dt]
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        key = f"{op} {dt}[{dims}]"
+        mat[key] += n
+        mat_count[key] += 1
+    print(f"-- top materializing ops ({sum(mat.values())/2**30:.2f} GiB "
+          "charged) --")
+    for key, n in sorted(mat.items(), key=lambda kv: -kv[1])[:args.top]:
+        print(f"{n/2**30:9.3f} GiB  x{mat_count[key]:<4d} {key}")
+
+    cost = compiled.cost_analysis()
+    print(f"flops/device: {cost.get('flops', 0):.4g}   "
+          f"bytes(xla): {cost.get('bytes accessed', 0):.4g}")
+    mem = compiled.memory_analysis()
+    print(f"peak bytes/device: "
+          f"{(mem.argument_size_in_bytes + mem.output_size_in_bytes + mem.temp_size_in_bytes - mem.alias_size_in_bytes)/2**30:.2f} GiB")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,213 @@
+"""§Roofline report: three terms per (arch x shape) from the dry-run sweep.
+
+Reads results/dryrun/<arch>__<shape>__singlepod*.json (produced by
+``repro.launch.dryrun``; multipod cells prove lowering only) and renders:
+
+  compute_s     = per-device HLO FLOPs / 197e12        (TPU v5e bf16 peak)
+  memory_s      = per-device fused-HBM-bytes / 819e9
+  collective_s  = per-device collective bytes / 50e9   (ICI, per link)
+  bottleneck    = argmax of the three
+  MODEL_FLOPS   = 6*N_active*tokens (train) / 2*N_active*tokens (serve)
+  useful_ratio  = MODEL_FLOPS / (HLO_FLOPs * n_devices)   [catches waste]
+  roofline_frac = ideal_compute_s / dominant_term_s
+                  (fraction of the compute roofline the compiled program
+                   would reach if every term overlapped perfectly)
+
+Outputs a CSV stream + results/roofline.md (the EXPERIMENTS.md table).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import re
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def _active_param_fraction(path: str, cfg) -> float:
+    """Fraction of this leaf's parameters that do matmul work per token."""
+    if re.search(r"embed$", path):
+        # embedding lookup is a gather, not FLOPs; tied embeddings are
+        # counted at the head instead (same tensor, one matmul)
+        return 1.0 if cfg.tie_embeddings else 0.0
+    if re.search(r"moe/(w1|w2|w3)$", path):   # routed experts: top-k of E
+        return cfg.n_experts_active / max(cfg.n_experts, 1)
+    if re.search(r"(ln_|norm|router|u_bonus|lora_)", path):
+        return 0.0                            # vector ops / tiny
+    return 1.0
+
+
+def _walk(tree, prefix=""):
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            yield from _walk(v, f"{prefix}{k}/")
+    else:
+        yield prefix.rstrip("/"), tree
+
+
+def active_params(arch: str) -> tuple[int, int]:
+    """(total, matmul-active) parameter counts for an architecture."""
+    import jax
+    from repro.configs import get_config
+    from repro.models import build
+
+    cfg = get_config(arch)
+    sds = jax.eval_shape(build(cfg).init, jax.random.PRNGKey(0))
+    total = active = 0
+    for path, leaf in _walk(sds):
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        total += n
+        active += int(n * _active_param_fraction(path, cfg))
+    return total, active
+
+
+def model_flops(arch: str, shape_name: str, n_active: int) -> float:
+    from repro.configs import SHAPES
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one new token per sequence per step
+    return 2.0 * n_active * shape.global_batch
+
+
+def memory_floor_bytes(arch: str, shape_name: str, n_total: int,
+                       n_devices: int) -> float:
+    """Per-device intrinsic HBM bytes for a step: weight stream + (decode)
+    KV-cache read. Weights are TP-sharded (bf16 serve / f32+grad+opt train);
+    the cache is sharded over batch (data) and seq-or-heads (model)."""
+    from repro.configs import SHAPES, get_config
+    shape = SHAPES[shape_name]
+    cfg = get_config(arch)
+    model_size = 16
+    data_size = n_devices // model_size
+    if shape.kind == "train":
+        # fwd read + bwd read + grad write (bf16 compute copies) + opt pass
+        return n_total * 2.0 * 3 / model_size + n_total * 12.0 / n_devices
+    w = n_total * 2.0 / model_size          # bf16 weights, one stream
+    if shape.kind == "prefill":
+        return w
+    if cfg.attn_free:
+        state = (cfg.n_layers * shape.global_batch / data_size
+                 * cfg.d_model * 2 * 2.0)
+        return w + state
+    S = min(shape.seq_len, cfg.sliding_window or shape.seq_len)
+    cache = (cfg.n_layers * (shape.global_batch / data_size) * S
+             * cfg.n_kv_heads * cfg.d_head * 2 * 2.0 / model_size)
+    return w + cache
+
+
+_CELL_RE = re.compile(r"(?P<arch>.+)__(?P<shape>[a-z0-9_]+)__singlepod\.json$")
+
+
+def load_cells(dirname=None):
+    """Final-config cells from results/dryrun, falling back to the archived
+    §Perf baseline (results/dryrun_baseline) for cells the final re-sweep
+    has not (re)compiled — each row is tagged with its source config."""
+    dirname = dirname or os.path.join(RESULTS, "dryrun")
+    fallback = os.path.join(RESULTS, "dryrun_baseline")
+    names = {}
+    for path in sorted(glob.glob(os.path.join(fallback, "*__singlepod.json"))):
+        names[os.path.basename(path)] = (path, "baseline")
+    for path in sorted(glob.glob(os.path.join(dirname, "*__singlepod.json"))):
+        names[os.path.basename(path)] = (path, "final")
+    cells = []
+    for base in sorted(names):
+        path, cfg_tag = names[base]
+        m = _CELL_RE.search(base)
+        if not m:
+            continue
+        with open(path) as f:
+            d = json.load(f)
+        d["config"] = cfg_tag
+        if d.get("status") != "ok" or "roofline" not in d:
+            cells.append({"arch": m["arch"], "shape": m["shape"],
+                          "status": d.get("status", "?"), "config": cfg_tag,
+                          "error": d.get("error", "")[:100]})
+            continue
+        cells.append(d)
+    return cells
+
+
+def improvement_note(d, dom, ratio, n_params):
+    if dom == "collective_s":
+        coll = d["per_device"]["collective_bytes"]
+        big = max(coll, key=coll.get)
+        if n_params < 8e9 and d["shape"].endswith(("4k", "32k")):
+            return (f"dominant collective {big}: model fits without TP — "
+                    "rebind to pure DP + ZeRO-3 (--pure-dp; measured 21x on "
+                    "qwen3-4b train)")
+        return (f"dominant collective is {big}; reshard to keep that tensor "
+                f"local (or overlap it with compute)")
+    if dom == "memory_s":
+        return ("HBM-bound: quantize the largest streaming tensors "
+                "(int8 weights measured -14% on qwen2.5 decode; int8 KV "
+                "next) or raise arithmetic intensity")
+    if ratio < 0.5:
+        return ("compute-bound but useful_ratio "
+                f"{ratio:.2f} — remove redundant/replicated compute first")
+    return "compute-bound near roofline: only faster math (int8/packing) helps"
+
+
+def main(report=print):
+    cells = load_cells()
+    rows = []
+    n_active_cache: dict[str, tuple[int, int]] = {}
+    report("roofline,arch,shape,cfg,compute_s,memory_s,collective_s,"
+           "bottleneck,model_gflops,useful_ratio,roofline_frac")
+    md = ["| arch | shape | cfg | compute_s | memory_s | collective_s | "
+          "bottleneck | useful_ratio | roofline_frac | what would move it |",
+          "|---|---|---|---|---|---|---|---|---|---|"]
+    for d in cells:
+        arch, shape = d["arch"], d["shape"]
+        if "roofline" not in d:
+            report(f"roofline,{arch},{shape},ERROR,{d.get('error','')}")
+            md.append(f"| {arch} | {shape} | ERROR {d.get('error','')} | "
+                      "| | | | | |")
+            continue
+        if arch not in n_active_cache:
+            n_active_cache[arch] = active_params(arch)
+        n_tot, n_act = n_active_cache[arch]
+        r = d["roofline"]
+        mf = model_flops(arch, shape, n_act)
+        hlo_global = d["per_device"]["flops"] * d["n_devices"]
+        ratio = mf / hlo_global if hlo_global else 0.0
+        # the binding ideal is the LARGER of the compute ideal and the
+        # intrinsic memory floor (decode/prefill are HBM-bound by design)
+        ideal_s = max(mf / d["n_devices"] / PEAK_FLOPS,
+                      memory_floor_bytes(arch, shape, n_tot,
+                                         d["n_devices"]) / HBM_BW)
+        dom = r["bottleneck"]
+        dom_s = r[dom]
+        frac = ideal_s / dom_s if dom_s else 0.0
+        note = improvement_note(d, dom, ratio, n_tot)
+        cfg_tag = d.get("config", "final")
+        report(f"roofline,{arch},{shape},{cfg_tag},{r['compute_s']:.4g},"
+               f"{r['memory_s']:.4g},{r['collective_s']:.4g},{dom},"
+               f"{mf/1e9:.4g},{ratio:.3f},{frac:.3f}")
+        md.append(f"| {arch} | {shape} | {cfg_tag} | {r['compute_s']:.4g} | "
+                  f"{r['memory_s']:.4g} | {r['collective_s']:.4g} | {dom} | "
+                  f"{ratio:.3f} | {frac:.3f} | {note} |")
+        rows.append((arch, shape, frac, dom))
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(os.path.join(RESULTS, "roofline.md"), "w") as f:
+        f.write("\n".join(md) + "\n")
+    if rows:
+        worst = min(rows, key=lambda t: t[2])
+        report(f"roofline,worst-cell,{worst[0]},{worst[1]},frac={worst[2]:.3f}"
+               f",{worst[3]}")
+    report(f"roofline,cells,{len(rows)},ok")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Benchmark harness entry point: one module per paper table/figure.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.run              # everything
+  PYTHONPATH=src python -m benchmarks.run --only table2,roofline
+
+Each module prints ``<table>,<row>,<values...>`` CSV lines; the combined
+stream is also written to results/bench.csv. ``roofline`` renders the
+EXPERIMENTS.md §Roofline table from results/dryrun/*.json (it does not
+compile anything itself — run repro.launch.dryrun first for fresh cells).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+import traceback
+
+SUITES = [
+    # (name, module, what it reproduces)
+    ("table2", "benchmarks.table2_sisd",
+     "Table 2: SISD mul/div ARE%/PRE% vs accurate/trunc/Mitchell/MBM/INZeD"),
+    ("table3", "benchmarks.table3_simd",
+     "Table 3: SIMD packed mul-div cost profile (TPU analogue)"),
+    ("table4", "benchmarks.table4_ann",
+     "Table 4: quantized ANN inference w/ approximate multipliers"),
+    ("fig1", "benchmarks.fig1_error_maps",
+     "Fig 1: error heat maps over the fraction square"),
+    ("fig34", "benchmarks.fig34_imaging",
+     "Fig 3/4: image blending + Gaussian smoothing PSNR"),
+    ("roofline", "benchmarks.roofline",
+     "§Roofline: per (arch x shape) terms from the dry-run sweep"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite names (default: all)")
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(__file__), "..", "results", "bench.csv"))
+    args = ap.parse_args()
+    wanted = set(args.only.split(",")) if args.only else None
+
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    lines: list[str] = []
+
+    def report(msg):
+        print(msg, flush=True)
+        lines.append(str(msg))
+
+    failures = 0
+    for name, module, desc in SUITES:
+        if wanted and name not in wanted:
+            continue
+        report(f"# === {name}: {desc}")
+        t0 = time.time()
+        try:
+            mod = __import__(module, fromlist=["main"])
+            mod.main(report=report)
+            report(f"# --- {name} done in {time.time() - t0:.1f}s")
+        except Exception as e:  # noqa: BLE001 — keep the harness sweeping
+            failures += 1
+            report(f"# !!! {name} FAILED: {type(e).__name__}: {e}")
+            traceback.print_exc()
+
+    with open(args.out, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    print(f"# wrote {args.out}; failures={failures}")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,142 @@
+"""Table 4 reproduction: ANN classification with approximate multipliers.
+
+The paper trains 784-100(-100)-10 MLPs in float, quantizes weights and
+activations to 8-bit fixed point, and runs inference with accurate /
+SIMDive / MBM multipliers; accuracies stay within ~0.05% of each other
+(error resilience of ANNs).
+
+No MNIST on this offline box — we substitute a deterministic synthetic
+10-class image problem of the same geometry (28x28 grayscale, class
+prototypes + structured noise; hard enough that accuracy sits in the 85-97%
+band like MNIST). The *claim under test* — approximate-multiplier inference
+matches accurate 8-bit inference — is dataset-agnostic; the substitution is
+recorded in EXPERIMENTS.md.
+
+The quantized inference path runs through the real SIMDive integer matmul
+(kernels ref path; bit-exact with the Pallas kernel).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import SimdiveSpec
+from repro.core.approx import quantize_sign_magnitude
+from repro.kernels import simdive_matmul_int
+
+
+def make_dataset(n_train=6000, n_test=1000, seed=0, shift=2, noise=4.0):
+    """10-class 28x28 synthetic 'digits': smooth prototypes + shifts + noise.
+
+    ``noise``/``shift`` are tuned so a 1-hidden-layer MLP lands in the
+    MNIST-like 85-97% test-accuracy band (hard, but learnable)."""
+    rng = np.random.default_rng(seed)
+    protos = rng.normal(size=(10, 28, 28))
+    # smooth the prototypes (separable box blur x3), unit contrast
+    for _ in range(3):
+        protos = (np.roll(protos, 1, 1) + protos + np.roll(protos, -1, 1)) / 3
+        protos = (np.roll(protos, 1, 2) + protos + np.roll(protos, -1, 2)) / 3
+    protos /= protos.std(axis=(1, 2), keepdims=True)
+
+    def sample(n):
+        y = rng.integers(0, 10, n)
+        shift_x = rng.integers(-shift, shift + 1, n)
+        shift_y = rng.integers(-shift, shift + 1, n)
+        xs = np.empty((n, 28, 28), np.float32)
+        for i in range(n):
+            img = np.roll(np.roll(protos[y[i]], shift_x[i], 0), shift_y[i], 1)
+            img = img + rng.normal(scale=noise, size=(28, 28))
+            xs[i] = img
+        # [0,1] image range like 8-bit grayscale (quantization-friendly)
+        xs = (xs - xs.min()) / (np.ptp(xs) + 1e-9)
+        return xs.reshape(n, 784), y
+
+    return sample(n_train), sample(n_test)
+
+
+def train_float(xtr, ytr, hidden=(100,), steps=600, lr=0.03, seed=0):
+    """SGD + momentum with cosine decay — stable across dataset variants."""
+    key = jax.random.PRNGKey(seed)
+    sizes = (784,) + hidden + (10,)
+    ws = []
+    for i in range(len(sizes) - 1):
+        key, k = jax.random.split(key)
+        ws.append(jax.random.normal(k, (sizes[i], sizes[i + 1]),
+                                    jnp.float32) * (sizes[i] ** -0.5))
+
+    def fwd(ws, x):
+        for w in ws[:-1]:
+            x = jax.nn.relu(x @ w)
+        return x @ ws[-1]
+
+    def loss(ws, x, y):
+        lg = fwd(ws, x)
+        return jnp.mean(
+            jax.nn.logsumexp(lg, -1) - jnp.take_along_axis(lg, y[:, None], 1)[:, 0])
+
+    @jax.jit
+    def step(ws, vs, x, y, lr_t):
+        g = jax.grad(loss)(ws, x, y)
+        vs = [0.9 * v + gw for v, gw in zip(vs, g)]
+        return [w - lr_t * v for w, v in zip(ws, vs)], vs
+
+    xtr_j = jnp.asarray(xtr)
+    ytr_j = jnp.asarray(ytr)
+    n = xtr.shape[0]
+    bs = 256
+    rng = np.random.default_rng(seed)
+    vs = [jnp.zeros_like(w) for w in ws]
+    for s in range(steps):
+        idx = rng.integers(0, n, bs)
+        lr_t = lr * 0.5 * (1 + np.cos(np.pi * s / steps))
+        ws, vs = step(ws, vs, xtr_j[idx], ytr_j[idx], lr_t)
+    return ws, fwd
+
+
+def quantized_infer(ws, x, mul):
+    """8-bit fixed-point inference; ``mul(xq, wq) -> int32 matmul``."""
+    act = jnp.asarray(x)
+    for i, w in enumerate(ws):
+        qa, sa, sca = quantize_sign_magnitude(act, 8)
+        qw, sw, scw = quantize_sign_magnitude(w, 8)
+        acc = mul((qa.astype(jnp.int32) * sa),
+                  (qw.astype(jnp.int32) * sw))
+        act = acc.astype(jnp.float32) * (sca * scw)
+        if i < len(ws) - 1:
+            act = jax.nn.relu(act)
+    return act
+
+
+def accuracy(logits, y):
+    return float((np.asarray(logits).argmax(-1) == y).mean()) * 100
+
+
+def main(report=print):
+    (xtr, ytr), (xte, yte) = make_dataset()
+    muls = {
+        "accurate8": lambda a, b: (a.astype(jnp.int64) @ b.astype(jnp.int64)
+                                   ).astype(jnp.int64),
+        "simdive": lambda a, b: simdive_matmul_int(
+            a, b, SimdiveSpec(width=8, coeff_bits=6), backend="ref"),
+        "mitchell": lambda a, b: simdive_matmul_int(
+            a, b, SimdiveSpec(width=8, coeff_bits=0, round_output=False),
+            backend="ref"),
+    }
+    report("table4,config,double-precision,accurate-8b,simdive-8b,mitchell-8b"
+           "  (paper: SIMDive matches accurate to ~0.05%)")
+    for hidden in ((100,), (100, 100)):
+        ws, fwd = train_float(xtr, ytr, hidden=hidden)
+        acc_f = accuracy(fwd(ws, jnp.asarray(xte)), yte)
+        accs = {}
+        for name, mul in muls.items():
+            accs[name] = accuracy(quantized_infer(ws, xte, mul), yte)
+        report(f"table4,{len(hidden)}x100,{acc_f:.2f},{accs['accurate8']:.2f},"
+               f"{accs['simdive']:.2f},{accs['mitchell']:.2f}")
+        delta = abs(accs["simdive"] - accs["accurate8"])
+        report(f"table4,delta-simdive-vs-accurate-{len(hidden)}h,{delta:.2f},"
+               "pct-points")
+
+
+if __name__ == "__main__":
+    main()

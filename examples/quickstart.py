@@ -1,0 +1,91 @@
+"""SIMDive quickstart: the paper's arithmetic in ~60 lines.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+
+Shows the three layers of the library:
+  1. scalar ops  — plain Mitchell vs SIMDive-corrected mul/div errors,
+  2. the accuracy knob — coeff_bits sweep (paper §3.3/§3.4),
+  3. SIMD packing — four 8-bit lanes per uint32 word, mixed mul/div lanes
+     in one call (paper §3.2), and the Pallas TPU kernel (interpret mode).
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import (
+    SimdiveSpec,
+    mitchell_div,
+    mitchell_mul,
+    pack,
+    packed_mixed,
+    simdive_div,
+    simdive_mul,
+    unpack,
+)
+
+
+def rel_err(approx, true):
+    return float(np.mean(np.abs(np.asarray(approx, np.float64) - true) / true))
+
+
+def main():
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.integers(1, 256, 20000, dtype=np.uint32))
+    b = jnp.asarray(rng.integers(1, 256, 20000, dtype=np.uint32))
+    ta = np.asarray(a, np.float64)
+    tb = np.asarray(b, np.float64)
+
+    # -- 1. plain Mitchell vs SIMDive ------------------------------------
+    spec = SimdiveSpec(width=8, coeff_bits=6)
+    print("== 8-bit multiplier / divider, 20k random pairs ==")
+    print(f" mitchell mul ARE: {100*rel_err(mitchell_mul(a, b, 8), ta*tb):.2f}%"
+          "   (paper: 3.85%)")
+    print(f" simdive  mul ARE: {100*rel_err(simdive_mul(a, b, spec), ta*tb):.2f}%"
+          "   (paper: 0.82%)")
+    FO = 12  # divider fixed-point fraction bits
+    print(f" mitchell div ARE: "
+          f"{100*rel_err(np.asarray(mitchell_div(a, b, 8, frac_out=FO))/2**FO, ta/tb):.2f}%"
+          "   (paper: 4.11%)")
+    print(f" simdive  div ARE: "
+          f"{100*rel_err(np.asarray(simdive_div(a, b, spec, frac_out=FO))/2**FO, ta/tb):.2f}%"
+          "   (paper: 0.77%)")
+
+    # -- 2. the tunable-accuracy knob ------------------------------------
+    print("\n== accuracy knob: one more LUT bit per coeff_bits step ==")
+    for cb in (0, 2, 4, 6, 8):
+        s = SimdiveSpec(width=8, coeff_bits=cb, round_output=cb > 0)
+        e = 100 * rel_err(simdive_mul(a, b, s), ta * tb)
+        print(f" coeff_bits={cb}: mul ARE {e:.3f}%")
+    s256 = SimdiveSpec(width=8, coeff_bits=8, index_bits=4)  # §3.4 8-LUT mode
+    print(f" 256-region (index_bits=4): mul ARE "
+          f"{100*rel_err(simdive_mul(a, b, s256), ta*tb):.3f}%  (paper: <0.1%)")
+
+    # -- 3. SIMD packing + mixed functionality ---------------------------
+    print("\n== SIMD: 4x8-bit lanes per word, per-lane mul/div mode ==")
+    lanes_a = jnp.asarray(rng.integers(1, 256, (4, 16), dtype=np.uint32))
+    lanes_b = jnp.asarray(rng.integers(1, 256, (4, 16), dtype=np.uint32))
+    mode = jnp.asarray(rng.integers(0, 2, (4, 16), dtype=np.uint32))  # 1=mul
+    wa, wb = pack(lanes_a, 8), pack(lanes_b, 8)
+    print(f" packed words: {lanes_a.shape} lanes -> {wa.shape} uint32 words"
+          f" ({lanes_a.size*4} B -> {wa.nbytes} B operand traffic)")
+    out = packed_mixed(wa, wb, mode, spec, frac_out=6)  # per-lane mul|div
+    mul_lane = int(np.argwhere(np.asarray(mode).ravel() == 1)[0][0])
+    div_lane = int(np.argwhere(np.asarray(mode).ravel() == 0)[0][0])
+    flat_a, flat_b = np.asarray(lanes_a).ravel(), np.asarray(lanes_b).ravel()
+    flat_o = np.asarray(out).ravel()
+    print(f" mul lane {mul_lane}: {flat_a[mul_lane]} * {flat_b[mul_lane]} "
+          f"~= {flat_o[mul_lane]}  (exact {flat_a[mul_lane]*flat_b[mul_lane]})")
+    print(f" div lane {div_lane}: {flat_a[div_lane]} / {flat_b[div_lane]} "
+          f"~= {flat_o[div_lane]/64:.3f}  "
+          f"(exact {flat_a[div_lane]/flat_b[div_lane]:.3f})")
+
+    # Pallas TPU kernel (runs in interpret mode on CPU; TPU is the target)
+    from repro.kernels import simdive_packed
+    out = simdive_packed(wa, wb, spec, op="mul", backend="pallas",
+                         block=(4, 16))
+    ref = simdive_packed(wa, wb, spec, op="mul", backend="ref")
+    assert (np.asarray(out) == np.asarray(ref)).all()
+    print(" pallas packed-mul kernel == ref (bit-exact) ✓")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,185 @@
+"""Sharded, atomic, async checkpointing with elastic restore.
+
+Layout per step:
+    <dir>/step_000123.tmp/      (written)
+    <dir>/step_000123/          (atomic rename on completion)
+        manifest.json           tree structure, shapes, dtypes, step
+        arrays.npz              flat {path: ndarray}
+A checkpoint is valid iff the rename committed — a crash mid-write leaves
+only a .tmp directory, which restore ignores and GC removes. ``save_async``
+snapshots to host memory synchronously (cheap) and writes in a daemon
+thread so the train loop never blocks on disk.
+
+Elastic restore: arrays are written unsharded (gathered); ``restore`` lays
+them out onto whatever mesh/sharding the *new* job provides — so a job can
+come back on a different device count (tested 1 -> n in CI; the same code
+path is how a 512-chip pod-pair resumes on one pod).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+import time
+
+import jax
+import numpy as np
+
+__all__ = ["save", "save_async", "restore", "latest_step", "gc_keep_last"]
+
+_SEP = "/"
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in sorted(tree.items()):
+            out.update(_flatten(v, f"{prefix}{k}{_SEP}"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}#{i}{_SEP}"))
+    else:
+        out[prefix.rstrip(_SEP)] = tree
+    return out
+
+
+def _unflatten(flat):
+    tree: dict = {}
+    for path, v in flat.items():
+        parts = path.split(_SEP)
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = v
+
+    def listify(node):
+        if isinstance(node, dict):
+            if node and all(re.fullmatch(r"#\d+", k) for k in node):
+                return [listify(node[f"#{i}"]) for i in range(len(node))]
+            return {k: listify(v) for k, v in node.items()}
+        return node
+
+    return listify(tree)
+
+
+def _step_dir(d, step):
+    return os.path.join(d, f"step_{step:09d}")
+
+
+def save(ckpt_dir: str, step: int, tree) -> str:
+    """Synchronous checkpoint write (atomic commit via rename)."""
+    flat = {k: np.asarray(jax.device_get(v)) for k, v in _flatten(tree).items()}
+    final = _step_dir(ckpt_dir, step)
+    tmp = final + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+    manifest = {
+        "step": step,
+        "time": time.time(),
+        "arrays": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                   for k, v in flat.items()},
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    if os.path.isdir(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+_PENDING: list[threading.Thread] = []
+
+
+def save_async(ckpt_dir: str, step: int, tree) -> threading.Thread:
+    """Snapshot to host now, write to disk in the background."""
+    flat = {k: np.asarray(jax.device_get(v)) for k, v in _flatten(tree).items()}
+
+    def _write():
+        final = _step_dir(ckpt_dir, step)
+        tmp = final + ".tmp"
+        os.makedirs(tmp, exist_ok=True)
+        np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump({"step": step, "time": time.time(),
+                       "arrays": {k: {"shape": list(v.shape),
+                                      "dtype": str(v.dtype)}
+                                  for k, v in flat.items()}}, f)
+        if os.path.isdir(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+
+    t = threading.Thread(target=_write, daemon=True)
+    t.start()
+    _PENDING.append(t)
+    return t
+
+
+def wait_pending():
+    for t in _PENDING:
+        t.join()
+    _PENDING.clear()
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = []
+    for name in os.listdir(ckpt_dir):
+        m = re.fullmatch(r"step_(\d+)", name)
+        if m and os.path.exists(os.path.join(ckpt_dir, name, "manifest.json")):
+            steps.append(int(m.group(1)))
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int | None = None, shardings=None,
+            like=None):
+    """Load a checkpoint; lay out onto the current mesh (elastic).
+
+    ``shardings``: optional pytree of jax.sharding.Sharding matching the
+    saved tree — arrays are placed shard-by-shard (device_put with sharding
+    re-lays-out regardless of the writer's topology). ``like``: optional
+    pytree to take target dtypes from.
+    """
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    d = _step_dir(ckpt_dir, step)
+    with np.load(os.path.join(d, "arrays.npz")) as z:
+        flat = {k: z[k] for k in z.files}
+    tree = _unflatten(flat)
+    if like is not None:
+        tree = jax.tree.map(lambda ref, a: np.asarray(a, ref.dtype), like, tree)
+    if shardings is not None:
+        tree = jax.tree.map(
+            lambda a, s: jax.device_put(a, s), tree, shardings)
+    return step, tree
+
+
+def gc_keep_last(ckpt_dir: str, keep: int = 3, tmp_grace_s: float = 300.0):
+    """Keep the newest ``keep`` checkpoints; reap *stale* .tmp leftovers.
+
+    A .tmp dir younger than ``tmp_grace_s`` may be an in-flight async write
+    (save_async runs in a background thread) — never touch those; only
+    genuinely crashed writes (old mtimes) are removed.
+    """
+    if not os.path.isdir(ckpt_dir):
+        return
+    steps = []
+    now = time.time()
+    for name in os.listdir(ckpt_dir):
+        path = os.path.join(ckpt_dir, name)
+        if name.endswith(".tmp"):
+            try:
+                if now - os.path.getmtime(path) > tmp_grace_s:
+                    shutil.rmtree(path, ignore_errors=True)
+            except OSError:
+                pass
+            continue
+        m = re.fullmatch(r"step_(\d+)", name)
+        if m:
+            steps.append(int(m.group(1)))
+    for s in sorted(steps)[:-keep]:
+        shutil.rmtree(_step_dir(ckpt_dir, s), ignore_errors=True)

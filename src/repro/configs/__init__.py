@@ -1,0 +1,34 @@
+"""Architecture registry: get_config("<arch-id>"[, smoke=True])."""
+from importlib import import_module
+
+from .base import (  # noqa: F401
+    MULTI_POD,
+    SHAPES,
+    SINGLE_POD,
+    MeshConfig,
+    ModelConfig,
+    ShapeConfig,
+    shapes_for,
+)
+
+_MODULES = {
+    "smollm-360m": "smollm_360m",
+    "qwen3-4b": "qwen3_4b",
+    "stablelm-1.6b": "stablelm_1_6b",
+    "qwen2.5-14b": "qwen2_5_14b",
+    "musicgen-medium": "musicgen_medium",
+    "mixtral-8x7b": "mixtral_8x7b",
+    "llama4-scout-17b-a16e": "llama4_scout",
+    "rwkv6-1.6b": "rwkv6_1_6b",
+    "qwen2-vl-2b": "qwen2_vl_2b",
+    "zamba2-2.7b": "zamba2_2_7b",
+}
+
+ARCHS = tuple(_MODULES)
+
+
+def get_config(name: str, smoke: bool = False) -> ModelConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {list(_MODULES)}")
+    mod = import_module(f"repro.configs.{_MODULES[name]}")
+    return mod.SMOKE if smoke else mod.FULL

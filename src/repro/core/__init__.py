@@ -1,0 +1,59 @@
+"""repro.core — SIMDive: approximate log-domain mul/div with tunable accuracy.
+
+Public surface:
+  mitchell_mul / mitchell_div        bit-exact plain Mitchell (paper baseline)
+  SimdiveSpec, simdive_mul/div/sqrt  corrected ops (the paper's contribution)
+  build_table / table_for            64-region error-reduction tables (§3.3)
+  pack / unpack / packed_*           sub-word SIMD lanes (§3.2)
+  segmented_leading_one              the 4-bit segmented LOD (§3.2)
+  ApproxConfig, approx_matmul,       model integration (quantized linear,
+  approx_softmax, approx_rmsnorm     divider-softmax, log-domain rsqrt)
+"""
+import jax as _jax
+
+
+def enable_x64() -> None:
+    """Enable uint64 lanes (needed for the 32-bit datapath on CPU)."""
+    _jax.config.update("jax_enable_x64", True)
+
+
+from .mitchell import (  # noqa: E402
+    SUPPORTED_WIDTHS,
+    frac_bits,
+    leading_one,
+    mitchell_div,
+    mitchell_log,
+    mitchell_mul,
+    work_dtype,
+)
+from .error_lut import build_table, region_index, table_for  # noqa: E402
+from .lod import nibble_lod, segmented_leading_one  # noqa: E402
+from .simdive import SimdiveSpec, simdive_div, simdive_mul, simdive_sqrt  # noqa: E402
+from .simd_pack import (  # noqa: E402
+    lanes_per_word,
+    pack,
+    packed_div,
+    packed_mixed,
+    packed_mul,
+    unpack,
+)
+from .approx import (  # noqa: E402
+    ApproxConfig,
+    approx_matmul,
+    approx_rmsnorm,
+    approx_softmax,
+    quantize_sign_magnitude,
+)
+
+__all__ = [
+    "enable_x64",
+    "SUPPORTED_WIDTHS", "frac_bits", "leading_one", "mitchell_div",
+    "mitchell_log", "mitchell_mul", "work_dtype",
+    "build_table", "region_index", "table_for",
+    "nibble_lod", "segmented_leading_one",
+    "SimdiveSpec", "simdive_div", "simdive_mul", "simdive_sqrt",
+    "lanes_per_word", "pack", "packed_div", "packed_mixed", "packed_mul",
+    "unpack",
+    "ApproxConfig", "approx_matmul", "approx_rmsnorm", "approx_softmax",
+    "quantize_sign_magnitude",
+]

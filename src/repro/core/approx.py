@@ -1,0 +1,248 @@
+"""Model-facing approximate math: SIMDive inside linear / softmax / norm.
+
+This is the layer that carries the paper's arithmetic into real networks:
+
+* ``quantize_sign_magnitude`` — the 8-bit fixed-point quantization of the
+  paper's ANN experiment (§4.3), sign-magnitude because the log datapath is
+  unsigned (signs are XORed outside, as in every log-domain multiplier).
+* ``approx_matmul`` — matmul whose scalar products are SIMDive products,
+  K-chunked so the (M, Kc, N) product tensor stays small; exact-float
+  gradients via ``custom_vjp`` (straight-through), so QAT and the paper's
+  "train float / infer approx" flow both work.
+* ``approx_softmax`` — softmax whose normalization uses the SIMDive
+  *divider* (the paper's division use-case: TPUs have no fast divide).
+* ``approx_rmsnorm`` — beyond-paper: log-domain rsqrt (L >> 1) feeding the
+  divider for the RMSNorm denominator.
+
+``ApproxConfig.mode``:
+  'exact'    — plain float ops (baseline),
+  'mitchell' — uncorrected log arithmetic (paper's Mitchell baseline),
+  'simdive'  — corrected + rounded (the paper's contribution).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .simdive import SimdiveSpec, simdive_div, simdive_mul
+
+__all__ = [
+    "ApproxConfig",
+    "quantize_sign_magnitude",
+    "approx_matmul",
+    "approx_softmax",
+    "approx_rmsnorm",
+]
+
+
+@dataclass(frozen=True)
+class ApproxConfig:
+    mode: str = "exact"            # exact | mitchell | simdive
+    width: int = 8                 # multiplier lane width
+    div_width: int = 16            # divider lane width (32 needs jax x64)
+    coeff_bits: int = 6
+    index_bits: int = 3
+    frac_out: int = 15             # divider fixed-point output bits
+    k_chunk: int = 128             # matmul K-chunk (bounds the 3D product)
+    emulate: bool = True           # bit-exact SIMDive emulation in linears
+    use_in_linear: bool = True
+    use_in_softmax: bool = True
+    use_in_norm: bool = False
+
+    @property
+    def enabled(self) -> bool:
+        return self.mode != "exact"
+
+    def spec(self, width: int | None = None) -> SimdiveSpec:
+        w = self.width if width is None else width
+        if self.mode == "mitchell":
+            return SimdiveSpec(width=w, coeff_bits=0, index_bits=self.index_bits,
+                               round_output=False)
+        return SimdiveSpec(width=w, coeff_bits=self.coeff_bits,
+                           index_bits=self.index_bits, round_output=True)
+
+
+EXACT = ApproxConfig()
+
+
+def quantize_sign_magnitude(x: jax.Array, width: int, axis=None):
+    """Symmetric sign-magnitude quantization to ``width``-bit magnitudes.
+
+    Returns (mag uint32 in [0, 2^width-1], sign int32 in {-1,+1}, scale).
+    ``axis`` selects per-axis (e.g. per-output-channel) scales; None = global.
+    """
+    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=axis is not None)
+    qmax = float(2 ** width - 1)
+    scale = jnp.maximum(amax, 1e-30) / qmax
+    mag = jnp.clip(jnp.round(jnp.abs(x) / scale), 0, qmax).astype(jnp.uint32)
+    sign = jnp.where(x < 0, -1, 1).astype(jnp.int32)
+    return mag, sign, scale
+
+
+def _approx_matmul_int(qx, sx, qw, sw, spec: SimdiveSpec, k_chunk: int):
+    """Integer core: (M,K)x(K,N) with SIMDive scalar products, K-chunked."""
+    M, K = qx.shape
+    N = qw.shape[1]
+    pad = (-K) % k_chunk
+    if pad:
+        qx = jnp.pad(qx, ((0, 0), (0, pad)))
+        sx = jnp.pad(sx, ((0, 0), (0, pad)), constant_values=1)
+        qw = jnp.pad(qw, ((0, pad), (0, 0)))
+        sw = jnp.pad(sw, ((0, pad), (0, 0)), constant_values=1)
+    nc = (K + pad) // k_chunk
+    qxc = qx.reshape(M, nc, k_chunk).transpose(1, 0, 2)
+    sxc = sx.reshape(M, nc, k_chunk).transpose(1, 0, 2)
+    qwc = qw.reshape(nc, k_chunk, N)
+    swc = sw.reshape(nc, k_chunk, N)
+
+    def body(acc, inp):
+        qxk, sxk, qwk, swk = inp
+        p = simdive_mul(qxk[:, :, None], qwk[None, :, :], spec)  # (M,Kc,N)
+        s = sxk[:, :, None] * swk[None, :, :]
+        acc = acc + jnp.sum(p.astype(jnp.int64) * s.astype(jnp.int64), axis=1)
+        return acc, None
+
+    acc0 = jnp.zeros((M, N), jnp.int64)
+    acc, _ = jax.lax.scan(body, acc0, (qxc, sxc, qwc, swc))
+    return acc
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2,))
+def approx_matmul(x: jax.Array, w: jax.Array, cfg: ApproxConfig) -> jax.Array:
+    """Float-in/out matmul with SIMDive products; exact grads (STE)."""
+    return _approx_matmul_fwd_impl(x, w, cfg)
+
+
+def _approx_matmul_fwd_impl(x, w, cfg):
+    if not cfg.enabled or not cfg.use_in_linear:
+        return x @ w
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    qx, sx, scx = quantize_sign_magnitude(x2, cfg.width)
+    qw, sw, scw = quantize_sign_magnitude(w, cfg.width, axis=0)
+    acc = _approx_matmul_int(qx, sx, qw, sw, cfg.spec(), cfg.k_chunk)
+    out = acc.astype(jnp.float32) * (scx * scw)
+    return out.reshape(*lead, w.shape[1]).astype(x.dtype)
+
+
+def _approx_matmul_fwd(x, w, cfg):
+    return _approx_matmul_fwd_impl(x, w, cfg), (x, w)
+
+
+def _approx_matmul_bwd(cfg, res, g):
+    x, w = res
+    gx = jnp.einsum("...n,kn->...k", g, w).astype(x.dtype)
+    gw = jnp.einsum("...k,...n->kn", x, g).astype(w.dtype)
+    return gx, gw
+
+
+approx_matmul.defvjp(_approx_matmul_fwd, _approx_matmul_bwd)
+
+
+def _fixed_point_div(num: jax.Array, den: jax.Array, cfg: ApproxConfig):
+    """Approximate num/den (both float >= 0, den > 0) via the SIMDive divider.
+
+    Operands are block-scaled into the ``div_width``-bit lane (a shared
+    power-of-two exponent, like the FPGA datapath's fixed-point input
+    format); the scale cancels in the quotient. The default 16-bit lane
+    runs in uint32 everywhere; a 32-bit lane needs jax x64 mode.
+    """
+    spec = cfg.spec(cfg.div_width)
+    w = cfg.div_width
+    if w > 16:
+        SC = jnp.float32(2 ** 16)
+        qn = jnp.clip(jnp.round(num * SC), 0, 2.0 ** 63).astype(jnp.uint64)
+        qd = jnp.maximum(jnp.round(den * SC), 1).astype(jnp.uint64)
+    else:
+        # shared per-call exponent so the larger side fills the lane
+        top = jnp.maximum(jnp.max(num), jnp.max(den))
+        ex = jnp.floor(jnp.log2(jnp.maximum(top, 1e-30)))
+        SC = jnp.exp2(jnp.float32(w - 1) - ex - 1)
+        lim = jnp.float32(2 ** w - 1)
+        qn = jnp.clip(jnp.round(num * SC), 0, lim).astype(jnp.uint32)
+        qd = jnp.clip(jnp.round(den * SC), 1, lim).astype(jnp.uint32)
+    q = simdive_div(qn, qd, spec, frac_out=cfg.frac_out)
+    return q.astype(jnp.float32) / jnp.float32(2 ** cfg.frac_out)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def approx_softmax(x: jax.Array, axis: int, cfg: ApproxConfig) -> jax.Array:
+    """Softmax whose normalization division is a SIMDive divider."""
+    return _approx_softmax_impl(x, axis, cfg)
+
+
+def _approx_softmax_impl(x, axis, cfg):
+    if not cfg.enabled or not cfg.use_in_softmax:
+        return jax.nn.softmax(x, axis=axis)
+    m = jax.lax.stop_gradient(jnp.max(x, axis=axis, keepdims=True))
+    e = jnp.exp((x - m).astype(jnp.float32))
+    s = jnp.sum(e, axis=axis, keepdims=True)
+    p = _fixed_point_div(e, jnp.broadcast_to(s, e.shape), cfg)
+    return p.astype(x.dtype)
+
+
+def _approx_softmax_fwd(x, axis, cfg):
+    p = _approx_softmax_impl(x, axis, cfg)
+    return p, p
+
+
+def _approx_softmax_bwd(axis, cfg, p, g):
+    # exact softmax jacobian at the approximate output (STE)
+    pg = p.astype(jnp.float32) * g.astype(jnp.float32)
+    gx = pg - p * jnp.sum(pg, axis=axis, keepdims=True)
+    return (gx.astype(g.dtype),)
+
+
+approx_softmax.defvjp(_approx_softmax_fwd, _approx_softmax_bwd)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def approx_rmsnorm(x: jax.Array, gamma: jax.Array, eps: float,
+                   cfg: ApproxConfig) -> jax.Array:
+    """RMSNorm with a log-domain rsqrt+divide denominator (beyond-paper)."""
+    return _approx_rmsnorm_impl(x, gamma, eps, cfg)
+
+
+def _approx_rmsnorm_impl(x, gamma, eps, cfg):
+    ms = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    if not cfg.enabled or not cfg.use_in_norm:
+        inv = jax.lax.rsqrt(ms + eps)
+    else:
+        # rsqrt in the log domain: sqrt is L >> 1, then one SIMDive divide.
+        #   qm = m * 2^32           (uint64 lane)
+        #   r  = sqrt(qm)           = sqrt(m) * 2^16
+        #   q  = (2^31 / r) * 2^16  = rsqrt(m) * 2^31
+        spec = cfg.spec(cfg.div_width)
+        from .simdive import simdive_sqrt
+        qm = jnp.maximum(jnp.round((ms + eps) * jnp.float32(2.0 ** 32)), 1.0)
+        qm = qm.astype(jnp.uint64)
+        r = jnp.maximum(simdive_sqrt(qm, cfg.div_width), 1)
+        one = jnp.full_like(r, jnp.uint64(1) << jnp.uint64(31))
+        q = simdive_div(one, r, spec, frac_out=16)
+        inv = q.astype(jnp.float32) * jnp.float32(2.0 ** -31)
+    return (x.astype(jnp.float32) * inv * gamma.astype(jnp.float32)).astype(x.dtype)
+
+
+def _approx_rmsnorm_fwd(x, gamma, eps, cfg):
+    return _approx_rmsnorm_impl(x, gamma, eps, cfg), (x, gamma)
+
+
+def _approx_rmsnorm_bwd(eps, cfg, res, g):
+    x, gamma = res
+    # exact RMSNorm gradient (STE through the approximate denominator)
+    f32 = jnp.float32
+    xf, gf, gg = x.astype(f32), g.astype(f32), gamma.astype(f32)
+    d = x.shape[-1]
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(ms + eps)
+    xn = xf * inv
+    gxn = gf * gg
+    gx = inv * (gxn - xn * jnp.mean(gxn * xn, axis=-1, keepdims=True))
+    ggamma = jnp.sum((gf * xn).reshape(-1, d), axis=0)
+    return gx.astype(x.dtype), ggamma.astype(gamma.dtype)
+
+
+approx_rmsnorm.defvjp(_approx_rmsnorm_fwd, _approx_rmsnorm_bwd)

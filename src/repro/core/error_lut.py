@@ -1,0 +1,117 @@
+"""SIMDive's light-weight error-reduction tables (paper §3.3), tunable.
+
+The paper splits the (x1, x2) fractional unit square into 8x8 = 64 regions
+using the 3 MSBs of each operand's fraction, and stores one average-error
+coefficient per region; each FPGA 6-LUT contributes one *bit* of all 64
+coefficients. On TPU the table is a 64-entry int32 vector living in
+VMEM/SMEM, gathered by the same 6-bit index; ``coeff_bits`` quantizes the
+entries — the accuracy knob ("one more LUT = one more bit").
+
+Derivation (closed form, no fitting): with d = the correction added to the
+*log-domain* fraction sum before the piecewise-linear anti-log g(u) =
+2^floor(u) (1 + frac(u)), the bit-exact ideal is
+
+    c*(x1, x2) = g^{-1}(true) - (L1 +/- L2)
+
+and because both the Mitchell log error and the anti-log interpolation error
+are scale-free, c* depends ONLY on the fractions:
+
+    mul:  s = (1+x1)(1+x2)        c* = s - 1 - (x1+x2)          if s <  2
+                                  c* = s/2  - (x1+x2)           if s >= 2
+    div:  r = (1+x1)/(1+x2)       c* = r - 1 - (x1-x2)          if r >= 1
+                                  c* = 2r - 2 - (x1-x2)         if r <  1
+
+(the s>=2 / r<1 branches are the carry/borrow cases of Eq. 5/6; both match
+Eq. 7/8's error expressions). Each table entry is the region-mean of c*,
+expressed in integer units of 2^-F, then quantized to ``coeff_bits``.
+"""
+from __future__ import annotations
+
+from functools import lru_cache
+
+import numpy as np
+import jax.numpy as jnp
+
+from .mitchell import frac_bits
+
+__all__ = [
+    "ideal_correction_mul",
+    "ideal_correction_div",
+    "build_table",
+    "table_for",
+    "region_index",
+]
+
+_GRID = 256  # frac-grid resolution per axis used for region averaging
+
+
+def ideal_correction_mul(x1: np.ndarray, x2: np.ndarray) -> np.ndarray:
+    """Ideal log-domain correction for the multiplier (scale-free)."""
+    s = (1.0 + x1) * (1.0 + x2)
+    return np.where(s < 2.0, s - 1.0, 0.5 * s) - (x1 + x2)
+
+
+def ideal_correction_div(x1: np.ndarray, x2: np.ndarray) -> np.ndarray:
+    """Ideal log-domain correction for the divider (scale-free, signed)."""
+    r = (1.0 + x1) / (1.0 + x2)
+    return np.where(r >= 1.0, r - 1.0, 2.0 * r - 2.0) - (x1 - x2)
+
+
+@lru_cache(maxsize=None)
+def build_table(op: str, width: int, coeff_bits: int,
+                index_bits: int = 3) -> np.ndarray:
+    """Region-mean correction table as int32 in units of 2^-F.
+
+    op          : 'mul' or 'div'
+    width       : lane width (8/16/32) -- sets F = width-1
+    coeff_bits  : number of coefficient bits kept (0 => all-zero table, i.e.
+                  plain Mitchell). Quantization step = 2^(F-2-coeff_bits),
+                  floored at 1 integer unit: the paper's "one more LUT adds
+                  one bit of coefficient precision".
+    index_bits  : MSBs of each fraction used for the region index. 3 is the
+                  paper's 6-LUT scheme (64 regions); 4 models the 8-input
+                  ALM variant of §3.4 (256 regions).
+    """
+    if op not in ("mul", "div"):
+        raise ValueError(op)
+    F = frac_bits(width)
+    n = 1 << index_bits
+    # midpoint-integrate c* over each region on a fine frac grid
+    g = (np.arange(_GRID, dtype=np.float64) + 0.5) / _GRID
+    X1, X2 = np.meshgrid(g, g, indexing="ij")
+    C = ideal_correction_mul(X1, X2) if op == "mul" else ideal_correction_div(X1, X2)
+    r1 = np.minimum((X1 * n).astype(np.int64), n - 1)
+    r2 = np.minimum((X2 * n).astype(np.int64), n - 1)
+    idx = r1 * n + r2
+    sums = np.bincount(idx.ravel(), weights=C.ravel(), minlength=n * n)
+    cnts = np.bincount(idx.ravel(), minlength=n * n)
+    mean_c = sums / cnts                      # region-mean ideal correction
+    ints = np.rint(mean_c * (1 << F))         # -> units of 2^-F
+    if coeff_bits <= 0:
+        return np.zeros(n * n, dtype=np.int32)
+    step = max(1, 1 << max(0, F - 2 - coeff_bits))
+    q = np.rint(ints / step) * step
+    # keep the corrected mantissa inside its field: |c| < 2^(F-1)
+    lim = (1 << (F - 1)) - 1
+    return np.clip(q, -lim, lim).astype(np.int32)
+
+
+def table_for(op: str, width: int, coeff_bits: int,
+              index_bits: int = 3) -> jnp.ndarray:
+    """JAX-resident copy of :func:`build_table` (host-cached)."""
+    return jnp.asarray(build_table(op, width, coeff_bits, index_bits))
+
+
+def region_index(x1_fp: jnp.ndarray, x2_fp: jnp.ndarray, width: int,
+                 index_bits: int = 3) -> jnp.ndarray:
+    """6-bit (2*index_bits) region index from the two aligned fractions.
+
+    ``x*_fp`` are the F-bit fraction fields (the low F bits of the Mitchell
+    log values); the index concatenates their ``index_bits`` MSBs, exactly
+    the wiring of the paper's coefficient LUTs.
+    """
+    F = frac_bits(width)
+    sh = jnp.asarray(F - index_bits, x1_fp.dtype)
+    hi1 = (x1_fp >> sh).astype(jnp.int32)
+    hi2 = (x2_fp >> sh).astype(jnp.int32)
+    return (hi1 << index_bits) | hi2

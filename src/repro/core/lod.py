@@ -1,0 +1,55 @@
+"""Segmented 4-bit leading-one detector (paper §3.2).
+
+The FPGA design detects the leading one *per 4-bit nibble in parallel*
+(one 6-LUT zero-flag + one dual-5-LUT local position per nibble), then picks
+the most significant non-zero nibble according to the configured sub-word
+width. That segmentation is exactly what makes the SIMD decomposition cheap:
+an N-bit LOD is the nibble array plus a narrow select tree, and the same
+nibbles serve 8/16/32-bit lanes.
+
+Here the nibble stage is branch-free vector arithmetic (the 16-entry "LUT"
+is three comparisons), and the select tree is a mask/where ladder — the same
+structure, VPU-shaped. Equivalence with the shift-based reference
+(:func:`repro.core.mitchell.leading_one`) is property-tested.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["nibble_lod", "segmented_leading_one"]
+
+
+def nibble_lod(nib: jnp.ndarray):
+    """Per-nibble (4-bit value) zero flag and local leading-one position.
+
+    Mirrors the two 6-LUTs of the paper: ``zero`` is the zero-detection
+    flag; ``pos`` (0..3) is the local position (valid only when not zero).
+    """
+    zero = nib == 0
+    pos = (
+        (nib >= 2).astype(nib.dtype)
+        + (nib >= 4).astype(nib.dtype)
+        + (nib >= 8).astype(nib.dtype)
+    )
+    return zero, pos
+
+
+def segmented_leading_one(a: jnp.ndarray, width: int) -> jnp.ndarray:
+    """floor(log2(a)) for a > 0 via the segmented 4-bit LOD; 0 for a == 0.
+
+    ``width`` is the lane width in bits (8/16/32); ``a`` must hold values
+    < 2^width in an unsigned integer dtype at least that wide.
+    """
+    if width % 4 != 0:
+        raise ValueError("segmented LOD works on 4-bit segments")
+    nseg = width // 4
+    dt = a.dtype
+    k = jnp.zeros_like(a)
+    found = jnp.zeros(a.shape, bool)
+    for j in range(nseg - 1, -1, -1):          # MSB nibble first
+        nib = (a >> jnp.asarray(4 * j, dt)) & jnp.asarray(0xF, dt)
+        zero, pos = nibble_lod(nib)
+        here = (~found) & (~zero)
+        k = jnp.where(here, jnp.asarray(4 * j, dt) + pos, k)
+        found = found | here
+    return k

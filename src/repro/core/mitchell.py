@@ -1,0 +1,216 @@
+"""Bit-exact fixed-point Mitchell logarithmic multiplier / divider.
+
+This is the arithmetic contract of the SIMDive datapath (paper §3.1/§3.2),
+reproduced exactly in vectorized integer JAX so that every error statistic in
+the paper (Table 2 ARE/PRE, Fig. 1 heat maps) can be recomputed bit-for-bit.
+
+Format, for lane width ``N`` (8 / 16 / 32):
+  * operands are unsigned integers in [1, 2^N - 1]; zero is bypassed by a
+    zero flag exactly like the FPGA zero-detection LUT,
+  * ``k = floor(log2 A)`` (leading-one position), fraction ``x = A - 2^k``
+    left-aligned into ``F = N - 1`` fractional bits,
+  * log value ``L = (k << F) | x_fp``  (Q(.F) fixed point),
+  * multiply: ``Ls = L1 + L2`` — the binary carry out of the fraction field
+    realizes both cases of Eq. (5) automatically,
+  * divide:  ``Ls = L1 - L2`` (signed) — the borrow realizes Eq. (6),
+  * anti-log with hardware floor semantics:
+    ``I = Ls >> F``, ``Xs = Ls & (2^F-1)``, ``result = (2^F + Xs) << I >> F``.
+
+All intermediates fit uint32 for N <= 16 and uint64 for N = 32 (the 32-bit
+datapath genuinely needs a 64-bit product, same as the FPGA's output bus).
+uint64 paths require ``jax.config.update('jax_enable_x64', True)`` — call
+:func:`repro.core.enable_x64` before using width-32 ops on CPU.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "SUPPORTED_WIDTHS",
+    "frac_bits",
+    "work_dtype",
+    "leading_one",
+    "mitchell_log",
+    "mitchell_antilog_mul",
+    "mitchell_antilog_div",
+    "mitchell_mul",
+    "mitchell_div",
+]
+
+SUPPORTED_WIDTHS = (8, 16, 32)
+
+
+def frac_bits(width: int) -> int:
+    """Fraction field width F of the log representation (= N - 1)."""
+    if width not in SUPPORTED_WIDTHS:
+        raise ValueError(f"width must be one of {SUPPORTED_WIDTHS}, got {width}")
+    return width - 1
+
+
+def work_dtype(width: int):
+    """Unsigned working dtype wide enough for the full product."""
+    if width <= 16:
+        return jnp.uint32
+    if not jax.config.read("jax_enable_x64"):
+        raise RuntimeError(
+            "width-32 Mitchell ops need uint64; call repro.core.enable_x64() first"
+        )
+    return jnp.uint64
+
+
+def _signed(dtype):
+    return jnp.int32 if dtype == jnp.uint32 else jnp.int64
+
+
+def leading_one(a: jax.Array, width: int) -> jax.Array:
+    """Position of the leading one bit of ``a`` (floor(log2 a)); 0 for a == 0.
+
+    Branch-free shift-accumulate — this is the *reference* LOD; the segmented
+    4-bit LOD of the paper lives in :mod:`repro.core.lod` and is tested to be
+    equivalent to this.
+    """
+    dt = a.dtype
+    a = a.astype(jnp.uint32) if width <= 16 else a
+    k = jnp.zeros(a.shape, jnp.uint32 if width <= 16 else a.dtype)
+    v = a
+    step = 16
+    while step >= 1:
+        if step < width:  # skip steps that cannot occur for this width
+            mask = v >= jnp.asarray(1, v.dtype) << jnp.asarray(step, v.dtype)
+            k = jnp.where(mask, k + jnp.asarray(step, k.dtype), k)
+            v = jnp.where(mask, v >> jnp.asarray(step, v.dtype), v)
+        step //= 2
+    return k.astype(dt)
+
+
+def mitchell_log(a: jax.Array, width: int) -> jax.Array:
+    """Fixed-point approximate log2: ``L = (k << F) | ((a ^ 2^k) << (F - k))``.
+
+    Input must already be cast to :func:`work_dtype`(width).
+    """
+    F = frac_bits(width)
+    dt = a.dtype
+    k = leading_one(a, width)
+    one = jnp.asarray(1, dt)
+    frac = a ^ (one << k)                      # strip the leading one
+    x_fp = frac << (jnp.asarray(F, dt) - k)    # left-align into F bits
+    return (k << jnp.asarray(F, dt)) | x_fp
+
+
+def _antilog_floor(ls: jax.Array, width: int, round_out: bool = False) -> jax.Array:
+    """Anti-log: ``(2^F + Xs) << I >> F`` without overflow.
+
+    ``ls`` is the (unsigned) summed log value. Handles I >= F by shifting the
+    mantissa left by (I - F); I < F by shifting right, exactly the
+    barrel-shifter behaviour of the datapath. ``round_out`` adds the half-LSB
+    rounding bit at the truncated position (one extra carry-in in hardware);
+    plain Mitchell keeps floor semantics.
+    """
+    F = frac_bits(width)
+    dt = ls.dtype
+    fF = jnp.asarray(F, dt)
+    I = ls >> fF
+    Xs = ls & ((jnp.asarray(1, dt) << fF) - jnp.asarray(1, dt))
+    mant = (jnp.asarray(1, dt) << fF) + Xs     # 1.Xs, F+1 bits
+    big = I >= fF
+    shl = jnp.where(big, I - fF, jnp.asarray(0, dt))
+    shr = jnp.where(big, jnp.asarray(0, dt), fF - I)
+    if round_out:
+        one = jnp.asarray(1, dt)
+        half = one << (jnp.maximum(shr, one) - one)      # 1 << (shr-1)
+        mant = mant + jnp.where(shr > jnp.asarray(0, dt), half, jnp.asarray(0, dt))
+    out = (mant << shl) >> shr
+    # output-bus saturation: a corrected estimate can overshoot 2^(2*width)
+    # even when the true product fits — the paper's §2 "overflow cases" in
+    # constant-corrected designs. The hardware bus saturates, never wraps.
+    over = I >= jnp.asarray(2 * width, dt)
+    if 2 * width == 8 * jnp.dtype(dt).itemsize:
+        max_out = ~jnp.asarray(0, dt)
+    else:
+        max_out = (jnp.asarray(1, dt) << jnp.asarray(2 * width, dt)) \
+            - jnp.asarray(1, dt)
+    return jnp.where(over, max_out, out)
+
+
+def mitchell_antilog_mul(l1: jax.Array, l2: jax.Array, width: int,
+                         corr: jax.Array | None = None,
+                         round_out: bool = False) -> jax.Array:
+    """Product anti-log of two log values (+ optional signed correction)."""
+    dt = l1.dtype
+    ls = l1 + l2
+    if corr is not None:
+        # correction is a signed fixed-point value at F-bit resolution,
+        # added in the same "ternary add" as the fraction sum (paper §3.3).
+        ls = jnp.clip(
+            ls.astype(_signed(dt)) + corr.astype(_signed(dt)),
+            0, None,
+        ).astype(dt)
+    return _antilog_floor(ls, width, round_out=round_out)
+
+
+def mitchell_antilog_div(l1: jax.Array, l2: jax.Array, width: int,
+                         corr: jax.Array | None = None,
+                         frac_out: int = 0,
+                         round_out: bool = False) -> jax.Array:
+    """Quotient anti-log. Signed subtraction realizes Eq. (6)'s borrow case.
+
+    The hardware quotient bus keeps fractional bits (the paper evaluates the
+    16/8 divider against the *real-valued* quotient): the returned integer is
+    ``round_down(Q * 2^frac_out)``. ``frac_out = 0`` gives integer floor
+    division. Two's-complement arithmetic gives the positive remainder /
+    floored integer part for free, which is exactly Eq. (6)'s borrow case
+    (x1 - x2 < 0 with the exponent decremented).
+    """
+    F = frac_bits(width)
+    dt = l1.dtype
+    sdt = _signed(dt)
+    ls = l1.astype(sdt) - l2.astype(sdt)
+    if corr is not None:
+        ls = ls + corr.astype(sdt)
+    # signed floor / positive remainder: I = ls >> F (arithmetic), Xs >= 0
+    I = ls >> F
+    Xs = ls & ((1 << F) - 1)
+    mant = (Xs + (1 << F)).astype(dt)          # 1.Xs, always positive
+    sh = I + jnp.asarray(frac_out - F, sdt)    # total shift of the mantissa
+    nbits = jnp.asarray(63 if dt == jnp.uint64 else 31, sdt)
+    pos = jnp.clip(sh, 0, nbits).astype(dt)
+    negsh = jnp.clip(-sh, 0, nbits).astype(dt)
+    if round_out:
+        one = jnp.asarray(1, dt)
+        half = one << (jnp.maximum(negsh, one) - one)    # 1 << (negsh-1)
+        mant = mant + jnp.where(sh < 0, half, jnp.asarray(0, dt))
+    return jnp.where(sh >= 0, mant << pos, mant >> negsh)
+
+
+def _prep(a, b, width):
+    dt = work_dtype(width)
+    return a.astype(dt), b.astype(dt)
+
+
+@partial(jax.jit, static_argnames=("width",))
+def mitchell_mul(a: jax.Array, b: jax.Array, width: int) -> jax.Array:
+    """Plain Mitchell product (no correction). Zero operands give zero."""
+    au, bu = _prep(a, b, width)
+    la, lb = mitchell_log(au, width), mitchell_log(bu, width)
+    p = mitchell_antilog_mul(la, lb, width)
+    return jnp.where((au == 0) | (bu == 0), jnp.zeros_like(p), p)
+
+
+@partial(jax.jit, static_argnames=("width", "frac_out"))
+def mitchell_div(a: jax.Array, b: jax.Array, width: int,
+                 frac_out: int = 0) -> jax.Array:
+    """Plain Mitchell quotient ``round_down(a/b * 2^frac_out)``.
+
+    ``frac_out=0`` is integer floor division; b == 0 returns the max value
+    (divider IP overflow-flag convention).
+    """
+    au, bu = _prep(a, b, width)
+    la, lb = mitchell_log(au, width), mitchell_log(bu, width)
+    q = mitchell_antilog_div(la, lb, width, frac_out=frac_out)
+    dt = q.dtype
+    maxv = ~jnp.asarray(0, dt)
+    q = jnp.where(bu == 0, maxv, q)
+    return jnp.where(au == 0, jnp.zeros_like(q), q)

@@ -1,0 +1,97 @@
+"""Sub-word SIMD packing: 4x8-bit / 2x16-bit lanes in one uint32 word.
+
+The FPGA datapath shares one 32-bit adder + carry chain across lanes; the
+TPU-native win of the same packing is **HBM bandwidth**: quantized tensors
+travel packed (4 values per 32-bit word) and are expanded only inside
+VMEM/VREGs. This module is the reference (pure-jnp) lane semantics used by
+the ``packed_simd`` Pallas kernel and by the packed-weight serving path.
+
+Mixed functionality (paper §3.2): ``packed_mixed`` takes a per-lane mode
+mask so each lane independently multiplies or divides — the one-hot
+``Mul/Div mode`` signal of Fig. 2(a).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .simdive import SimdiveSpec, simdive_div, simdive_mul
+
+__all__ = [
+    "pack", "unpack", "packed_mul", "packed_div", "packed_mixed",
+    "lanes_per_word",
+]
+
+
+def lanes_per_word(width: int) -> int:
+    if width not in (8, 16):
+        raise ValueError("packing supports 8- or 16-bit lanes in 32-bit words")
+    return 32 // width
+
+
+def pack(lanes: jax.Array, width: int) -> jax.Array:
+    """Pack ``(..., L)`` unsigned lane values into ``(..., L/lpw)`` uint32.
+
+    Lane 0 occupies the least-significant bits (little-endian lanes, like
+    the FPGA's sub-word wiring).
+    """
+    lpw = lanes_per_word(width)
+    if lanes.shape[-1] % lpw:
+        raise ValueError(f"last dim must be a multiple of {lpw}")
+    x = lanes.astype(jnp.uint32).reshape(*lanes.shape[:-1], -1, lpw)
+    out = jnp.zeros(x.shape[:-1], jnp.uint32)
+    for i in range(lpw):
+        out = out | (x[..., i] << jnp.uint32(width * i))
+    return out
+
+
+def unpack(words: jax.Array, width: int) -> jax.Array:
+    """Inverse of :func:`pack`: ``(..., W)`` uint32 -> ``(..., W*lpw)``."""
+    lpw = lanes_per_word(width)
+    mask = jnp.uint32((1 << width) - 1)
+    parts = [(words >> jnp.uint32(width * i)) & mask for i in range(lpw)]
+    return jnp.stack(parts, axis=-1).reshape(*words.shape[:-1], -1)
+
+
+@partial(jax.jit, static_argnames=("spec",))
+def packed_mul(aw: jax.Array, bw: jax.Array, spec: SimdiveSpec) -> jax.Array:
+    """Lane-parallel SIMDive product of packed words.
+
+    Products of w-bit lanes need 2w bits, so the output uses two words per
+    input word (matching the FPGA's doubled output bus): shape
+    ``(..., W) -> (..., 2W)`` packed at the same lane width... concretely the
+    2w-bit products are packed as ``lpw`` lanes of ``2*width`` bits across
+    two uint32 words.
+    """
+    a = unpack(aw, spec.width)
+    b = unpack(bw, spec.width)
+    p = simdive_mul(a, b, spec)                    # 2w-bit values
+    return pack(p, 2 * spec.width) if spec.width == 8 else p.astype(jnp.uint32)
+
+
+@partial(jax.jit, static_argnames=("spec", "frac_out"))
+def packed_div(aw: jax.Array, bw: jax.Array, spec: SimdiveSpec,
+               frac_out: int = 0) -> jax.Array:
+    """Lane-parallel SIMDive quotient of packed words (unpacked output)."""
+    a = unpack(aw, spec.width)
+    b = unpack(bw, spec.width)
+    return simdive_div(a, b, spec, frac_out=frac_out)
+
+
+@partial(jax.jit, static_argnames=("spec", "frac_out"))
+def packed_mixed(aw: jax.Array, bw: jax.Array, mode: jax.Array,
+                 spec: SimdiveSpec, frac_out: int = 0) -> jax.Array:
+    """Mixed functionality: per-lane mul (mode=1) or div (mode=0).
+
+    ``mode`` has the unpacked lane shape; this is the SIMD unit of Fig. 2(a)
+    where every sub-unit carries its own one-hot Mul/Div signal. Output is
+    unpacked uint32 lanes (products at integer scale, quotients at
+    ``2^frac_out`` scale) so both result kinds coexist.
+    """
+    a = unpack(aw, spec.width)
+    b = unpack(bw, spec.width)
+    p = simdive_mul(a, b, spec).astype(jnp.uint32)
+    q = simdive_div(a, b, spec, frac_out=frac_out).astype(jnp.uint32)
+    return jnp.where(mode.astype(bool), p, q)

@@ -1,0 +1,93 @@
+"""SIMDive approximate multiplier / divider with tunable accuracy.
+
+``simdive_mul`` / ``simdive_div`` = Mitchell's log-domain datapath
+(:mod:`repro.core.mitchell`) + the 64-region error-reduction coefficient
+added in the same add step (:mod:`repro.core.error_lut`). ``coeff_bits`` is
+the accuracy knob (0 = plain Mitchell); ``index_bits`` widens the table
+(3 = paper's 64 regions, 4 = the 256-region ALM variant of §3.4).
+
+These are the bit-exact *reference semantics*; the Pallas kernels in
+:mod:`repro.kernels` implement the same contract tile-by-tile and are tested
+to match these functions exactly.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .mitchell import (
+    frac_bits,
+    mitchell_antilog_div,
+    mitchell_antilog_mul,
+    mitchell_log,
+    work_dtype,
+)
+from .error_lut import region_index, table_for
+
+__all__ = ["SimdiveSpec", "simdive_mul", "simdive_div", "simdive_sqrt"]
+
+
+@dataclass(frozen=True)
+class SimdiveSpec:
+    """Static configuration of one SIMDive lane-op."""
+    width: int = 8          # lane width: 8 / 16 / 32
+    coeff_bits: int = 6     # accuracy knob; 0 => plain Mitchell
+    index_bits: int = 3     # 3 => 64 regions (paper), 4 => 256 (§3.4)
+    round_output: bool = True  # half-LSB rounding carry at the anti-log output
+
+    def tables(self):
+        return (
+            table_for("mul", self.width, self.coeff_bits, self.index_bits),
+            table_for("div", self.width, self.coeff_bits, self.index_bits),
+        )
+
+
+def _logs_and_corr(a, b, spec: SimdiveSpec, op: str):
+    dt = work_dtype(spec.width)
+    au, bu = a.astype(dt), b.astype(dt)
+    la, lb = mitchell_log(au, spec.width), mitchell_log(bu, spec.width)
+    F = frac_bits(spec.width)
+    mask = (jnp.asarray(1, dt) << jnp.asarray(F, dt)) - jnp.asarray(1, dt)
+    idx = region_index(la & mask, lb & mask, spec.width, spec.index_bits)
+    tab = table_for(op, spec.width, spec.coeff_bits, spec.index_bits)
+    return au, bu, la, lb, tab[idx]
+
+
+@partial(jax.jit, static_argnames=("spec",))
+def simdive_mul(a: jax.Array, b: jax.Array, spec: SimdiveSpec) -> jax.Array:
+    """Corrected approximate product of unsigned ints (< 2^width each)."""
+    au, bu, la, lb, corr = _logs_and_corr(a, b, spec, "mul")
+    p = mitchell_antilog_mul(la, lb, spec.width, corr=corr,
+                             round_out=spec.round_output)
+    return jnp.where((au == 0) | (bu == 0), jnp.zeros_like(p), p)
+
+
+@partial(jax.jit, static_argnames=("spec", "frac_out"))
+def simdive_div(a: jax.Array, b: jax.Array, spec: SimdiveSpec,
+                frac_out: int = 0) -> jax.Array:
+    """Corrected approximate quotient ``round_down(a/b * 2^frac_out)``."""
+    au, bu, la, lb, corr = _logs_and_corr(a, b, spec, "div")
+    q = mitchell_antilog_div(la, lb, spec.width, corr=corr,
+                             frac_out=frac_out, round_out=spec.round_output)
+    q = jnp.where(bu == 0, ~jnp.zeros_like(q), q)
+    return jnp.where(au == 0, jnp.zeros_like(q), q)
+
+
+@partial(jax.jit, static_argnames=("width", "frac_out"))
+def simdive_sqrt(a: jax.Array, width: int, frac_out: int = 0) -> jax.Array:
+    """Beyond-paper: log-domain square root — halve the Mitchell log.
+
+    The paper's future-work section points at FP mantissa ops; on TPU the
+    same datapath gives sqrt for free (``L >> 1``), which we use for
+    approximate RMSNorm denominators. Returns round_down(sqrt(a)*2^frac_out).
+    """
+    dt = work_dtype(width)
+    au = a.astype(dt)
+    la = mitchell_log(au, width)
+    half = la >> jnp.asarray(1, dt)
+    out = mitchell_antilog_div(half, jnp.zeros_like(half), width,
+                               frac_out=frac_out)
+    return jnp.where(au == 0, jnp.zeros_like(out), out)

@@ -1,0 +1,3 @@
+from .pipeline import SyntheticLM, MemmapCorpus, Prefetcher, make_source
+
+__all__ = ["SyntheticLM", "MemmapCorpus", "Prefetcher", "make_source"]

@@ -1,0 +1,11 @@
+"""repro.kernels — Pallas TPU kernels for the SIMDive hot spots.
+
+Three kernels, each with a bit-exact pure-jnp oracle in ref.py:
+  elemwise.py     fused LOD->log->correct->antilog elementwise mul/div/mixed
+  packed_simd.py  sub-word packed lanes (4x8b / 2x16b per uint32 word)
+  logmatmul.py    tiled log-domain approximate matmul (K-innermost grid)
+Public entry points live in ops.py (padding + pallas/ref backend switch).
+"""
+from .ops import simdive_elemwise, simdive_matmul_int, simdive_packed
+
+__all__ = ["simdive_elemwise", "simdive_matmul_int", "simdive_packed"]

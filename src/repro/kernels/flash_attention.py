@@ -1,0 +1,181 @@
+"""Flash attention Pallas kernel with SIMDive divider normalization.
+
+This is the perf-critical kernel the roofline analysis demands: the pure-XLA
+online-softmax attention in models/layers.py materializes (qc, kc) score
+tiles in HBM (1 GiB f32 tiles at train_4k scale — the dominant memory term,
+see EXPERIMENTS.md §Perf iteration 1). This kernel keeps the score tile in
+VMEM across the whole kv sweep: HBM traffic collapses to q/k/v reads + o
+writes.
+
+Grid: (batch*kv_heads, nq, nk), k innermost ("arbitrary"), with the online
+softmax running max/denominator and the output accumulator living in VMEM
+scratch across the nk steps.
+
+SIMDive tie-in (paper §3.2 divider): the final ``acc / l`` normalization
+optionally runs through a log-domain divider *inside the kernel* — a
+width-32 Mitchell datapath with F=24 fraction bits and the 64-region
+correction table, all in uint32 (the quotient here is <= 1, so no 64-bit
+product bus is needed). One subtraction + table add + shift replaces the
+float divide, exactly the paper's division-bearing-inner-loop story.
+
+VMEM budget (defaults qc=kc=512, dh<=128): q/k/v tiles 3*512*128*2B
++ scores 512*512*4B + acc 512*128*4B ~= 1.6 MiB — comfortably resident.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.error_lut import build_table
+
+__all__ = ["flash_attention_pallas", "kernel_div_u32"]
+
+F_DIV = 24  # fraction bits of the in-kernel divider (k<=31 needs 5+24<32)
+
+
+def _log2_fix(a_u32):
+    """Mitchell log at F_DIV fraction bits for uint32 inputs (branch-free)."""
+    a = a_u32
+    k = jnp.zeros_like(a)
+    v = a
+    for step in (16, 8, 4, 2, 1):
+        m = v >= jnp.uint32(1 << step)
+        k = jnp.where(m, k + jnp.uint32(step), k)
+        v = jnp.where(m, v >> jnp.uint32(step), v)
+    # left-align the fraction into F_DIV bits
+    sh_l = jnp.maximum(jnp.int32(F_DIV) - k.astype(jnp.int32), 0)
+    sh_r = jnp.maximum(k.astype(jnp.int32) - jnp.int32(F_DIV), 0)
+    frac = (a ^ (jnp.uint32(1) << k))
+    frac = (frac << sh_l.astype(jnp.uint32)) >> sh_r.astype(jnp.uint32)
+    return (k << jnp.uint32(F_DIV)) | frac
+
+
+def kernel_div_u32(num, den, corr_tab, frac_out: int):
+    """SIMDive divider, width-32-in-uint32 (valid for quotients < 2^7).
+
+    num, den: uint32 (>0 den); returns round(num/den * 2^frac_out) approx.
+    corr_tab: (64,) int32 region corrections at F_DIV scale.
+    """
+    ln = _log2_fix(num)
+    ld = _log2_fix(den)
+    mask = jnp.uint32((1 << F_DIV) - 1)
+    idx = (((ln & mask) >> jnp.uint32(F_DIV - 3)) << 3) | (
+        (ld & mask) >> jnp.uint32(F_DIV - 3))
+    corr = corr_tab[idx.astype(jnp.int32)]
+    ls = ln.astype(jnp.int32) - ld.astype(jnp.int32) + corr
+    I = ls >> F_DIV
+    Xs = (ls & jnp.int32((1 << F_DIV) - 1)).astype(jnp.uint32)
+    mant = Xs + jnp.uint32(1 << F_DIV)
+    sh = I + (frac_out - F_DIV)
+    pos = jnp.clip(sh, 0, 31).astype(jnp.uint32)
+    neg = jnp.clip(-sh, 0, 31).astype(jnp.uint32)
+    half = jnp.where(sh < 0,
+                     jnp.uint32(1) << (jnp.maximum(neg, 1) - 1).astype(jnp.uint32),
+                     jnp.uint32(0))
+    q = jnp.where(sh >= 0, mant << pos, (mant + half) >> neg)
+    return jnp.where(num == 0, jnp.zeros_like(q), q)
+
+
+def _kernel(q_ref, k_ref, v_ref, tab_ref, o_ref, m_sc, l_sc, acc_sc, *,
+            nk: int, kc: int, causal: bool, window: int, scale: float,
+            approx_div: bool, frac_out: int = 16):
+    kj = pl.program_id(2)
+    qi = pl.program_id(1)
+    qc = q_ref.shape[1]
+
+    @pl.when(kj == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc, -jnp.inf)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    q = q_ref[0]                                   # (qc, dh)
+    k = k_ref[0]                                   # (kc, dh)
+    v = v_ref[0]
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale  # (qc, kc)
+    qpos = qi * qc + jax.lax.broadcasted_iota(jnp.int32, (qc, kc), 0)
+    kpos = kj * kc + jax.lax.broadcasted_iota(jnp.int32, (qc, kc), 1)
+    ok = jnp.ones((qc, kc), bool)
+    if causal:
+        ok &= kpos <= qpos
+    if window:
+        ok &= kpos > qpos - window
+    s = jnp.where(ok, s, -jnp.inf)
+
+    m_prev = m_sc[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    m_new = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+    p = jnp.exp(s - m_new[:, None])
+    c = jnp.exp(m_prev - m_new)
+    l_sc[...] = l_sc[...] * c + jnp.sum(p, axis=-1)
+    m_sc[...] = m_new
+    acc_sc[...] = acc_sc[...] * c[:, None] + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(kj == nk - 1)
+    def _finalize():
+        acc = acc_sc[...]
+        l = jnp.maximum(l_sc[...], 1e-30)
+        if approx_div:
+            # SIMDive divider: quotient acc/l in the log domain (uint32)
+            SC = jnp.float32(1 << 16)
+            qn = jnp.clip(jnp.abs(acc) * SC, 0, 4e9).astype(jnp.uint32)
+            qd = jnp.maximum(l * SC, 1.0).astype(jnp.uint32)[:, None]
+            qd = jnp.broadcast_to(qd, qn.shape)
+            quot = kernel_div_u32(qn, qd, tab_ref[...], frac_out)
+            out = (jnp.sign(acc) * quot.astype(jnp.float32)
+                   * jnp.float32(2.0 ** -frac_out))
+        else:
+            out = acc / l[:, None]
+        o_ref[0] = out.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "q_chunk", "kv_chunk",
+                     "approx_div", "interpret"),
+)
+def flash_attention_pallas(q, k, v, *, causal=True, window=0, q_chunk=512,
+                           kv_chunk=512, approx_div=False, interpret=True):
+    """q: (BH, Sq, dh); k, v: (BH, Skv, dh) — heads pre-flattened & matched
+    (GQA callers repeat/reshape kv outside). Returns (BH, Sq, dh).
+    """
+    BH, Sq, dh = q.shape
+    Skv = k.shape[1]
+    qc = min(q_chunk, Sq)
+    kc = min(kv_chunk, Skv)
+    assert Sq % qc == 0 and Skv % kc == 0, "pad outside"
+    nq, nk = Sq // qc, Skv // kc
+    tab = jnp.asarray(build_table("div", 32, 8))  # F=31 table; rescale below
+    # rescale table entries from F=31 to F_DIV resolution
+    tab = (tab.astype(jnp.int32) >> (31 - F_DIV)).astype(jnp.int32)
+    kern = functools.partial(
+        _kernel, nk=nk, kc=kc, causal=causal, window=window,
+        scale=dh ** -0.5, approx_div=approx_div)
+    return pl.pallas_call(
+        kern,
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, qc, dh), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, kc, dh), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, kc, dh), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((64,), lambda b, i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, qc, dh), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((qc,), jnp.float32),
+            pltpu.VMEM((qc,), jnp.float32),
+            pltpu.VMEM((qc, dh), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q, k, v, tab)

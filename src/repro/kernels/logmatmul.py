@@ -1,0 +1,115 @@
+"""Approximate log-domain matmul — the SIMDive "compute hot-spot" kernel.
+
+C[m,n] = sum_k  sign * SIMDive(|X[m,k]|, |W[k,n]|)
+
+Grid (M/bm, N/bn, K/bk) with the K axis innermost ("arbitrary" semantics):
+each step loads an (bm, bk) X-tile and (bk, bn) W-tile into VMEM, walks the
+bk slice with a fori_loop producing rank-1 outer "products" in the log
+domain (one vector add + anti-log shift per element — no MXU multiply), and
+accumulates int32 partials straight into the output tile. Signs are XORed
+outside the log path, standard for sign-magnitude log arithmetic.
+
+VMEM budget per step: bm*bk + bk*bn input words + bm*bn accumulator —
+(128, 128, 128) int32 = 3 * 64 KiB, far under the ~16 MiB/core budget; the
+MXU-aligned 128-multiples keep layouts native.
+
+Exactness contract: for width 8 the int32 accumulation is exact (products
+< 2^16, K < 2^15) and the kernel must match ref.py bit-for-bit; width 16
+accumulates in int32 too and is exact for K*max_product < 2^31 (callers
+scale). This kernel exists because the *emulation* of the paper's arithmetic
+must run at usable speed on TPU for accuracy studies; the deployment path
+for weights is packed int8 + MXU (see DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.error_lut import region_index
+from repro.core.mitchell import mitchell_antilog_mul, mitchell_log
+from repro.core.simdive import SimdiveSpec
+from .common import corr_lookup, fraction_mask
+
+__all__ = ["logmatmul_pallas"]
+
+DEFAULT_BLOCKS = (128, 128, 128)  # (bm, bn, bk)
+
+
+def _kernel(x_ref, w_ref, tab_ref, o_ref, *, spec: SimdiveSpec, bk: int):
+    width = spec.width
+    x = x_ref[...]                           # (bm, bk) int32 (signed)
+    w = w_ref[...]                           # (bk, bn) int32 (signed)
+    tab = tab_ref[...]
+    m = fraction_mask(width)
+
+    xm = jnp.minimum(jnp.abs(x).astype(jnp.uint32), jnp.uint32((1 << width) - 1))
+    wm = jnp.minimum(jnp.abs(w).astype(jnp.uint32), jnp.uint32((1 << width) - 1))
+    lx = mitchell_log(xm, width)             # (bm, bk)
+    lw = mitchell_log(wm, width)             # (bk, bn)
+    sx = jnp.where(x < 0, jnp.int32(-1), jnp.int32(1))
+    sw = jnp.where(w < 0, jnp.int32(-1), jnp.int32(1))
+    zx = xm == 0
+    zw = wm == 0
+
+    def body(j, acc):
+        la = jax.lax.dynamic_slice_in_dim(lx, j, 1, axis=1)      # (bm, 1)
+        lb = jax.lax.dynamic_slice_in_dim(lw, j, 1, axis=0)      # (1, bn)
+        idx = region_index(la & m, lb & m, width, spec.index_bits)
+        corr = corr_lookup(idx, tab, width)
+        p = mitchell_antilog_mul(la, lb, width, corr=corr,
+                                 round_out=spec.round_output)
+        s = (jax.lax.dynamic_slice_in_dim(sx, j, 1, axis=1)
+             * jax.lax.dynamic_slice_in_dim(sw, j, 1, axis=0))
+        zj = (jax.lax.dynamic_slice_in_dim(zx, j, 1, axis=1)
+              | jax.lax.dynamic_slice_in_dim(zw, j, 1, axis=0))
+        contrib = jnp.where(zj, jnp.int32(0), p.astype(jnp.int32) * s)
+        return acc + contrib
+
+    partial_sum = jax.lax.fori_loop(
+        0, bk, body, jnp.zeros(o_ref.shape, jnp.int32)
+    )
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += partial_sum
+
+
+@functools.partial(
+    jax.jit, static_argnames=("spec", "blocks", "interpret")
+)
+def logmatmul_pallas(x, w, spec: SimdiveSpec, blocks=DEFAULT_BLOCKS,
+                     interpret: bool = True):
+    """(M,K) @ (K,N) with SIMDive scalar products; int32 result (no scales).
+
+    ``x``, ``w`` are *signed* int32 with magnitudes < 2^width (quantization
+    and scale bookkeeping live in ops.py / repro.core.approx).
+    """
+    assert x.ndim == 2 and w.ndim == 2 and x.shape[1] == w.shape[0]
+    M, K = x.shape
+    N = w.shape[1]
+    bm, bn, bk = (min(blocks[0], M), min(blocks[1], N), min(blocks[2], K))
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0
+    grid = (M // bm, N // bn, K // bk)
+    tab, _ = spec.tables()
+    kern = functools.partial(_kernel, spec=spec, bk=bk)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((tab.shape[0],), lambda i, j, k: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.int32),
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+    )(x, w, tab)

@@ -1,0 +1,112 @@
+"""Public jit'd entry points for the SIMDive kernels.
+
+Handles shape normalization (flatten to 2D, pad to block multiples) and the
+backend switch:
+  * 'pallas'    — the Pallas kernels (interpret=True off-TPU, compiled on TPU)
+  * 'ref'       — the pure-jnp oracles
+  * 'auto'      — pallas on TPU, ref elsewhere (models/benches default; the
+                  interpret-mode kernels are for validation, not speed)
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.simdive import SimdiveSpec
+from . import ref as _ref
+from .elemwise import elemwise_pallas
+from .logmatmul import logmatmul_pallas
+from .packed_simd import packed_pallas
+
+__all__ = ["simdive_elemwise", "simdive_packed", "simdive_matmul_int"]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _resolve(backend: str) -> str:
+    if backend == "auto":
+        return "pallas" if _on_tpu() else "ref"
+    return backend
+
+
+def _pad2d(x, bm, bn, fill=0):
+    M, N = x.shape
+    pm, pn = (-M) % bm, (-N) % bn
+    if pm or pn:
+        x = jnp.pad(x, ((0, pm), (0, pn)), constant_values=fill)
+    return x
+
+
+def simdive_elemwise(a, b, spec: SimdiveSpec, op: str = "mul", mode=None,
+                     frac_out: int = 0, backend: str = "auto",
+                     block=(256, 512)):
+    """Elementwise SIMDive mul/div/mixed over same-shape uint arrays."""
+    backend = _resolve(backend)
+    shape = a.shape
+    a2 = a.reshape(1, -1) if a.ndim != 2 else a
+    b2 = b.reshape(1, -1) if b.ndim != 2 else b
+    m2 = None
+    if mode is not None:
+        m2 = mode.reshape(1, -1) if mode.ndim != 2 else mode
+    if backend == "ref":
+        out = _ref.elemwise_ref(a2, b2, spec, op=op, mode=m2,
+                                frac_out=frac_out)
+        return out.reshape(shape)
+    M, N = a2.shape
+    bm, bn = min(block[0], M), min(block[1], N)
+    ap = _pad2d(a2, bm, bn)
+    bp = _pad2d(b2, bm, bn, fill=1)     # avoid div-by-zero in the pad region
+    mp = _pad2d(m2, bm, bn) if m2 is not None else None
+    out = elemwise_pallas(ap, bp, spec, op=op, mode=mp, frac_out=frac_out,
+                          block=(bm, bn), interpret=not _on_tpu())
+    return out[:M, :N].reshape(shape)
+
+
+def simdive_packed(aw, bw, spec: SimdiveSpec, op: str = "mul", mode=None,
+                   frac_out: int = 0, backend: str = "auto",
+                   block=(128, 256)):
+    """Packed-lane SIMDive over uint32 word tensors (last dim = words)."""
+    backend = _resolve(backend)
+    shape = aw.shape
+    a2 = aw.reshape(1, -1) if aw.ndim != 2 else aw
+    b2 = bw.reshape(1, -1) if bw.ndim != 2 else bw
+    m2 = None
+    if mode is not None:
+        m2 = mode.reshape(1, -1) if mode.ndim != 2 else mode
+    if backend == "ref":
+        out = _ref.packed_ref(a2, b2, spec, op=op, mode=m2, frac_out=frac_out)
+    else:
+        M, N = a2.shape
+        bm, bn = min(block[0], M), min(block[1], N)
+        ap = _pad2d(a2, bm, bn)
+        # pad words with lanes == 1 to keep the div path well-defined
+        one_word = sum(1 << (spec.width * i) for i in range(32 // spec.width))
+        bp = _pad2d(b2, bm, bn, fill=one_word)
+        mp = _pad2d(m2, bm, bn) if m2 is not None else None
+        out = packed_pallas(ap, bp, spec, op=op, mode=mp, frac_out=frac_out,
+                            block=(bm, bn), interpret=not _on_tpu())
+        out = out[:M, : 2 * N]
+    return out.reshape(*shape[:-1], 2 * shape[-1])
+
+
+def simdive_matmul_int(x, w, spec: SimdiveSpec, backend: str = "auto",
+                       blocks=(128, 128, 128)):
+    """Signed int32 (…,K) @ (K,N) with SIMDive products (int32 result)."""
+    backend = _resolve(backend)
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    if backend == "ref":
+        out = _ref.logmatmul_ref(x2, w, spec)
+        return out.reshape(*lead, w.shape[1])
+    M, K = x2.shape
+    N = w.shape[1]
+    bm, bn, bk = min(blocks[0], M), min(blocks[1], N), min(blocks[2], K)
+    xp = _pad2d(x2, bm, bk)
+    wp = _pad2d(w, bk, bn)
+    out = logmatmul_pallas(xp, wp, spec, blocks=(bm, bn, bk),
+                           interpret=not _on_tpu())
+    return out[:M, :N].reshape(*lead, N)

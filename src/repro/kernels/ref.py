@@ -1,0 +1,68 @@
+"""Pure-jnp oracles for every Pallas kernel (bit-exact references).
+
+Each oracle mirrors its kernel's exact semantics — identical quantization,
+zero handling, packing and accumulation dtype — so tests can assert
+bit-for-bit equality (integer ops leave no tolerance to hide behind).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.simdive import SimdiveSpec, simdive_div, simdive_mul
+from repro.core.simd_pack import pack, unpack
+
+__all__ = ["elemwise_ref", "packed_ref", "logmatmul_ref"]
+
+
+@partial(jax.jit, static_argnames=("spec", "op", "frac_out"))
+def elemwise_ref(a, b, spec: SimdiveSpec, op: str = "mul", mode=None,
+                 frac_out: int = 0):
+    p = simdive_mul(a, b, spec).astype(a.dtype)
+    q = simdive_div(a, b, spec, frac_out=frac_out).astype(a.dtype)
+    if op == "mul":
+        return p
+    if op == "div":
+        return q
+    return jnp.where(mode != 0, p, q)
+
+
+@partial(jax.jit, static_argnames=("spec", "op", "frac_out"))
+def packed_ref(aw, bw, spec: SimdiveSpec, op: str = "mul", mode=None,
+               frac_out: int = 0):
+    """Packed lanes oracle; returns (M, 2*Nw) words of 2*width-bit lanes."""
+    a = unpack(aw, spec.width)
+    b = unpack(bw, spec.width)
+    p = simdive_mul(a, b, spec).astype(jnp.uint32)
+    q = simdive_div(a, b, spec, frac_out=frac_out).astype(jnp.uint32)
+    if op == "mul":
+        lanes = p
+    elif op == "div":
+        lanes = q
+    else:
+        lanes = jnp.where(unpack(mode, spec.width) != 0, p, q)
+    owidth = 2 * spec.width
+    if owidth >= 32:
+        return lanes  # one result per output word already
+    return pack(lanes & jnp.uint32((1 << owidth) - 1), owidth)
+
+
+@partial(jax.jit, static_argnames=("spec",))
+def logmatmul_ref(x, w, spec: SimdiveSpec):
+    """Signed int32 (M,K)@(K,N) with SIMDive products, int32 accumulation."""
+    xm = jnp.minimum(jnp.abs(x).astype(jnp.uint32),
+                     jnp.uint32((1 << spec.width) - 1))
+    wm = jnp.minimum(jnp.abs(w).astype(jnp.uint32),
+                     jnp.uint32((1 << spec.width) - 1))
+    sx = jnp.where(x < 0, jnp.int32(-1), jnp.int32(1))
+    sw = jnp.where(w < 0, jnp.int32(-1), jnp.int32(1))
+
+    def row(args):
+        xm_r, sx_r = args
+        p = simdive_mul(xm_r[:, None], wm, spec).astype(jnp.int32)
+        contrib = p * (sx_r[:, None] * sw)
+        return jnp.sum(contrib, axis=0, dtype=jnp.int32)
+
+    return jax.lax.map(row, (xm, sx))  # K-major loop keeps memory bounded

@@ -1,0 +1,1 @@
+"""repro.launch — meshes, sharding rules, dry-run, train/serve drivers."""

@@ -1,0 +1,26 @@
+"""Production meshes.
+
+A function (not a module constant) so importing this module never touches
+jax device state — the dry-run driver sets XLA_FLAGS *before* any jax
+import, then calls this.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(model: int | None = None):
+    """Small mesh over whatever devices exist (tests / local runs)."""
+    n = len(jax.devices())
+    model = model or 1
+    assert n % model == 0
+    return jax.make_mesh((n // model, model), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)

@@ -1,0 +1,105 @@
+"""Logical-axis sharding rules threaded through the model code.
+
+Models annotate activations with *logical* axis names (``shard(x, "batch",
+None, "heads", None)``); the launcher binds those names to physical mesh
+axes for the run. With no binding active (unit tests, single CPU) every
+annotation is a no-op, so the same model code serves 1-device smoke tests
+and the 512-chip dry-run.
+
+Default binding:
+  batch   -> ("pod", "data")   pod axis exists only on the multi-pod mesh
+  heads/kv/ff/vocab/experts/dmodel_tp -> ("model",)  (tensor parallel)
+GSPMD handles head counts that do not divide the model axis (uneven shards
+compile to internal padding — verified), so GQA archs with kv 2/5/8/24 share
+one rule set.
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["use_rules", "shard", "current_mesh", "active", "logical_spec",
+           "DEFAULT_RULES"]
+
+DEFAULT_RULES: dict[str, tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "seq": (),               # bind to ("model",) for sequence parallelism
+    "heads": ("model",),
+    "kv": ("model",),
+    "ff": ("model",),
+    "vocab": ("model",),
+    "experts": (),           # bind to ("model",) for expert parallelism
+    "dmodel_tp": ("model",),  # row-parallel weight input dims
+    "ssm_heads": ("model",),
+}
+
+_TLS = threading.local()
+
+
+def _state():
+    if not hasattr(_TLS, "stack"):
+        _TLS.stack = []
+    return _TLS.stack
+
+
+@contextmanager
+def use_rules(mesh, overrides: dict | None = None):
+    """Bind logical rules to ``mesh`` for model tracing within the block."""
+    rules = dict(DEFAULT_RULES)
+    if overrides:
+        rules.update(overrides)
+    # keep only mesh axes that exist (e.g. drop "pod" on the single-pod mesh)
+    axes = set(mesh.axis_names)
+    bound = {
+        name: tuple(a for a in val if a in axes)
+        for name, val in rules.items()
+    }
+    _state().append((mesh, bound))
+    try:
+        yield
+    finally:
+        _state().pop()
+
+
+def active() -> bool:
+    return bool(_state())
+
+
+def current_mesh():
+    return _state()[-1][0] if _state() else None
+
+
+def logical_spec(*dims) -> P:
+    """PartitionSpec for logical dim names (None = replicated dim)."""
+    _, rules = _state()[-1]
+    parts = []
+    for d in dims:
+        if d is None:
+            parts.append(None)
+        else:
+            axes = rules.get(d, ())
+            parts.append(axes if len(axes) > 1 else (axes[0] if axes else None))
+    return P(*parts)
+
+
+def shard(x, *dims):
+    """Constrain ``x``'s sharding by logical dim names; no-op when unbound."""
+    if not _state():
+        return x
+    return jax.lax.with_sharding_constraint(x, logical_spec(*dims))
+
+
+def logical_axis_size(name: str) -> int:
+    """Number of devices the logical axis ``name`` shards over (1 when no
+    mesh is bound — single-device tests)."""
+    if not _state():
+        return 1
+    mesh, rules = _state()[-1]
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n = 1
+    for a in rules.get(name, ()):
+        n *= sizes[a]
+    return n

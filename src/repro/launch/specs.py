@@ -1,0 +1,260 @@
+"""Parameter / optimizer / input sharding specs + abstract input builders.
+
+``param_specs`` maps every leaf of the model pytree to a PartitionSpec by
+path pattern (tensor-parallel on 'model'). ``opt_specs`` additionally
+shards optimizer moments over the data axis (ZeRO-1): the AdamW update then
+compiles to reduce-scattered-gradient -> local moment update -> delta
+all-gather, cutting optimizer memory ~n_data x.
+
+``input_specs`` produces ShapeDtypeStructs for every (arch x shape) cell —
+the dry-run lowers against these, so no host memory is ever allocated for
+the full-scale tensors.
+"""
+from __future__ import annotations
+
+import re
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import build
+
+# path-pattern -> spec factory (first match wins); {b}=batch axes, m='model'
+_PARAM_RULES: list[tuple[str, tuple]] = [
+    (r"embed$",                ("vocab_row",)),    # (n_emb, V, D)
+    (r"head$",                 ("vocab_col",)),    # (n_emb, D, V)
+    (r"(wq|wk|wv|w1|w3)$",     ("col",)),          # (L, D, out) -> out on m
+    (r"(bq|bk|bv)$",           ("vec",)),          # (L, out)
+    (r"(wo|w2)$",              ("row",)),          # (L, in, D) -> in on m
+    (r"moe/router$",           ("rep",)),
+    (r"moe/(w1|w3)$",          ("moe_col",)),      # (L, E, D, F)
+    (r"moe/w2$",               ("moe_row",)),      # (L, E, F, D)
+    (r"moe/shared/(w1|w3)$",   ("col",)),
+    (r"moe/shared/w2$",        ("row",)),
+    (r"(wr|wk|wv|wg|cm_wk|cm_wr|wz|wx|wdt)$", ("col",)),
+    (r"(cm_wv|out_proj)$",     ("row",)),
+    (r"u_bonus$",              ("heads_vec",)),    # (L, H, dk)
+    (r"lora_a$",               ("rep",)),
+    (r"lora_b$",               ("col",)),          # (n_inv, r, H*dh)
+    (r"(conv_x)$",             ("conv_col",)),     # (L, K, d_inner)
+    (r".*",                    ("rep",)),
+]
+
+
+def _leaf_spec(kind: str, ndim: int, leading_stack: bool) -> P:
+    m = "model"
+    pad = (None,) * (1 if leading_stack else 0)
+    if kind == "rep":
+        return P()
+    if kind == "vocab_row":
+        return P(None, m, None)
+    if kind == "vocab_col":
+        return P(None, None, m)
+    if kind == "col":       # (..., D, out): shard last
+        return P(*([None] * (ndim - 1) + [m]))
+    if kind == "row":       # (..., in, D): shard second-to-last
+        return P(*([None] * (ndim - 2) + [m, None]))
+    if kind == "vec":       # (..., out)
+        return P(*([None] * (ndim - 1) + [m]))
+    if kind == "moe_col":   # (L, E, D, F)
+        return P(None, None, None, m)
+    if kind == "moe_row":   # (L, E, F, D)
+        return P(None, None, m, None)
+    if kind == "heads_vec":  # (L, H, dk)
+        return P(None, m, None)
+    if kind == "conv_col":  # (L, K, channels)
+        return P(None, None, m)
+    raise ValueError(kind)
+
+
+def _walk(tree, prefix=""):
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            yield from _walk(v, f"{prefix}{k}/")
+    else:
+        yield prefix.rstrip("/"), tree
+
+
+def _scale_spec(qspec: P, scale_ndim: int) -> P:
+    """Spec for a QuantizedWeight's (…,1,N) scale: same as the weight's,
+    minus the (size-1) reduced dim's sharding."""
+    parts = list(qspec) + [None] * (scale_ndim - len(qspec))
+    if len(parts) >= 2:
+        parts[-2] = None
+    return P(*parts[:scale_ndim])
+
+
+def param_specs(params_shape) -> dict:
+    """Pytree of PartitionSpec matching the params pytree. QuantizedWeight
+    leaves map to QuantizedWeight(q=spec, scale=spec) nodes."""
+    from repro.models.layers import QuantizedWeight
+
+    flat = dict(_walk(params_shape))
+    specs = {}
+    for path, leaf in flat.items():
+        for pat, (kind,) in _PARAM_RULES:
+            if re.search(pat, path):
+                sp = _leaf_spec(kind, leaf.ndim, leading_stack=False)
+                if isinstance(leaf, QuantizedWeight):
+                    sp = QuantizedWeight(q=sp, scale=_scale_spec(
+                        sp, leaf.scale.ndim if hasattr(leaf.scale, "ndim")
+                        else leaf.ndim))
+                specs[path] = sp
+                break
+
+    def rebuild(tree, prefix=""):
+        if isinstance(tree, dict):
+            return {k: rebuild(v, f"{prefix}{k}/") for k, v in tree.items()}
+        return specs[prefix.rstrip("/")]
+
+    return rebuild(params_shape)
+
+
+def opt_specs(pspecs, batch_axes=("data",)):
+    """ZeRO-1: shard each moment additionally over the data axis, on the
+    largest dim the param spec leaves unsharded."""
+    def zero1(spec):
+        parts = list(spec) + []
+        # idempotent: already sharded over a batch axis (e.g. FSDP params)
+        for p in parts:
+            axes = p if isinstance(p, tuple) else (p,)
+            if any(a in batch_axes for a in axes):
+                return spec
+        # find first unsharded dim to place 'data' on (skip dim 0 of stacks)
+        for i in range(len(parts)):
+            if parts[i] is None:
+                parts[i] = batch_axes if len(batch_axes) > 1 else batch_axes[0]
+                return P(*parts)
+        return spec
+
+    def walk(tree):
+        if isinstance(tree, dict):
+            return {k: walk(v) for k, v in tree.items()}
+        return zero1(tree)
+
+    return walk(pspecs)
+
+
+def fsdp_specs(params_sds, axes: tuple, mesh) -> dict:
+    """ZeRO-3/FSDP: shard every leaf's largest divisible dim over ``axes``
+    (falling back to replication for small/indivisible leaves). Used by the
+    pure-DP lowering of small models, where no tensor parallelism is
+    needed and weights are gathered per layer at use."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n = 1
+    for a in axes:
+        n *= sizes[a]
+    ax = axes if len(axes) > 1 else axes[0]
+
+    def spec(leaf):
+        order = sorted(range(leaf.ndim), key=lambda i: -leaf.shape[i])
+        for i in order:
+            if leaf.shape[i] % n == 0 and leaf.shape[i] >= n:
+                parts = [None] * leaf.ndim
+                parts[i] = ax
+                return P(*parts)
+        return P()
+
+    return jax.tree.map(spec, params_sds)
+
+
+def batch_axes_for(mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh) -> dict:
+    """(ShapeDtypeStruct, PartitionSpec) dicts for the train/prefill batch."""
+    ba = batch_axes_for(mesh)
+    b = ba if len(ba) > 1 else (ba[0] if ba else None)
+    B, S = shape.global_batch, shape.seq_len
+    tok_shape = (B, S, cfg.n_codebooks) if cfg.n_codebooks else (B, S)
+    sds = {
+        "tokens": jax.ShapeDtypeStruct(tok_shape, jnp.int32),
+        "labels": jax.ShapeDtypeStruct(tok_shape, jnp.int32),
+    }
+    spec = {
+        "tokens": P(b),
+        "labels": P(b),
+    }
+    if cfg.mrope:
+        sds["positions"] = jax.ShapeDtypeStruct((B, S, 3), jnp.int32)
+        spec["positions"] = P(b)
+    if cfg.vision_stub:
+        n_p = min(1024, S // 4)
+        sds["patch_embeds"] = jax.ShapeDtypeStruct((B, n_p, cfg.d_model),
+                                                   jnp.bfloat16)
+        sds["patch_mask"] = jax.ShapeDtypeStruct((B, S), jnp.bool_)
+        spec["patch_embeds"] = P(b)
+        spec["patch_mask"] = P(b)
+    if shape.kind == "prefill":
+        del sds["labels"], spec["labels"]
+    return sds, spec
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    """(SDS, PartitionSpec) for the decode cache pytree."""
+    ba = batch_axes_for(mesh)
+    b = ba if len(ba) > 1 else (ba[0] if ba else None)
+    lm = build(cfg)
+    B, S = shape.global_batch, shape.seq_len
+    cache = jax.eval_shape(lambda: lm.empty_cache(B, S))
+
+    model_size = dict(zip(mesh.axis_names, mesh.devices.shape))["model"]
+    flat = dict(_walk(cache))
+    specs = {}
+    for path, leaf in flat.items():
+        tail = path.split("/")[-1]
+        if tail in ("k", "v"):
+            # KV heads shard cleanly -> classic TP attention (no cache
+            # collectives). Otherwise shard the *sequence* dim (context-
+            # parallel decode): scores/pv reduce locally per seq shard and
+            # only softmax stats + (B,KV,G,dh) partial sums cross chips —
+            # vs all-gathering the whole cache when dh was sharded.
+            if leaf.shape[3] % model_size == 0:
+                specs[path] = P(None, b, None, "model", None)
+            else:
+                specs[path] = P(None, b, "model", None, None)
+        elif tail == "conv":
+            specs[path] = P(None, b, None, "model")         # (L,B,K-1,C)
+        elif leaf.ndim >= 3:
+            # recurrent states (L,B,H,...) / (L,B,D): shard 3rd dim on model
+            specs[path] = P(None, b, "model", *([None] * (leaf.ndim - 3)))
+        else:
+            specs[path] = P(None, b)
+
+    def rebuild(tree, prefix=""):
+        if isinstance(tree, dict):
+            return {k: rebuild(v, f"{prefix}{k}/") for k, v in tree.items()}
+        return specs[prefix.rstrip("/")]
+
+    return cache, rebuild(cache)
+
+
+def as_shardings(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def sanitize_specs(spec_tree, sds_tree, mesh):
+    """Drop per-dim shardings that do not divide the dim (jit argument
+    shardings, unlike constraints, require exact divisibility)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def fix(spec, sds):
+        parts = list(spec)
+        parts += [None] * (sds.ndim - len(parts))
+        for i, p in enumerate(parts):
+            if p is None:
+                continue
+            axes = p if isinstance(p, tuple) else (p,)
+            k = 1
+            for a in axes:
+                k *= sizes[a]
+            if sds.shape[i] % k != 0:
+                parts[i] = None
+        return P(*parts)
+
+    return jax.tree.map(fix, spec_tree, sds_tree,
+                        is_leaf=lambda x: isinstance(x, P))

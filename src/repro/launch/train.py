@@ -1,0 +1,177 @@
+"""Training driver: sharded step, checkpoint/restart, deterministic data.
+
+Fault-tolerance contract (tested in tests/test_checkpoint.py):
+  * checkpoints are atomic (tmp-dir + rename) and written async,
+  * ``--resume auto`` restarts from the newest complete checkpoint,
+  * data order is a pure function of (seed, step) — a restart replays the
+    exact batch sequence, so loss curves are bitwise continuous,
+  * restore re-lays-out onto the *current* mesh (elastic: a job checkpointed
+    on N devices resumes on M).
+
+Usage (CPU smoke):
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-360m --smoke \
+      --steps 20 --batch 8 --seq 128 --ckpt-dir /tmp/ck --save-every 10
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import checkpoint as ckpt
+from repro.configs import SHAPES, get_config
+from repro.configs.base import ShapeConfig
+from repro.core.approx import ApproxConfig
+from repro.data import SyntheticLM, make_source
+from repro.launch import sharding as shardlib
+from repro.launch.mesh import make_host_mesh
+from repro.launch.specs import (
+    as_shardings,
+    batch_axes_for,
+    opt_specs,
+    param_specs,
+    sanitize_specs,
+)
+from repro.models import build
+from repro.optim import adamw, cosine_schedule
+
+
+def make_train_step(lm, opt, microbatch: int = 1):
+    """``microbatch`` > 1: gradient accumulation (same math, ~microbatch-fold
+    lower activation peak — see dryrun §Perf Cell 1 it. 6)."""
+    def step(params, opt_state, batch):
+        if microbatch == 1:
+            loss, grads = jax.value_and_grad(lm.train_loss)(params, batch)
+        else:
+            def split(x):
+                return x.reshape((microbatch, x.shape[0] // microbatch)
+                                 + x.shape[1:])
+
+            def mb(carry, b):
+                g_acc, l_acc = carry
+                loss, grads = jax.value_and_grad(lm.train_loss)(params, b)
+                return (jax.tree.map(jnp.add, g_acc, grads),
+                        l_acc + loss), None
+
+            zeros = jax.tree.map(jnp.zeros_like, params)
+            (grads, loss), _ = jax.lax.scan(
+                mb, (zeros, jnp.zeros((), jnp.float32)),
+                jax.tree.map(split, batch))
+            grads = jax.tree.map(lambda g: g / microbatch, grads)
+            loss = loss / microbatch
+        params, opt_state, metrics = opt.update(grads, opt_state, params)
+        return params, opt_state, {"loss": loss, **metrics}
+    return step
+
+
+def train(cfg, shape: ShapeConfig, *, steps: int, ckpt_dir: str | None,
+          save_every: int = 50, resume: str = "auto", seed: int = 0,
+          lr: float = 3e-4, tp: int = 1, log_every: int = 10,
+          keep: int = 3, stop_after: int | None = None,
+          microbatch: int = 1):
+    """``stop_after``: simulate preemption — exit after that many steps
+    WITHOUT the final checkpoint (only periodic commits survive), exactly
+    like a killed worker. The lr schedule is always pinned to ``steps`` so
+    a resumed run follows the same schedule."""
+    lm = build(cfg)
+    opt = adamw(cosine_schedule(lr, warmup=min(100, steps // 10 + 1),
+                                total=steps))
+    mesh = make_host_mesh(model=tp) if len(jax.devices()) > 1 else None
+    source = make_source(cfg, shape, seed=seed)
+
+    key = jax.random.PRNGKey(seed)
+    start_step = 0
+    params = opt_state = None
+    if ckpt_dir and resume == "auto" and ckpt.latest_step(ckpt_dir) is not None:
+        params_like = jax.eval_shape(lm.init, key)
+        opt_like = jax.eval_shape(opt.init, params_like)
+        start_step, tree = ckpt.restore(
+            ckpt_dir, like={"params": params_like, "opt": opt_like})
+        params, opt_state = tree["params"], tree["opt"]
+        print(f"[resume] step {start_step} from {ckpt_dir}")
+
+    step_fn = make_train_step(lm, opt, microbatch=microbatch)
+    from contextlib import ExitStack
+    with ExitStack() as stack:
+        if mesh is not None:
+            stack.enter_context(mesh)
+            stack.enter_context(
+                shardlib.use_rules(mesh, {"batch": batch_axes_for(mesh)}))
+        if params is None:
+            params = jax.jit(lm.init)(key)
+            opt_state = jax.jit(opt.init)(params)
+        if mesh is not None:
+            pspecs = sanitize_specs(param_specs(params), params, mesh)
+            pshard = as_shardings(mesh, pspecs)
+            params = jax.device_put(params, pshard)
+            jitted = jax.jit(step_fn, donate_argnums=(0, 1))
+        else:
+            jitted = jax.jit(step_fn, donate_argnums=(0, 1))
+
+        losses = []
+        t0 = time.time()
+        for step in range(start_step, steps):
+            batch = {k: jnp.asarray(v) for k, v in source.batch(step).items()}
+            params, opt_state, metrics = jitted(params, opt_state, batch)
+            loss = float(metrics["loss"])
+            losses.append(loss)
+            if step % log_every == 0 or step == steps - 1:
+                dt = time.time() - t0
+                print(f"[step {step:5d}] loss={loss:.4f} "
+                      f"gnorm={float(metrics['grad_norm']):.3f} "
+                      f"lr={float(metrics['lr']):.2e} ({dt:.1f}s)", flush=True)
+            if ckpt_dir and save_every and (step + 1) % save_every == 0:
+                ckpt.save_async(ckpt_dir, step + 1,
+                                {"params": params, "opt": opt_state})
+                ckpt.gc_keep_last(ckpt_dir, keep=keep)
+            if stop_after is not None and step + 1 >= stop_after:
+                ckpt.wait_pending()   # flush committed periodic saves only
+                return params, losses
+        if ckpt_dir:
+            ckpt.wait_pending()
+            ckpt.save(ckpt_dir, steps, {"params": params, "opt": opt_state})
+    return params, losses
+
+
+class _null_ctx:
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *a):
+        return False
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--tp", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--save-every", type=int, default=50)
+    ap.add_argument("--resume", default="auto", choices=["auto", "none"])
+    ap.add_argument("--microbatch", type=int, default=1)
+    ap.add_argument("--approx", default="exact",
+                    choices=["exact", "mitchell", "simdive"])
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    if args.approx != "exact":
+        cfg = cfg.with_approx(ApproxConfig(mode=args.approx))
+    shape = ShapeConfig("cli", args.seq, args.batch, "train")
+    train(cfg, shape, steps=args.steps, ckpt_dir=args.ckpt_dir,
+          save_every=args.save_every, resume=args.resume, seed=args.seed,
+          lr=args.lr, tp=args.tp, microbatch=args.microbatch)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""repro.models — composable decoder zoo (dense/GQA/MoE/SSM/hybrid/VLM/audio)."""
+from .model import LM, build
+
+__all__ = ["LM", "build"]

@@ -1,0 +1,324 @@
+"""Model building blocks: norms, RoPE/M-RoPE, attention, MLPs, quant weights.
+
+Attention is a flash-style double scan (q chunks outer, kv chunks inner)
+with online softmax: activation memory O(S * chunk) instead of O(S^2),
+which is what lets prefill_32k compile inside the HBM budget. The final
+``acc / l`` normalization is the paper's division use-case — it routes
+through the SIMDive divider when ``ApproxConfig.use_in_softmax`` is on.
+
+All matmuls go through :func:`dense`, which understands:
+  * plain float weights,
+  * :class:`QuantizedWeight` (int8 + per-channel scale — the packed-weight
+    serving path; bytes/weight drop 2x vs bf16, 4x vs f32),
+  * SIMDive bit-exact emulation (``ApproxConfig.emulate``) for accuracy
+    studies on small models.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.approx import ApproxConfig, approx_matmul, _fixed_point_div
+from repro.launch.sharding import shard
+
+EXACT = ApproxConfig()
+
+
+# ---------------------------------------------------------------- weights --
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class QuantizedWeight:
+    """int8 sign-magnitude-compatible weight + per-output-channel scale."""
+    q: jax.Array          # (K, N) int8
+    scale: jax.Array      # (1, N) f32
+
+    def tree_flatten(self):
+        return (self.q, self.scale), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def shape(self):
+        return self.q.shape
+
+    @property
+    def ndim(self):
+        return self.q.ndim
+
+    @property
+    def dtype(self):
+        return self.q.dtype
+
+    def __getitem__(self, idx):
+        """Slice the leading (stack/codebook) axis of both fields."""
+        return QuantizedWeight(q=self.q[idx], scale=self.scale[idx])
+
+
+def quantize_weight(w: jax.Array) -> QuantizedWeight:
+    """Per-output-channel int8. Reduction is over the input (second-to-last)
+    dim, so stacked (L, K, N) weights keep their leading layer axis and stay
+    scannable."""
+    amax = jnp.max(jnp.abs(w), axis=-2, keepdims=True)
+    scale = jnp.maximum(amax, 1e-30) / 127.0
+    q = jnp.clip(jnp.round(w / scale), -127, 127).astype(jnp.int8)
+    return QuantizedWeight(q=q, scale=scale.astype(jnp.float32))
+
+
+def dense(x, w, approx: ApproxConfig = EXACT):
+    """Matmul with quantized-weight and SIMDive-emulation support."""
+    if isinstance(w, QuantizedWeight):
+        wf = w.q.astype(x.dtype) * w.scale.astype(x.dtype)
+        return x @ wf
+    if approx.enabled and approx.use_in_linear and approx.emulate:
+        return approx_matmul(x, w.astype(jnp.float32), approx).astype(x.dtype)
+    return x @ w.astype(x.dtype)
+
+
+# ------------------------------------------------------------------ norms --
+def rmsnorm(x, w, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    inv = jax.lax.rsqrt(jnp.mean(jnp.square(xf), -1, keepdims=True) + eps)
+    return (xf * inv * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm(x, w, b, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, -1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), -1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def apply_norm(x, p, kind, eps=1e-6, approx: ApproxConfig = EXACT):
+    if kind == "layernorm":
+        return layernorm(x, p["w"], p["b"], eps)
+    if approx.enabled and approx.use_in_norm:
+        from repro.core.approx import approx_rmsnorm
+        return approx_rmsnorm(x, p["w"], eps, approx)
+    return rmsnorm(x, p["w"], eps)
+
+
+# ------------------------------------------------------------------- rope --
+def rope_tables(positions, dh_rot, theta, mrope_sections=None):
+    """cos/sin tables. positions: (B,S) int, or (B,S,3) for M-RoPE (t,h,w).
+
+    M-RoPE (Qwen2-VL): the dh_rot/2 frequency slots are split into
+    ``mrope_sections`` groups, each driven by its own position coordinate.
+    """
+    half = dh_rot // 2
+    inv = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    if positions.ndim == 3:
+        secs = mrope_sections or (half // 3 + half % 3, half // 3, half // 3)
+        assert sum(secs) == half, (secs, half)
+        coord = jnp.concatenate([
+            jnp.full((s,), i, jnp.int32) for i, s in enumerate(secs)
+        ])                                            # (half,) which coord
+        pos = jnp.take_along_axis(
+            positions.astype(jnp.float32),
+            jnp.broadcast_to(coord[None, None, :], positions.shape[:2] + (half,)),
+            axis=-1,
+        )                                             # (B,S,half)
+        ang = pos * inv[None, None, :]
+    else:
+        ang = positions.astype(jnp.float32)[..., None] * inv  # (B,S,half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin, rot_dims):
+    """Rotate the first ``rot_dims`` features of x (B,S,H,dh)."""
+    if rot_dims == 0:
+        return x
+    xr, xp = x[..., :rot_dims], x[..., rot_dims:]
+    half = rot_dims // 2
+    x1, x2 = xr[..., :half], xr[..., half:]
+    c = cos[:, :, None, :].astype(x.dtype)
+    s = sin[:, :, None, :].astype(x.dtype)
+    rot = jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+    return jnp.concatenate([rot, xp], axis=-1) if xp.shape[-1] else rot
+
+
+# -------------------------------------------------------------- attention --
+def _finalize(acc, l, approx: ApproxConfig):
+    """acc / l — softmax normalization; SIMDive divider when enabled."""
+    if approx.enabled and approx.use_in_softmax:
+        l_b = jnp.broadcast_to(l[..., None], acc.shape)
+        pos = _fixed_point_div(jnp.abs(acc), l_b, approx)
+        return jnp.sign(acc) * pos
+    return acc / l[..., None]
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, q_chunk=1024,
+                    kv_chunk=1024, approx: ApproxConfig = EXACT,
+                    q_offset=0, unroll=False):
+    """Online-softmax attention. q: (B,Sq,KVH,G,dh); k,v: (B,Skv,KVH,dh).
+
+    Returns (B,Sq,KVH,G,dh). ``window`` > 0 = sliding-window attention
+    (Mixtral). ``q_offset`` shifts absolute q positions (cache prefill).
+    Per-(q,kv)-chunk compute is wrapped in jax.checkpoint so the backward
+    pass never materializes more than one (qc, kc) score tile per step.
+    """
+    B, Sq0, KVH, G, dh = q.shape
+    Skv0 = k.shape[1]
+    qc = min(q_chunk, Sq0)
+    kc = min(kv_chunk, Skv0)
+    pad_q = (-Sq0) % qc
+    pad_k = (-Skv0) % kc
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    Sq, Skv = Sq0 + pad_q, Skv0 + pad_k
+    nq, nk = Sq // qc, Skv // kc
+    scale = dh ** -0.5
+
+    qr = q.reshape(B, nq, qc, KVH, G, dh)
+    kr = k.reshape(B, nk, kc, KVH, dh)
+    vr = v.reshape(B, nk, kc, KVH, dh)
+
+    def q_step(_, qi_qb):
+        qi, qb = qi_qb                                 # qb (B,qc,KVH,G,dh)
+        q_lo = qi * qc + q_offset
+
+        @partial(jax.checkpoint, prevent_cse=False)
+        def kv_compute(carry, kj, kb, vb):
+            m, l, acc = carry
+            s = jnp.einsum("bqkgd,btkd->bkgqt", qb, kb,
+                           preferred_element_type=jnp.float32) * scale
+            qpos = q_lo + jnp.arange(qc)[:, None]
+            kpos = kj * kc + jnp.arange(kc)[None, :]
+            ok = kpos < Skv0          # padded kv slots never attend
+            if causal:
+                ok &= kpos <= qpos
+            if window:
+                ok &= kpos > qpos - window
+            s = jnp.where(ok[None, None, None], s, -jnp.inf)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            # guard fully-masked rows (no valid kv yet): keep m finite
+            m_new = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bkgqt,btkd->bkgqd", p.astype(vb.dtype), vb,
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * corr[..., None] + pv
+            return m_new, l_new, acc_new
+
+        def kv_step(carry, kj_kb_vb):
+            kj, kb, vb = kj_kb_vb
+            k_lo, k_hi = kj * kc, kj * kc + kc - 1
+            needed = jnp.asarray(True)
+            if causal:
+                needed &= k_lo <= q_lo + qc - 1
+            if window:
+                needed &= k_hi > q_lo - window
+            new = jax.lax.cond(
+                needed, lambda c: kv_compute(c, kj, kb, vb), lambda c: c, carry
+            )
+            return new, None
+
+        m0 = jnp.full((B, KVH, G, qc), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, KVH, G, qc), jnp.float32)
+        a0 = jnp.zeros((B, KVH, G, qc, dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (jnp.arange(nk), kr.transpose(1, 0, 2, 3, 4),
+             vr.transpose(1, 0, 2, 3, 4)),
+            unroll=unroll,
+        )
+        l = jnp.maximum(l, 1e-30)
+        out = _finalize(acc, l, approx)                # (B,KVH,G,qc,dh)
+        return None, out.transpose(0, 3, 1, 2, 4)      # (B,qc,KVH,G,dh)
+
+    _, outs = jax.lax.scan(
+        q_step, None, (jnp.arange(nq), qr.transpose(1, 0, 2, 3, 4, 5)),
+        unroll=unroll,
+    )                                                   # (nq,B,qc,KVH,G,dh)
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, KVH, G, dh)
+    return out[:, :Sq0].astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, pos, *, window=0,
+                     approx: ApproxConfig = EXACT):
+    """Single-token attention against a cache.
+
+    q: (B,KVH,G,dh); caches: (B,Smax,KVH,dh); ``pos``: scalar int32 — the
+    index of the token being generated (cache entries > pos are masked; for
+    ring caches Smax == window and everything is valid).
+    """
+    B, Smax, KVH, dh = k_cache.shape
+    scale = dh ** -0.5
+    s = jnp.einsum("bkgd,btkd->bkgt", q, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    idx = jnp.arange(Smax)[None, None, None, :]
+    valid = idx <= pos
+    if window and Smax > window:
+        valid &= idx > pos - window
+    s = jnp.where(valid, s, -jnp.inf)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bkgt,btkd->bkgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return _finalize(acc, l, approx).astype(q.dtype)
+
+
+def decode_attention_append(q, k_cache, v_cache, k_new, v_new, pos, slot, *,
+                            ring_full=False, window=0,
+                            approx: ApproxConfig = EXACT):
+    """Single-token attention over a *read-only* cache plus the new token.
+
+    The cache is never rewritten here — the caller DUSes only the
+    ``(B,1,KVH,dh)`` new-token slab into the big stacked buffer (in-place
+    on TPU via donation), so a decode step's HBM write traffic is one
+    token, not one cache. The new token's self-attention term is folded in
+    analytically (online-softmax combine).
+
+    q: (B,KVH,G,dh); caches: (B,Smax,KVH,dh); k_new/v_new: (B,1,KVH,dh);
+    ``slot``: the ring/linear slot the new token will occupy (its stale
+    cache entry is masked out of the past scores).
+    """
+    B, Smax, KVH, dh = k_cache.shape
+    scale = dh ** -0.5
+    s = jnp.einsum("bkgd,btkd->bkgt", q, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    idx = jnp.arange(Smax)[None, None, None, :]
+    if ring_full:
+        # ring not yet wrapped: history is [0, pos); wrapped: every slot
+        # except the one being replaced holds live history
+        valid = jnp.where(pos < Smax, idx < pos, idx != slot)
+    else:
+        valid = idx < pos
+        if window and Smax > window:
+            valid &= idx > pos - window
+    s = jnp.where(valid, s, -jnp.inf)
+    s_self = (jnp.einsum("bkgd,bkd->bkg", q, k_new[:, 0],
+                         preferred_element_type=jnp.float32)
+              * scale)                                     # (B,KVH,G)
+    m = jnp.maximum(jnp.max(s, axis=-1), s_self)           # (B,KVH,G)
+    p = jnp.exp(s - m[..., None])
+    p_self = jnp.exp(s_self - m)
+    l = jnp.sum(p, axis=-1) + p_self
+    acc = jnp.einsum("bkgt,btkd->bkgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    acc = acc + (p_self[..., None]
+                 * v_new[:, 0].astype(jnp.float32)[:, :, None, :])
+    return _finalize(acc, l, approx).astype(q.dtype)
+
+
+# -------------------------------------------------------------------- mlp --
+def mlp(x, p, act, approx: ApproxConfig = EXACT):
+    """Gated (swiglu) or plain-gelu MLP; weights may be QuantizedWeight."""
+    if act == "swiglu":
+        h = jax.nn.silu(dense(x, p["w1"], approx)) * dense(x, p["w3"], approx)
+    elif act == "gelu":
+        h = jax.nn.gelu(dense(x, p["w1"], approx))
+    else:
+        raise ValueError(act)
+    h = shard(h, "batch", None, "ff")
+    return dense(h, p["w2"], approx)

@@ -1,0 +1,218 @@
+"""Mixture-of-Experts FFN with capacity-based dispatch (Switch-style).
+
+Token routing under jit needs static shapes, so tokens are scattered into a
+capacity buffer via cumsum positions, expert matmuls run as one batched
+einsum, and results gather back weighted by router probs. Dropped tokens
+(> capacity) fall through the residual connection.
+
+Two execution paths (§Perf iteration log in EXPERIMENTS.md):
+
+* ``_moe_ffn_spmd`` (default under a mesh) — explicit ``shard_map``
+  dispatch: one group per *local* sequence, so scatter/gather never cross
+  devices; expert hidden dims are tensor-parallel on 'model' and the only
+  collective is one fused psum of the w2 partial sums (+ its backward
+  mirror). GSPMD is not given the chance to repartition the backward
+  scatter-add (measured: 19.5 GiB/layer of mesh-transpose permutes when it
+  does).
+* ``_moe_ffn_jnp`` — pure-jnp fallback for single-device tests and decode,
+  with ``grouped`` dispatch (GShard-style) or the global-dispatch baseline
+  (``grouped=False``; the §Perf baseline, n_data-fold redundant compute).
+
+The router softmax is a division per token — SIMDive's divider handles it
+when approx mode is on (the paper's division-in-DNN motivation).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.approx import ApproxConfig
+from repro.launch import sharding as shardlib
+from repro.launch.sharding import shard
+from .layers import EXACT, QuantizedWeight, dense
+
+
+def init_moe(key, d_model, d_ff, n_experts, n_shared, dtype):
+    ks = jax.random.split(key, 5)
+    lim = d_model ** -0.5
+    p = {
+        "router": jax.random.uniform(ks[0], (d_model, n_experts), dtype,
+                                     -lim, lim),
+        "w1": jax.random.uniform(ks[1], (n_experts, d_model, d_ff), dtype,
+                                 -lim, lim),
+        "w3": jax.random.uniform(ks[2], (n_experts, d_model, d_ff), dtype,
+                                 -lim, lim),
+        "w2": jax.random.uniform(ks[3], (n_experts, d_ff, d_model), dtype,
+                                 -(d_ff ** -0.5), d_ff ** -0.5),
+    }
+    if n_shared:
+        ks2 = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "w1": jax.random.uniform(ks2[0], (d_model, d_ff), dtype, -lim, lim),
+            "w3": jax.random.uniform(ks2[1], (d_model, d_ff), dtype, -lim, lim),
+            "w2": jax.random.uniform(ks2[2], (d_ff, d_model), dtype,
+                                     -(d_ff ** -0.5), d_ff ** -0.5),
+        }
+    return p
+
+
+def _dispatch(xt, probs, top_k: int, capacity_factor: float):
+    """Grouped capacity dispatch. xt: (G,Tg,D); probs: (G,Tg,E).
+
+    Returns (buf (G,E,C,D), dst (G,TgK), gates (G,TgK,1), gi)."""
+    G, Tg, D = xt.shape
+    E = probs.shape[-1]
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)          # (G,Tg,K)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, -1, keepdims=True), 1e-9)
+
+    C = max(int(capacity_factor * Tg * top_k / E), 1)
+    flat_e = gate_idx.reshape(G, Tg * top_k)                   # (G,TgK)
+    oh = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)            # (G,TgK,E)
+    pos = (jnp.cumsum(oh, axis=1) * oh).sum(-1) - 1            # slot in expert
+    keep = (pos < C) & (pos >= 0)
+    dst = jnp.where(keep, flat_e * C + pos, E * C)             # overflow slot
+
+    xk = jnp.repeat(xt, top_k, axis=1)                         # (G,TgK,D)
+    gi = jnp.arange(G)[:, None]
+    buf = jnp.zeros((G, E * C + 1, D), xt.dtype).at[gi, dst].add(xk)
+    buf = buf[:, :-1].reshape(G, E, C, D)
+    gates = (gate_vals.reshape(G, -1, 1)
+             * keep[..., None].astype(gate_vals.dtype))
+    return buf, dst, gates, gi, gate_idx
+
+
+def _aux_terms(probs, gate_idx):
+    """Per-shard load-balance stats: (mean router prob, top-1 frequency)."""
+    E = probs.shape[-1]
+    me = jnp.mean(probs, axis=tuple(range(probs.ndim - 1)))
+    ce = jnp.mean(jax.nn.one_hot(gate_idx[..., 0], E,
+                                 dtype=jnp.float32),
+                  axis=tuple(range(gate_idx.ndim - 1)))
+    return me, ce
+
+
+def _moe_ffn_jnp(x, p, *, top_k, capacity_factor, approx, grouped):
+    """Pure-jnp path (single device / decode / GSPMD baseline)."""
+    B, S, D = x.shape
+    E = p["router"].shape[1]
+    if not grouped or S == 1:
+        G, Tg = 1, B * S
+    else:
+        G, Tg = B, S
+    xt = x.reshape(G, Tg, D)
+
+    logits = (xt @ p["router"].astype(x.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    buf, dst, gates, gi, gate_idx = _dispatch(xt, probs, top_k,
+                                              capacity_factor)
+    me, ce = _aux_terms(probs, gate_idx)
+    aux = E * jnp.sum(me * ce)
+
+    buf = shard(buf, "batch", "experts", None, None)
+    w1 = p["w1"].astype(x.dtype)
+    w3 = p["w3"].astype(x.dtype)
+    w2 = p["w2"].astype(x.dtype)
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", buf, w1)) * jnp.einsum(
+        "gecd,edf->gecf", buf, w3)
+    h = shard(h, "batch", "experts", None, "ff")
+    C = buf.shape[2]
+    y = jnp.einsum("gecf,efd->gecd", h, w2).reshape(G, E * C, D)
+    y = shard(y, "batch", None, None)
+    y = jnp.concatenate([y, jnp.zeros((G, 1, D), y.dtype)], axis=1)
+
+    out_k = y[gi, dst] * gates.astype(y.dtype)
+    out = out_k.reshape(G, Tg, top_k, D).sum(axis=2)
+
+    if "shared" in p:
+        sh = p["shared"]
+        xf = x.reshape(B * S, D)
+        hs = jax.nn.silu(dense(xf, sh["w1"], approx)) * dense(xf, sh["w3"],
+                                                              approx)
+        out = out.reshape(B * S, D) + dense(hs, sh["w2"], approx)
+    return out.reshape(B, S, D), aux
+
+
+def _moe_ffn_spmd(x, p, mesh, *, top_k, capacity_factor):
+    """shard_map path: local dispatch per data shard, TP expert hidden dims,
+    ONE fused psum for the w2 partial sums (+ shared expert)."""
+    from jax.experimental.shard_map import shard_map
+
+    batch_axes = shardlib.logical_spec("batch")[0]
+    model_axes = shardlib.logical_spec("ff")[0]
+    if batch_axes is None or model_axes is None:
+        return None                     # unbound axes: caller falls back
+    E = p["router"].shape[1]
+    has_shared = "shared" in p
+
+    def body(x_l, router, w1, w3, w2, *shared_ws):
+        # x_l: (B_loc,S,D); w1/w3: (E,D,F_loc); w2: (E,F_loc,D)
+        G, Tg, D = x_l.shape
+        xt = x_l
+        logits = (xt.reshape(-1, D) @ router.astype(xt.dtype)).astype(
+            jnp.float32).reshape(G, Tg, E)
+        probs = jax.nn.softmax(logits, axis=-1)
+        buf, dst, gates, gi, gate_idx = _dispatch(xt, probs, top_k,
+                                                  capacity_factor)
+        h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", buf,
+                                   w1.astype(xt.dtype))) * jnp.einsum(
+            "gecd,edf->gecf", buf, w3.astype(xt.dtype))
+        C = buf.shape[2]
+        y = jnp.einsum("gecf,efd->gecd", h,
+                       w2.astype(xt.dtype))          # partial over F shards
+        # combine back to token space BEFORE the psum: one (G,Tg,D) psum
+        # instead of a 2.5x larger slot-space one (slots = cf*top_k*tokens)
+        y = y.reshape(G, E * C, D)
+        y = jnp.concatenate([y, jnp.zeros((G, 1, D), y.dtype)], axis=1)
+        out_k = y[gi, dst] * gates.astype(y.dtype)
+        out = out_k.reshape(G, Tg, top_k, D).sum(axis=2)
+        if has_shared:
+            sw1, sw3, sw2 = shared_ws
+            hs = jax.nn.silu(xt @ sw1.astype(xt.dtype)) * (
+                xt @ sw3.astype(xt.dtype))
+            out = out + hs @ sw2.astype(xt.dtype)    # also partial: one psum
+        out = jax.lax.psum(out, model_axes)
+        me, ce = _aux_terms(probs, gate_idx)
+        me = jax.lax.pmean(me, batch_axes)
+        ce = jax.lax.pmean(ce, batch_axes)
+        aux = E * jnp.sum(me * ce)
+        return out, aux
+
+    b = batch_axes
+    m = model_axes
+    in_specs = [P(b, None, None), P(None, None),
+                P(None, None, m), P(None, None, m), P(None, m, None)]
+    args = [x, p["router"], p["w1"], p["w3"], p["w2"]]
+    if has_shared:
+        in_specs += [P(None, m), P(None, m), P(m, None)]
+        args += [p["shared"]["w1"], p["shared"]["w3"], p["shared"]["w2"]]
+    fn = shard_map(body, mesh=mesh, in_specs=tuple(in_specs),
+                   out_specs=(P(b, None, None), P()), check_rep=False)
+    return fn(*args)
+
+
+def moe_ffn(x, p, *, top_k: int, capacity_factor: float = 1.25,
+            approx: ApproxConfig = EXACT, grouped: bool = True):
+    """x: (B,S,D) -> (B,S,D), plus load-balancing aux loss."""
+    mesh = shardlib.current_mesh()
+    if (grouped and mesh is not None and x.shape[1] > 1
+            and not isinstance(p["w1"], QuantizedWeight)):
+        B = x.shape[0]
+        batch_axes = shardlib.logical_spec("batch")[0]
+        if batch_axes is not None:
+            axes = batch_axes if isinstance(batch_axes, tuple) else (
+                batch_axes,)
+            sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+            n_b = 1
+            for a in axes:
+                n_b *= sizes[a]
+            if B % n_b == 0:
+                out = _moe_ffn_spmd(x, p, mesh, top_k=top_k,
+                                    capacity_factor=capacity_factor)
+                if out is not None:
+                    return out
+    return _moe_ffn_jnp(x, p, top_k=top_k, capacity_factor=capacity_factor,
+                        approx=approx, grouped=grouped)

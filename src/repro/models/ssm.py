@@ -1,0 +1,324 @@
+"""Attention-free sequence mixers: RWKV6 (Finch) and Mamba2 (SSD).
+
+Both use the chunked-recurrence pattern: an outer ``lax.scan`` over chunks
+carries the O(1) recurrent state; the intra-chunk computation is a small
+dense problem wrapped in ``jax.checkpoint`` so the backward pass stores one
+state per chunk, not per step. This is what makes the ``long_500k`` decode
+shape trivially cheap for these families (state is constant-size).
+
+RWKV6's WKV normalization-free form is used (Finch drops the denominator of
+RWKV4); the division the paper targets shows up in RWKV's *channel-mix*
+sigmoid gating and in Mamba2's gated RMSNorm — both routed through the
+SIMDive divider in approx mode via the shared norm/softmax hooks.
+
+Faithfulness notes (see DESIGN.md §6): RWKV6 keeps data-dependent decay via
+the low-rank (LoRA) path of the Finch paper; Mamba2 keeps scalar-per-head
+decay, grouped B/C, conv1d front-end and gated output norm.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .layers import rmsnorm
+
+# =========================================================== RWKV6 (Finch) =
+LORA_R = 32          # token-shift ddlerp low-rank
+DECAY_LORA_R = 64    # data-dependent decay low-rank
+
+
+def init_rwkv6(key, d_model, n_heads, d_ff, dtype):
+    dk = d_model // n_heads
+    ks = jax.random.split(key, 16)
+    u = lambda k, sh, lim: jax.random.uniform(k, sh, dtype, -lim, lim)
+    lim = d_model ** -0.5
+    return {
+        "ln1": {"w": jnp.ones((d_model,), dtype)},
+        "ln2": {"w": jnp.ones((d_model,), dtype)},
+        # ddlerp token shift: base mus + low-rank data-dependent offsets
+        "mu_base": u(ks[0], (d_model,), 1.0) * 0 + 0.5,
+        "mu": u(ks[1], (5, d_model), 0.5),
+        "ts_a": u(ks[2], (d_model, 5 * LORA_R), lim),
+        "ts_b": u(ks[3], (5, LORA_R, d_model), LORA_R ** -0.5),
+        # projections
+        "wr": u(ks[4], (d_model, d_model), lim),
+        "wk": u(ks[5], (d_model, d_model), lim),
+        "wv": u(ks[6], (d_model, d_model), lim),
+        "wg": u(ks[7], (d_model, d_model), lim),
+        "wo": u(ks[8], (d_model, d_model), lim),
+        # decay: w0 + tanh(x W_a) W_b  (per channel)
+        "w0": jnp.full((d_model,), -6.0, dtype),
+        "wd_a": u(ks[9], (d_model, DECAY_LORA_R), lim),
+        "wd_b": u(ks[10], (DECAY_LORA_R, d_model), DECAY_LORA_R ** -0.5),
+        "u_bonus": u(ks[11], (n_heads, dk), 0.5),
+        "ln_x": {"w": jnp.ones((d_model,), dtype)},
+        # channel mix
+        "cm_mu": u(ks[12], (2, d_model), 0.5),
+        "cm_wk": u(ks[13], (d_model, d_ff), lim),
+        "cm_wv": u(ks[14], (d_ff, d_model), d_ff ** -0.5),
+        "cm_wr": u(ks[15], (d_model, d_model), lim),
+    }
+
+
+def _wkv_chunk(state, r, k, v, w, u):
+    """One chunk of the WKV recurrence, O(Tc^2) intra-chunk.
+
+    state: (B,H,dk,dv); r,k,w: (B,Tc,H,dk); v: (B,Tc,H,dv); u: (H,dk).
+    Decay convention (RWKV6):
+      y_t = sum_{s<t} (r_t ⊙ prod_{s<τ<t} w_τ)·k_s v_s + (r_t ⊙ u ⊙ k_t) v_t
+      S_{t+1} = diag(w_t) S_t + k_t v_t^T
+    """
+    B, Tc, H, dk = k.shape
+    lw = jnp.log(jnp.clip(w.astype(jnp.float32), 1e-38, 1.0))
+    c = jnp.cumsum(lw, axis=1)                       # inclusive Σ_{τ<=t} lw
+    # state contribution: r_t ⊙ prod_{τ<t} w_τ = r_t ⊙ exp(c_{t-1})
+    c_prev = c - lw                                  # Σ_{τ<t}
+    r_dec = r.astype(jnp.float32) * jnp.exp(c_prev)
+    y_state = jnp.einsum("bthd,bhdv->bthv", r_dec, state)
+    # intra-chunk: D[t,s,d] = exp(c_{t-1,d} - c_{s,d}) for s < t
+    #   scores[t,s] = Σ_d r_t[d] D[t,s,d] k_s[d]  — computed per dk block to
+    #   stay exp-of-negative (c_{t-1} - c_s <= 0 for s <= t-1): use pairwise
+    #   differences which are always <= 0, so no overflow.
+    diff = c_prev[:, :, None] - c[:, None, :, :, :]  # (B,T,T,H,dk) <= 0 masked
+    mask = (jnp.arange(Tc)[:, None] > jnp.arange(Tc)[None, :])
+    dec = jnp.exp(jnp.minimum(diff, 0.0)) * mask[None, :, :, None, None]
+    scores = jnp.einsum("bthd,btshd,bshd->bths", r.astype(jnp.float32), dec,
+                        k.astype(jnp.float32))
+    y_intra = jnp.einsum("bths,bshv->bthv", scores, v.astype(jnp.float32))
+    # current-token bonus
+    ru = r.astype(jnp.float32) * u[None, None].astype(jnp.float32)
+    y_bonus = jnp.einsum("bthd,bthd->bth", ru, k.astype(jnp.float32))[..., None] \
+        * v.astype(jnp.float32)
+    y = y_state + y_intra + y_bonus
+    # state update: S' = diag(prod w) S + Σ_s (prod_{τ>s} w_τ) k_s v_s^T
+    tot = c[:, -1]                                   # (B,H,dk)
+    k_dec = k.astype(jnp.float32) * jnp.exp(tot[:, None] - c)
+    state_new = jnp.exp(tot)[..., None] * state + jnp.einsum(
+        "bthd,bthv->bhdv", k_dec, v.astype(jnp.float32))
+    return state_new, y
+
+
+def rwkv6_time_mix(p, x, x_prev, state, n_heads, chunk=64, unroll=False):
+    """x: (B,T,D). x_prev: (B,D) last token of previous segment.
+    state: (B,H,dk,dk). Returns (y, new_x_prev, new_state)."""
+    B, T, D = x.shape
+    H = n_heads
+    dk = D // H
+    xf = x.astype(jnp.float32)
+    xs = jnp.concatenate([x_prev[:, None].astype(jnp.float32), xf[:, :-1]], 1)
+    sx = xs - xf
+    # ddlerp: 5 mixed inputs (r,k,v,w,g)
+    base = xf + sx * p["mu_base"].astype(jnp.float32)
+    ts = jnp.tanh(base @ p["ts_a"].astype(jnp.float32)).reshape(B, T, 5, LORA_R)
+    off = jnp.einsum("btnr,nrd->nbtd", ts, p["ts_b"].astype(jnp.float32))
+    mix = xf[None] + sx[None] * (p["mu"].astype(jnp.float32)[:, None, None]
+                                 + off)
+    xr, xk, xv, xw, xg = mix
+    r = (xr @ p["wr"].astype(jnp.float32)).reshape(B, T, H, dk)
+    k = (xk @ p["wk"].astype(jnp.float32)).reshape(B, T, H, dk)
+    v = (xv @ p["wv"].astype(jnp.float32)).reshape(B, T, H, dk)
+    g = xg @ p["wg"].astype(jnp.float32)
+    dec_raw = p["w0"].astype(jnp.float32) + jnp.tanh(
+        xw @ p["wd_a"].astype(jnp.float32)) @ p["wd_b"].astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(dec_raw)).reshape(B, T, H, dk)   # (0,1)
+
+    Tc = min(chunk, T)
+    pad = (-T) % Tc
+    if pad:
+        # identity-padded tail: w=1 (no decay), k=0 (no contribution)
+        zpad = ((0, 0), (0, pad), (0, 0), (0, 0))
+        r = jnp.pad(r, zpad)
+        k = jnp.pad(k, zpad)
+        v = jnp.pad(v, zpad)
+        w = jnp.pad(w, zpad, constant_values=1.0)
+    Tp = T + pad
+    nc = Tp // Tc
+
+    def step(s, inp):
+        rc, kc, vc, wc = inp
+        s_new, y = jax.checkpoint(_wkv_chunk, prevent_cse=False)(
+            s, rc, kc, vc, wc, p["u_bonus"])
+        return s_new, y
+
+    rs = r.reshape(B, nc, Tc, H, dk).transpose(1, 0, 2, 3, 4)
+    ks_ = k.reshape(B, nc, Tc, H, dk).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(B, nc, Tc, H, dk).transpose(1, 0, 2, 3, 4)
+    ws = w.reshape(B, nc, Tc, H, dk).transpose(1, 0, 2, 3, 4)
+    state_f, ys = jax.lax.scan(step, state.astype(jnp.float32),
+                               (rs, ks_, vs, ws), unroll=unroll)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, Tp, D)[:, :T]
+    y = rmsnorm(y, p["ln_x"]["w"])                       # per-channel norm
+    y = y * jax.nn.silu(g)
+    out = y.astype(x.dtype) @ p["wo"].astype(x.dtype)
+    return out, xf[:, -1].astype(x.dtype), state_f
+
+
+def rwkv6_channel_mix(p, x, x_prev):
+    xf = x.astype(jnp.float32)
+    xs = jnp.concatenate([x_prev[:, None].astype(jnp.float32), xf[:, :-1]], 1)
+    sx = xs - xf
+    mu = p["cm_mu"].astype(jnp.float32)
+    xk = xf + sx * mu[0]
+    xr = xf + sx * mu[1]
+    kk = jnp.square(jax.nn.relu(xk @ p["cm_wk"].astype(jnp.float32)))
+    rr = jax.nn.sigmoid(xr @ p["cm_wr"].astype(jnp.float32))
+    out = rr * (kk @ p["cm_wv"].astype(jnp.float32))
+    return out.astype(x.dtype), xf[:, -1].astype(x.dtype)
+
+
+def rwkv6_block(p, x, carry, n_heads, chunk=64, unroll=False):
+    """carry = dict(att_x, ffn_x, state). x: (B,T,D)."""
+    h = rmsnorm(x, p["ln1"]["w"])
+    att, ax, st = rwkv6_time_mix(p, h, carry["att_x"], carry["state"],
+                                 n_heads, chunk, unroll)
+    x = x + att
+    h = rmsnorm(x, p["ln2"]["w"])
+    ffn, fx = rwkv6_channel_mix(p, h, carry["ffn_x"])
+    x = x + ffn
+    return x, {"att_x": ax, "ffn_x": fx, "state": st}
+
+
+def rwkv6_empty_carry(batch, d_model, n_heads, dtype):
+    dk = d_model // n_heads
+    return {
+        "att_x": jnp.zeros((batch, d_model), dtype),
+        "ffn_x": jnp.zeros((batch, d_model), dtype),
+        "state": jnp.zeros((batch, n_heads, dk, dk), jnp.float32),
+    }
+
+
+# ================================================================== Mamba2 =
+CONV_K = 4
+
+
+def init_mamba2(key, d_model, d_state, head_dim, dtype):
+    """Per-component projections (z | x | B | C | dt) kept as separate
+    weights so tensor parallelism shards z/x/dt outputs on 'model' while the
+    tiny B/C heads stay replicated — a packed in_proj would force either
+    replication (5.8 GB/device at zamba2 scale) or section-crossing shards."""
+    d_inner = 2 * d_model
+    H = d_inner // head_dim
+    ks = jax.random.split(key, 8)
+    u = lambda k, sh, lim: jax.random.uniform(k, sh, dtype, -lim, lim)
+    lim = d_model ** -0.5
+    return {
+        "norm": {"w": jnp.ones((d_model,), dtype)},
+        "wz": u(ks[0], (d_model, d_inner), lim),
+        "wx": u(ks[1], (d_model, d_inner), lim),
+        "wb": u(ks[2], (d_model, d_state), lim),
+        "wc": u(ks[3], (d_model, d_state), lim),
+        "wdt": u(ks[4], (d_model, H), lim),
+        "conv_x": u(ks[5], (CONV_K, d_inner), CONV_K ** -0.5),
+        "conv_b": u(ks[6], (CONV_K, d_state), CONV_K ** -0.5),
+        "conv_c": u(ks[7], (CONV_K, d_state), CONV_K ** -0.5),
+        "conv_bias": jnp.zeros((d_inner + 2 * d_state,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H).astype(jnp.float32)),
+        "D": jnp.ones((H,), dtype),
+        "dt_bias": jnp.zeros((H,), dtype),
+        "out_norm": {"w": jnp.ones((d_inner,), dtype)},
+        "out_proj": u(ks[2], (d_inner, d_model), (d_inner) ** -0.5),
+    }
+
+
+def _ssd_chunk(state, x, B_m, C_m, dt, A):
+    """SSD chunk. state: (B,H,N,P); x: (B,Tc,H,P); B_m/C_m: (B,Tc,N);
+    dt: (B,Tc,H); A: (H,) negative."""
+    la = dt * A[None, None, :]                         # log decay per step <=0
+    c = jnp.cumsum(la, axis=1)                         # (B,Tc,H), inclusive
+    # inter-chunk: S_0's coefficient at step t is prod_{tau<=t} a = exp(c_t)
+    y_inter = jnp.einsum("btn,bth,bhnp->bthp", C_m, jnp.exp(c), state)
+    # intra-chunk: dec[t,s] = exp(c_t - c_s) for s <= t (always <= 0 inside)
+    Tc = x.shape[1]
+    mask = jnp.arange(Tc)[:, None] >= jnp.arange(Tc)[None, :]
+    dec = jnp.exp(jnp.minimum(c[:, :, None] - c[:, None, :], 0.0))
+    dec = dec * mask[None, :, :, None]
+    cb = jnp.einsum("btn,bsn->bts", C_m, B_m)
+    y_intra = jnp.einsum("bts,btsh,bsh,bshp->bthp", cb, dec, dt, x)
+    # state update
+    tot = c[:, -1]                                     # (B,H)
+    k_dec = jnp.exp(tot[:, None] - c) * dt             # (B,Tc,H)
+    state_new = jnp.exp(tot)[:, :, None, None] * state + jnp.einsum(
+        "bsn,bsh,bshp->bhnp", B_m, k_dec, x)
+    return state_new, y_inter + y_intra
+
+
+def _causal_conv(seq, w, bias):
+    """Depthwise causal conv; seq already has CONV_K-1 left context rows."""
+    T = seq.shape[1] - (CONV_K - 1)
+    wf = w.astype(jnp.float32)
+    out = sum(seq[:, i:i + T] * wf[i][None, None] for i in range(CONV_K))
+    return jax.nn.silu(out + bias)
+
+
+def mamba2_mix(p, x, conv_state, ssm_state, d_state, head_dim, chunk=128,
+               unroll=False):
+    """x: (B,T,D). conv_state: (B,CONV_K-1,d_inner+2N). ssm_state: (B,H,N,P)."""
+    B, T, D = x.shape
+    d_inner = 2 * D
+    H = d_inner // head_dim
+    N = d_state
+    xd = x.astype(x.dtype)
+    z = (xd @ p["wz"].astype(x.dtype)).astype(jnp.float32)
+    xbc = jnp.concatenate([
+        (xd @ p["wx"].astype(x.dtype)).astype(jnp.float32),
+        (xd @ p["wb"].astype(x.dtype)).astype(jnp.float32),
+        (xd @ p["wc"].astype(x.dtype)).astype(jnp.float32),
+    ], axis=-1)
+    dt_raw = (xd @ p["wdt"].astype(x.dtype)).astype(jnp.float32)
+    seq = jnp.concatenate([conv_state.astype(jnp.float32), xbc], axis=1)
+    conv_w = jnp.concatenate([
+        p["conv_x"], p["conv_b"], p["conv_c"]], axis=-1)
+    xbc_c = _causal_conv(seq, conv_w, p["conv_bias"].astype(jnp.float32))
+    xs, B_m, C_m = jnp.split(xbc_c, [d_inner, d_inner + N], axis=-1)
+    xs = xs.reshape(B, T, H, head_dim)
+    dt = jax.nn.softplus(dt_raw + p["dt_bias"].astype(jnp.float32))  # (B,T,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    Tc = min(chunk, T)
+    pad = (-T) % Tc
+    if pad:
+        # identity-padded tail: dt=0 => decay 1 and zero input contribution
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        B_m = jnp.pad(B_m, ((0, 0), (0, pad), (0, 0)))
+        C_m = jnp.pad(C_m, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    Tp = T + pad
+    nc = Tp // Tc
+    xr = xs.reshape(B, nc, Tc, H, head_dim).transpose(1, 0, 2, 3, 4)
+    Br = B_m.reshape(B, nc, Tc, N).transpose(1, 0, 2, 3)
+    Cr = C_m.reshape(B, nc, Tc, N).transpose(1, 0, 2, 3)
+    dtr = dt.reshape(B, nc, Tc, H).transpose(1, 0, 2, 3)
+
+    def step(s, inp):
+        xc, bc, cc, dc = inp
+        s_new, y = jax.checkpoint(_ssd_chunk, prevent_cse=False)(
+            s, xc, bc, cc, dc, A)
+        return s_new, y
+
+    s_f, ys = jax.lax.scan(step, ssm_state.astype(jnp.float32),
+                           (xr, Br, Cr, dtr), unroll=unroll)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, Tp, d_inner)[:, :T]
+    y = y + xs[:, :T].reshape(B, T, d_inner) * jnp.repeat(
+        p["D"].astype(jnp.float32), head_dim)[None, None]
+    y = rmsnorm(y * jax.nn.silu(z), p["out_norm"]["w"])
+    out = y.astype(x.dtype) @ p["out_proj"].astype(x.dtype)
+    new_conv = seq[:, -(CONV_K - 1):].astype(x.dtype)
+    return out, new_conv, s_f
+
+
+def mamba2_block(p, x, carry, d_state, head_dim, chunk=128, unroll=False):
+    h = rmsnorm(x, p["norm"]["w"])
+    y, conv, ssm = mamba2_mix(p, h, carry["conv"], carry["ssm"], d_state,
+                              head_dim, chunk, unroll)
+    return x + y, {"conv": conv, "ssm": ssm}
+
+
+def mamba2_empty_carry(batch, d_model, d_state, head_dim, dtype):
+    d_inner = 2 * d_model
+    H = d_inner // head_dim
+    return {
+        "conv": jnp.zeros((batch, CONV_K - 1, d_inner + 2 * d_state), dtype),
+        "ssm": jnp.zeros((batch, H, d_state, head_dim), jnp.float32),
+    }

@@ -1,0 +1,159 @@
+"""From-scratch optimizers (AdamW, Lion, SGD-momentum) + schedules + clip.
+
+Implemented as (init, update) pairs over arbitrary pytrees. Optimizer state
+inherits the parameter sharding (first/second moments shard exactly like
+their parameters — GSPMD propagates it from the params passed to init), so
+optimizer memory scales down with tensor parallelism automatically.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["adamw", "lion", "momentum", "cosine_schedule", "clip_by_global_norm"]
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable   # (grads, state, params) -> (new_params, new_state)
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int,
+                    final_frac: float = 0.1):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * (step + 1.0) / max(warmup, 1)
+        t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(math.pi * t))
+        return jnp.where(step < warmup, warm, base_lr * cos)
+    return lr
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(
+        jnp.sum(jnp.square(g.astype(jnp.float32)))
+        for g in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(tree, max_norm):
+    n = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(n, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), tree), n
+
+
+def adamw(lr, *, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1,
+          clip_norm: float | None = 1.0):
+    """lr: float or schedule fn(step)->lr."""
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "mu": jax.tree.map(zeros, params),
+            "nu": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        gnorm = jnp.zeros((), jnp.float32)
+        if clip_norm is not None:
+            grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        lr_t = lr_fn(step)
+        b1c = 1 - b1 ** step.astype(jnp.float32)
+        b2c = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32)
+            m2 = b1 * m + (1 - b1) * g
+            v2 = b2 * v + (1 - b2) * jnp.square(g)
+            mhat = m2 / b1c
+            vhat = v2 / b2c
+            delta = mhat / (jnp.sqrt(vhat) + eps)
+            if weight_decay and p.ndim >= 2:       # no decay on norms/bias
+                delta = delta + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * delta).astype(p.dtype), m2, v2
+
+        out = jax.tree.map(upd, params, grads, state["mu"], state["nu"])
+        new_params = jax.tree.map(lambda t: t[0], out,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+        mu = jax.tree.map(lambda t: t[1], out,
+                          is_leaf=lambda t: isinstance(t, tuple))
+        nu = jax.tree.map(lambda t: t[2], out,
+                          is_leaf=lambda t: isinstance(t, tuple))
+        new_state = {"mu": mu, "nu": nu, "step": step}
+        metrics = {"grad_norm": gnorm, "lr": lr_t}
+        return new_params, new_state, metrics
+
+    return Optimizer(init, update)
+
+
+def lion(lr, *, b1=0.9, b2=0.99, weight_decay=0.1, clip_norm=1.0):
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        return {
+            "mu": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                               params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        lr_t = lr_fn(step)
+
+        def upd(p, g, m):
+            g = g.astype(jnp.float32)
+            d = jnp.sign(b1 * m + (1 - b1) * g)
+            if weight_decay and p.ndim >= 2:
+                d = d + weight_decay * p.astype(jnp.float32)
+            m2 = b2 * m + (1 - b2) * g
+            return (p.astype(jnp.float32) - lr_t * d).astype(p.dtype), m2
+
+        out = jax.tree.map(upd, params, grads, state["mu"])
+        new_params = jax.tree.map(lambda t: t[0], out,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+        mu = jax.tree.map(lambda t: t[1], out,
+                          is_leaf=lambda t: isinstance(t, tuple))
+        return new_params, {"mu": mu, "step": step}, \
+            {"grad_norm": gnorm, "lr": lr_t}
+
+    return Optimizer(init, update)
+
+
+def momentum(lr, *, beta=0.9, clip_norm=None):
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        return {
+            "mu": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                               params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        gnorm = jnp.zeros((), jnp.float32)
+        if clip_norm is not None:
+            grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        lr_t = lr_fn(step)
+
+        def upd(p, g, m):
+            m2 = beta * m + g.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * m2).astype(p.dtype), m2
+
+        out = jax.tree.map(upd, params, grads, state["mu"])
+        new_params = jax.tree.map(lambda t: t[0], out,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+        mu = jax.tree.map(lambda t: t[1], out,
+                          is_leaf=lambda t: isinstance(t, tuple))
+        return new_params, {"mu": mu, "step": step}, \
+            {"grad_norm": gnorm, "lr": lr_t}
+
+    return Optimizer(init, update)

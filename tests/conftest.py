@@ -1,0 +1,10 @@
+"""Test-process JAX config.
+
+x64 is enabled so the 32-bit SIMDive datapath (which needs uint64
+intermediates, like the FPGA's 64-bit product bus) can run on CPU.
+NOTE: tests deliberately see the real single CPU device — only
+``launch/dryrun.py`` requests the 512 placeholder devices.
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)

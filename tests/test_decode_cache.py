@@ -1,0 +1,96 @@
+"""Unit tests for the in-place decode path (§Perf Cell 3).
+
+`decode_attention_append` (read-only cache + analytic self term + one-token
+write) must agree with the reference `decode_attention` (write-then-attend)
+bit-for-bit up to float tolerance, for linear, windowed-linear, and ring
+caches.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.models.layers import decode_attention, decode_attention_append
+
+
+def _rand(key, *shape):
+    return jax.random.normal(key, shape, jnp.float32)
+
+
+@pytest.mark.parametrize("pos", [0, 1, 5, 14])
+def test_append_matches_write_then_attend_linear(pos):
+    B, Smax, KVH, G, dh = 2, 16, 3, 2, 8
+    ks = jax.random.split(jax.random.PRNGKey(pos), 5)
+    q = _rand(ks[0], B, KVH, G, dh)
+    k_cache = _rand(ks[1], B, Smax, KVH, dh)
+    v_cache = _rand(ks[2], B, Smax, KVH, dh)
+    k_new = _rand(ks[3], B, 1, KVH, dh)
+    v_new = _rand(ks[4], B, 1, KVH, dh)
+
+    # reference: write the token at `pos`, then attend over idx <= pos
+    kc = jax.lax.dynamic_update_slice_in_dim(k_cache, k_new, pos, axis=1)
+    vc = jax.lax.dynamic_update_slice_in_dim(v_cache, v_new, pos, axis=1)
+    ref = decode_attention(q, kc, vc, jnp.int32(pos))
+
+    out = decode_attention_append(q, k_cache, v_cache, k_new, v_new,
+                                  jnp.int32(pos), jnp.int32(pos))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("pos", [3, 7, 15])
+def test_append_windowed_linear(pos):
+    """Linear cache larger than the attention window."""
+    B, Smax, KVH, G, dh, W = 1, 16, 2, 1, 4, 4
+    ks = jax.random.split(jax.random.PRNGKey(100 + pos), 5)
+    q = _rand(ks[0], B, KVH, G, dh)
+    k_cache = _rand(ks[1], B, Smax, KVH, dh)
+    v_cache = _rand(ks[2], B, Smax, KVH, dh)
+    k_new = _rand(ks[3], B, 1, KVH, dh)
+    v_new = _rand(ks[4], B, 1, KVH, dh)
+
+    kc = jax.lax.dynamic_update_slice_in_dim(k_cache, k_new, pos, axis=1)
+    vc = jax.lax.dynamic_update_slice_in_dim(v_cache, v_new, pos, axis=1)
+    ref = decode_attention(q, kc, vc, jnp.int32(pos), window=W)
+
+    out = decode_attention_append(q, k_cache, v_cache, k_new, v_new,
+                                  jnp.int32(pos), jnp.int32(pos), window=W)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("pos", [2, 7, 8, 13, 21])
+def test_append_ring_matches_explicit_softmax(pos):
+    """Ring cache (Smax == window): compare against a dense softmax over
+    exactly the live window entries."""
+    B, Smax, KVH, G, dh = 1, 8, 1, 1, 4
+    rng = np.random.default_rng(pos)
+    # build the ring cache state as a real decode would have left it:
+    # token t lives at slot t % Smax for t in [0, pos)
+    toks_k = rng.normal(size=(pos + 1, dh)).astype(np.float32)
+    toks_v = rng.normal(size=(pos + 1, dh)).astype(np.float32)
+    k_cache = np.zeros((B, Smax, KVH, dh), np.float32)
+    v_cache = np.zeros((B, Smax, KVH, dh), np.float32)
+    for t in range(pos):
+        k_cache[0, t % Smax, 0] = toks_k[t]
+        v_cache[0, t % Smax, 0] = toks_v[t]
+    k_new = toks_k[pos][None, None, None, :]
+    v_new = toks_v[pos][None, None, None, :]
+    q = rng.normal(size=(B, KVH, G, dh)).astype(np.float32)
+
+    slot = pos % Smax
+    out = decode_attention_append(
+        jnp.asarray(q), jnp.asarray(k_cache), jnp.asarray(v_cache),
+        jnp.asarray(k_new), jnp.asarray(v_new),
+        jnp.int32(pos), jnp.int32(slot), ring_full=True)
+
+    # dense reference over the live window: tokens max(0,pos-Smax+1)..pos
+    lo = max(0, pos - Smax + 1)
+    ks = toks_k[lo:pos + 1]
+    vs = toks_v[lo:pos + 1]
+    s = (q[0, 0, 0] @ ks.T) * dh ** -0.5
+    p = np.exp(s - s.max())
+    p /= p.sum()
+    ref = p @ vs
+    np.testing.assert_allclose(np.asarray(out)[0, 0, 0], ref,
+                               rtol=2e-5, atol=2e-5)

@@ -1,0 +1,70 @@
+"""Tests of the 64-region error-reduction tables (paper §3.3)."""
+import numpy as np
+import pytest
+
+from repro.core import build_table
+from repro.core.error_lut import ideal_correction_div, ideal_correction_mul
+
+
+def test_table_shapes():
+    assert build_table("mul", 8, 6).shape == (64,)
+    assert build_table("mul", 8, 6, index_bits=4).shape == (256,)
+    assert build_table("div", 16, 6).shape == (64,)
+
+
+def test_zero_bits_is_plain_mitchell():
+    assert (build_table("mul", 8, 0) == 0).all()
+    assert (build_table("div", 8, 0) == 0).all()
+
+
+def test_mul_coefficients_nonnegative():
+    # Mitchell's multiplier always underestimates => corrections >= 0.
+    assert (build_table("mul", 16, 8) >= 0).all()
+
+
+def test_div_coefficients_nonpositive():
+    """Mitchell's divider overestimates: 1+x1-x2 >= (1+x1)/(1+x2) pointwise,
+    so every region-mean correction is <= 0 (subtracted in hardware via the
+    2's-complement ternary add)."""
+    t = build_table("div", 16, 8).reshape(8, 8)
+    assert (t <= 0).all()
+    # the x1==x2 diagonal needs the least correction within each row band
+    assert all(abs(t[i, i]) <= abs(t[i]).max() for i in range(8))
+
+
+def test_corner_regions_small():
+    # fractions near 0 or both near 1 need almost no correction (Fig. 1b/e)
+    t = build_table("mul", 16, 8).reshape(8, 8)
+    assert t[0, 0] <= t.max() * 0.2
+    assert t[7, 7] <= t.max() * 0.2
+
+
+def test_quantization_steps():
+    fine = build_table("mul", 16, 12)
+    coarse = build_table("mul", 16, 2)
+    step = 1 << (15 - 2 - 2)
+    assert (coarse % step == 0).all()
+    # coarse is fine rounded to its grid
+    assert np.abs(coarse - fine).max() <= step // 2 + abs(fine).max() * 0  # grid bound
+
+
+def test_ideal_correction_formulas():
+    # spot-check the closed forms against direct computation
+    x1, x2 = 0.25, 0.5
+    s = 1.25 * 1.5  # = 1.875 < 2
+    assert ideal_correction_mul(np.float64(x1), np.float64(x2)) == pytest.approx(
+        s - 1 - (x1 + x2)
+    )
+    x1, x2 = 0.75, 0.5
+    s = 1.75 * 1.5  # >= 2 -> carry case
+    assert ideal_correction_mul(np.float64(x1), np.float64(x2)) == pytest.approx(
+        s / 2 - (x1 + x2)
+    )
+    r = 1.75 / 1.5
+    assert ideal_correction_div(np.float64(0.75), np.float64(0.5)) == pytest.approx(
+        r - 1 - 0.25
+    )
+    r = 1.25 / 1.75  # < 1 -> borrow case
+    assert ideal_correction_div(np.float64(0.25), np.float64(0.75)) == pytest.approx(
+        2 * r - 2 + 0.5
+    )

@@ -1,0 +1,103 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret) vs pure-jnp oracle.
+
+Everything is integer arithmetic — assertions are bit-for-bit equality.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import SimdiveSpec, pack
+from repro.kernels import simdive_elemwise, simdive_matmul_int, simdive_packed
+
+RNG = np.random.default_rng(7)
+
+SPECS = [
+    SimdiveSpec(width=8, coeff_bits=6),
+    SimdiveSpec(width=8, coeff_bits=0, round_output=False),   # plain Mitchell
+    SimdiveSpec(width=16, coeff_bits=6),
+    SimdiveSpec(width=16, coeff_bits=8, index_bits=4),
+]
+
+
+def _uints(shape, width, lo=0):
+    return jnp.asarray(
+        RNG.integers(lo, 1 << width, size=shape, dtype=np.uint32)
+    )
+
+
+@pytest.mark.parametrize("spec", SPECS, ids=str)
+@pytest.mark.parametrize("shape,block", [
+    ((8, 128), (8, 128)),      # exact fit
+    ((37, 300), (16, 128)),    # padding on both axes
+    ((1, 7), (8, 128)),        # smaller than one block
+    ((130, 130), (64, 64)),    # multi-block with remainder
+])
+@pytest.mark.parametrize("op", ["mul", "div", "mixed"])
+def test_elemwise_matches_ref(spec, shape, block, op):
+    a = _uints(shape, spec.width)
+    b = _uints(shape, spec.width, lo=1)
+    mode = _uints(shape, 1)
+    kw = dict(spec=spec, op=op, mode=mode, frac_out=4)
+    got = simdive_elemwise(a, b, backend="pallas", block=block, **kw)
+    want = simdive_elemwise(a, b, backend="ref", **kw)
+    assert got.dtype == want.dtype
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("width", [8, 16])
+@pytest.mark.parametrize("shape,block", [
+    ((4, 16), (4, 16)),
+    ((9, 30), (4, 16)),        # padded
+])
+@pytest.mark.parametrize("op", ["mul", "div", "mixed"])
+def test_packed_matches_ref(width, shape, block, op):
+    spec = SimdiveSpec(width=width, coeff_bits=6)
+    lpw = 32 // width
+    lanes = (shape[0], shape[1] * lpw)
+    aw = pack(_uints(lanes, width), width)
+    bw = pack(_uints(lanes, width, lo=1), width)
+    mw = pack(_uints(lanes, 1), width)
+    kw = dict(spec=spec, op=op, mode=mw, frac_out=4)
+    got = simdive_packed(aw, bw, backend="pallas", block=block, **kw)
+    want = simdive_packed(aw, bw, backend="ref", **kw)
+    assert got.shape == (shape[0], 2 * shape[1])
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("spec", SPECS[:3], ids=str)
+@pytest.mark.parametrize("mkn,blocks", [
+    ((16, 24, 16), (16, 16, 24)),
+    ((20, 72, 33), (16, 16, 24)),    # padding every axis
+    ((8, 8, 8), (8, 8, 8)),
+    ((33, 50, 17), (16, 32, 32)),
+])
+def test_logmatmul_matches_ref(spec, mkn, blocks):
+    M, K, N = mkn
+    hi = min(1 << spec.width, 1 << 10)  # keep int32 accumulation exact
+    x = jnp.asarray(RNG.integers(-hi + 1, hi, size=(M, K), dtype=np.int32))
+    w = jnp.asarray(RNG.integers(-hi + 1, hi, size=(K, N), dtype=np.int32))
+    got = simdive_matmul_int(x, w, spec, backend="pallas", blocks=blocks)
+    want = simdive_matmul_int(x, w, spec, backend="ref")
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_logmatmul_close_to_exact():
+    """End-to-end sanity: SIMDive matmul ~1% of the exact integer matmul."""
+    spec = SimdiveSpec(width=8, coeff_bits=6)
+    x = jnp.asarray(RNG.integers(-255, 256, size=(32, 128), dtype=np.int32))
+    w = jnp.asarray(RNG.integers(-255, 256, size=(128, 16), dtype=np.int32))
+    got = np.asarray(simdive_matmul_int(x, w, spec, backend="pallas",
+                                        blocks=(16, 16, 32))).astype(np.float64)
+    t = np.asarray(x.astype(np.int64) @ w.astype(np.int64)).astype(np.float64)
+    denom = np.maximum(np.abs(t), np.abs(t).mean())
+    assert np.median(np.abs(got - t) / denom) < 0.02
+
+
+def test_leading_dims_flattened():
+    spec = SimdiveSpec(width=8, coeff_bits=6)
+    a = _uints((2, 3, 40), 8)
+    b = _uints((2, 3, 40), 8, lo=1)
+    got = simdive_elemwise(a, b, spec, backend="pallas", block=(8, 128))
+    want = simdive_elemwise(a, b, spec, backend="ref")
+    assert got.shape == (2, 3, 40)
+    assert np.array_equal(np.asarray(got), np.asarray(want))

@@ -1,0 +1,162 @@
+"""Property-based tests (hypothesis) of the SIMDive invariants."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    SimdiveSpec,
+    mitchell_div,
+    mitchell_mul,
+    pack,
+    packed_mixed,
+    simdive_div,
+    simdive_mul,
+    simdive_sqrt,
+    unpack,
+)
+
+WIDTHS = st.sampled_from([8, 16])
+SPECS = st.builds(
+    SimdiveSpec,
+    width=st.sampled_from([8, 16]),
+    coeff_bits=st.sampled_from([0, 4, 6, 8]),
+    index_bits=st.sampled_from([3, 4]),
+    round_output=st.booleans(),
+)
+
+
+def _ops(draw_width, n=64, seed=0):
+    rng = np.random.default_rng(seed)
+    hi = (1 << draw_width) - 1
+    a = rng.integers(1, hi + 1, size=n, dtype=np.uint32)
+    b = rng.integers(1, hi + 1, size=n, dtype=np.uint32)
+    return a, b
+
+
+@settings(max_examples=40, deadline=None)
+@given(spec=SPECS, seed=st.integers(0, 2**16))
+def test_mul_relative_error_bounded(spec, seed):
+    a, b = _ops(spec.width, seed=seed)
+    p = np.asarray(simdive_mul(jnp.asarray(a), jnp.asarray(b), spec))
+    t = a.astype(np.float64) * b.astype(np.float64)
+    re = np.abs(p.astype(np.float64) - t) / t
+    # plain Mitchell worst case 11.12%; corrected+rounded < ~6%
+    bound = 0.112 if spec.coeff_bits == 0 else 0.08
+    assert re.max() <= bound + 1e-9
+
+
+@settings(max_examples=40, deadline=None)
+@given(spec=SPECS, seed=st.integers(0, 2**16))
+def test_div_relative_error_bounded(spec, seed):
+    a, b = _ops(spec.width, seed=seed)
+    q = np.asarray(
+        simdive_div(jnp.asarray(a), jnp.asarray(b), spec, frac_out=14)
+    ).astype(np.float64) / 2**14
+    t = a.astype(np.float64) / b.astype(np.float64)
+    re = np.abs(q - t) / t
+    bound = 0.126 if spec.coeff_bits == 0 else 0.08
+    assert re.max() <= bound + 2e-4  # + frac_out quantization slack
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**16), k=st.integers(0, 7))
+def test_scale_invariance(seed, k):
+    """Eq. 7/8: scaling one operand by 2^k scales the output by 2^k,
+    up to one unit at the coarser output grid (the anti-log truncation
+    position moves with the scale)."""
+    rng = np.random.default_rng(seed)
+    a = rng.integers(1, 256, size=32, dtype=np.uint32)
+    b = rng.integers(1, 256, size=32, dtype=np.uint32)
+    spec8 = SimdiveSpec(width=16, coeff_bits=6)
+    p1 = np.asarray(simdive_mul(jnp.asarray(a), jnp.asarray(b), spec8)).astype(np.int64)
+    p2 = np.asarray(
+        simdive_mul(jnp.asarray(a << k), jnp.asarray(b), spec8)
+    ).astype(np.int64)
+    assert np.abs(p2 - (p1 << k)).max() <= (1 << k)
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_mul_div_duality(seed):
+    """div(mul(a,b), b) ≈ a within the composed error bound."""
+    rng = np.random.default_rng(seed)
+    a = rng.integers(16, 256, size=64, dtype=np.uint32)
+    b = rng.integers(16, 256, size=64, dtype=np.uint32)
+    spec = SimdiveSpec(width=16, coeff_bits=6)
+    p = simdive_mul(jnp.asarray(a), jnp.asarray(b), spec)
+    q = np.asarray(simdive_div(p, jnp.asarray(b), spec, frac_out=8)).astype(
+        np.float64
+    ) / 2**8
+    re = np.abs(q - a) / a
+    assert re.max() < 0.11
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**16),
+       width=st.sampled_from([8, 16]),
+       nwords=st.integers(1, 8))
+def test_pack_roundtrip(seed, width, nwords):
+    rng = np.random.default_rng(seed)
+    lpw = 32 // width
+    v = rng.integers(0, 1 << width, size=(3, nwords * lpw), dtype=np.uint32)
+    w = pack(jnp.asarray(v), width)
+    assert w.shape[-1] == nwords
+    assert np.array_equal(np.asarray(unpack(w, width)), v)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_packed_mixed_lanes_match_scalar_ops(seed):
+    """Each packed lane must equal the SISD op — mixed mul/div modes."""
+    rng = np.random.default_rng(seed)
+    a = rng.integers(1, 256, size=64, dtype=np.uint32)
+    b = rng.integers(1, 256, size=64, dtype=np.uint32)
+    mode = rng.integers(0, 2, size=64, dtype=np.int32)
+    spec = SimdiveSpec(width=8, coeff_bits=6)
+    out = np.asarray(
+        packed_mixed(pack(jnp.asarray(a), 8), pack(jnp.asarray(b), 8),
+                     jnp.asarray(mode), spec, frac_out=8)
+    )
+    pm = np.asarray(simdive_mul(jnp.asarray(a), jnp.asarray(b), spec))
+    pd = np.asarray(simdive_div(jnp.asarray(a), jnp.asarray(b), spec, frac_out=8))
+    want = np.where(mode.astype(bool), pm, pd).astype(np.uint32)
+    assert np.array_equal(out, want)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_sqrt_bounded_error(seed):
+    rng = np.random.default_rng(seed)
+    a = rng.integers(1, 1 << 16, size=128, dtype=np.uint32)
+    r = np.asarray(simdive_sqrt(jnp.asarray(a), 16, frac_out=8)).astype(np.float64) / 2**8
+    re = np.abs(r - np.sqrt(a)) / np.sqrt(a)
+    # analytic worst case: (1 + x/2)/2^(x/2) at x=1 -> 1.5/sqrt(2) = 6.07%
+    assert re.max() <= 0.0607
+
+
+def test_accuracy_monotone_in_coeff_bits():
+    """The tunable-accuracy claim: more coefficient bits, lower ARE."""
+    a = np.arange(1, 256, dtype=np.uint32)
+    A, B = np.meshgrid(a, a, indexing="ij")
+    A = jnp.asarray(A.ravel()); B = jnp.asarray(B.ravel())
+    t = np.asarray(A, np.float64) * np.asarray(B, np.float64)
+    ares = []
+    for cb in (0, 2, 4, 6):
+        p = np.asarray(simdive_mul(A, B, SimdiveSpec(width=8, coeff_bits=cb)))
+        ares.append((np.abs(p - t) / t).mean())
+    assert all(x >= y - 1e-12 for x, y in zip(ares, ares[1:])), ares
+    assert ares[-1] < 0.01  # <1% ARE, paper: 0.82%
+
+
+def test_simdive_beats_mitchell_paper_ratio():
+    """Paper: ~5x ARE improvement of SIMDive over plain Mitchell."""
+    a = np.arange(1, 256, dtype=np.uint32)
+    A, B = np.meshgrid(a, a, indexing="ij")
+    A = jnp.asarray(A.ravel()); B = jnp.asarray(B.ravel())
+    t = np.asarray(A, np.float64) * np.asarray(B, np.float64)
+    pm = np.asarray(mitchell_mul(A, B, 8))
+    ps = np.asarray(simdive_mul(A, B, SimdiveSpec(width=8, coeff_bits=6)))
+    are_m = (np.abs(pm - t) / t).mean()
+    are_s = (np.abs(ps - t) / t).mean()
+    assert are_m / are_s > 4.0

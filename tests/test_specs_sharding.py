@@ -1,0 +1,85 @@
+"""Sharding-spec unit tests: fsdp_specs, opt_specs idempotence, sanitize,
+quantized-weight stacking — the launch-layer contracts the dry-run relies
+on (no multi-device mesh needed: specs are pure metadata).
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.specs import (
+    fsdp_specs,
+    opt_specs,
+    param_specs,
+    sanitize_specs,
+)
+from repro.models.layers import QuantizedWeight, quantize_weight
+
+
+class _FakeMesh:
+    axis_names = ("data", "model")
+
+    class devices:
+        shape = (4, 2)
+
+
+def _sds(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def test_fsdp_specs_picks_largest_divisible_dim():
+    mesh = _FakeMesh()
+    tree = {
+        "w_big": _sds(12, 64, 256),      # 256 % 8 == 0 -> last dim
+        "w_odd": _sds(3, 7, 129),        # nothing divisible -> replicated
+        "w_mid": _sds(16, 10, 6),        # 16 % 8 == 0 -> dim 0
+    }
+    specs = fsdp_specs(tree, ("data", "model"), mesh)
+    assert specs["w_big"] == P(None, None, ("data", "model"))
+    assert specs["w_odd"] == P()
+    assert specs["w_mid"] == P(("data", "model"), None, None)
+
+
+def test_opt_specs_idempotent_on_fsdp_params():
+    """ZeRO-1 on already-FSDP specs must not duplicate the data axis."""
+    sp = {"w": P("data", None, "model")}
+    out = opt_specs(sp, ("data",))
+    assert out["w"] == P("data", None, "model")
+    sp2 = {"w": P(None, "model")}
+    out2 = opt_specs(sp2, ("data",))
+    assert out2["w"] == P("data", "model")
+
+
+def test_sanitize_drops_indivisible_axes():
+    mesh = _FakeMesh()
+    spec = {"a": P("data", "model")}
+    sds = {"a": _sds(6, 8)}     # 6 % 4 != 0 -> drop; 8 % 2 == 0 -> keep
+    out = sanitize_specs(spec, sds, mesh)
+    assert out["a"] == P(None, "model")
+
+
+def test_param_specs_cover_every_leaf():
+    from repro.configs import get_config
+    from repro.models import build
+    cfg = get_config("smollm-360m", smoke=True)
+    sds = jax.eval_shape(build(cfg).init, jax.random.PRNGKey(0))
+    specs = param_specs(sds)
+    assert jax.tree.structure(specs) == jax.tree.structure(
+        jax.tree.map(lambda _: 0, sds))
+
+
+def test_quantize_weight_keeps_stack_axis_and_accuracy():
+    w = np.random.default_rng(0).normal(size=(3, 32, 64)).astype(np.float32)
+    qw = quantize_weight(jnp.asarray(w))
+    assert isinstance(qw, QuantizedWeight)
+    assert qw.q.shape == (3, 32, 64)
+    assert qw.scale.shape == (3, 1, 64)
+    deq = np.asarray(qw.q, np.float32) * np.asarray(qw.scale)
+    # int8 per-channel round-trip error bounded by scale/2 per entry
+    err = np.abs(deq - w)
+    bound = np.broadcast_to(np.asarray(qw.scale) * 0.5 + 1e-7, w.shape)
+    assert (err <= bound + 1e-6).all()
+    # per-layer slices are themselves valid QuantizedWeights for the scan
+    sliced = QuantizedWeight(q=qw.q[1], scale=qw.scale[1])
+    deq1 = np.asarray(sliced.q, np.float32) * np.asarray(sliced.scale)
+    np.testing.assert_allclose(deq1, deq[1])
