@@ -23,8 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import SimdiveSpec, pack
-from repro.kernels import simdive_packed
-from repro.kernels.ref import packed_ref, elemwise_ref
+from repro.kernels import get_op
 
 
 def _time(f, *args, iters=5):
@@ -63,12 +62,14 @@ def main(report=print):
     report("table3,lane-op profile accurate,1 full 8x8 multiply (64 partial"
            " products),ops")
 
-    f_packed_mul = jax.jit(lambda x, y: packed_ref(x, y, spec, op="mul"))
-    f_packed_div = jax.jit(
-        lambda x, y: packed_ref(x, y, spec, op="div", frac_out=6))
+    # every path below flows through the one registry entry point
+    packed_op = get_op("packed", spec, backend="ref")
+    elem_op = get_op("elemwise", spec, backend="ref")
+    f_packed_mul = jax.jit(lambda x, y: packed_op(x, y, op="mul"))
+    f_packed_div = jax.jit(lambda x, y: packed_op(x, y, op="div", frac_out=6))
     f_packed_mix = jax.jit(
-        lambda x, y, m: packed_ref(x, y, spec, op="mixed", mode=m, frac_out=6))
-    f_unpacked = jax.jit(lambda x, y: elemwise_ref(x, y, spec, op="mul"))
+        lambda x, y, m: packed_op(x, y, op="mixed", mode=m, frac_out=6))
+    f_unpacked = jax.jit(lambda x, y: elem_op(x, y, op="mul"))
     f_exact = jax.jit(lambda x, y: x * y)
 
     rows = [
@@ -83,8 +84,8 @@ def main(report=print):
 
     # pallas kernel (interpret) single-shot sanity at reduced size
     small_a, small_b = aw[:16, :64], bw[:16, :64]
-    out = simdive_packed(small_a, small_b, spec, op="mul", backend="pallas",
-                         block=(16, 64))
+    out = get_op("packed", spec, backend="pallas",
+                 block=(16, 64))(small_a, small_b, op="mul")
     report(f"table3,pallas-packed-kernel validated,{out.shape},shape"
            " (interpret mode; TPU is the target)")
 

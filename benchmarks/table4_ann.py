@@ -23,7 +23,7 @@ import jax.numpy as jnp
 
 from repro.core import SimdiveSpec
 from repro.core.approx import quantize_sign_magnitude
-from repro.kernels import simdive_matmul_int
+from repro.kernels import get_op
 
 
 def make_dataset(n_train=6000, n_test=1000, seed=0, shift=2, noise=4.0):
@@ -114,13 +114,15 @@ def accuracy(logits, y):
 
 def main(report=print):
     (xtr, ytr), (xte, yte) = make_dataset()
+    # approximate paths dispatch through the kernel registry entry point
     muls = {
         "accurate8": lambda a, b: (a.astype(jnp.int64) @ b.astype(jnp.int64)
                                    ).astype(jnp.int64),
-        "simdive": lambda a, b: simdive_matmul_int(
-            a, b, SimdiveSpec(width=8, coeff_bits=6), backend="ref"),
-        "mitchell": lambda a, b: simdive_matmul_int(
-            a, b, SimdiveSpec(width=8, coeff_bits=0, round_output=False),
+        "simdive": get_op(
+            "matmul_int", SimdiveSpec(width=8, coeff_bits=6), backend="ref"),
+        "mitchell": get_op(
+            "matmul_int",
+            SimdiveSpec(width=8, coeff_bits=0, round_output=False),
             backend="ref"),
     }
     report("table4,config,double-precision,accurate-8b,simdive-8b,mitchell-8b"

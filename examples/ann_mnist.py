@@ -20,7 +20,7 @@ from benchmarks.table4_ann import (
     train_float,
 )
 from repro.core import SimdiveSpec
-from repro.kernels import simdive_matmul_int
+from repro.kernels import get_op
 
 
 def main():
@@ -38,11 +38,12 @@ def main():
                           steps=args.steps)
     acc_float = accuracy(fwd(ws, jnp.asarray(xte)), yte)
 
-    def simdive_mm(a, b):
-        return simdive_matmul_int(
-            a, b, SimdiveSpec(width=8, coeff_bits=args.coeff_bits,
-                              round_output=args.coeff_bits > 0),
-            backend="ref")
+    # one registry entry point serves the example, the benchmarks and models
+    simdive_mm = get_op(
+        "matmul_int",
+        SimdiveSpec(width=8, coeff_bits=args.coeff_bits,
+                    round_output=args.coeff_bits > 0),
+        backend="ref")
 
     acc_exact8 = accuracy(quantized_infer(
         ws, xte, lambda a, b: (a.astype(jnp.int64) @ b.astype(jnp.int64))), yte)

@@ -14,6 +14,17 @@ This is the layer that carries the paper's arithmetic into real networks:
 * ``approx_rmsnorm`` — beyond-paper: log-domain rsqrt (L >> 1) feeding the
   divider for the RMSNorm denominator.
 
+Every approximate op here dispatches through the kernel registry
+(:func:`repro.kernels.registry.get_op`) — the same entry point the
+benchmarks and examples use — so a model forward pass can be served by the
+bit-exact reference (``backend='ref'``, the default: identical numerics to
+the historical in-module emulation) or by the Pallas kernels
+(``backend='pallas'``/``'auto'``) without touching model code. Caveat for
+the kernel backends: the emulated matmul's Pallas path accumulates in
+int32 (exact for width 8 with K < 2^15; tested bit-equal to ref in that
+range) — the int64 ``ref`` path remains the accuracy-study oracle for
+wider lanes / deeper reductions.
+
 ``ApproxConfig.mode``:
   'exact'    — plain float ops (baseline),
   'mitchell' — uncorrected log arithmetic (paper's Mitchell baseline),
@@ -27,7 +38,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from .simdive import SimdiveSpec, simdive_div, simdive_mul
+from repro.kernels.registry import get_op
+from .simdive import SimdiveSpec
 
 __all__ = [
     "ApproxConfig",
@@ -48,6 +60,8 @@ class ApproxConfig:
     frac_out: int = 15             # divider fixed-point output bits
     k_chunk: int = 128             # matmul K-chunk (bounds the 3D product)
     emulate: bool = True           # bit-exact SIMDive emulation in linears
+    backend: str = "ref"           # kernel backend: 'ref' (bit-exact seed
+    #                                semantics) | 'pallas' | 'auto' | ...
     use_in_linear: bool = True
     use_in_softmax: bool = True
     use_in_norm: bool = False
@@ -82,34 +96,6 @@ def quantize_sign_magnitude(x: jax.Array, width: int, axis=None):
     return mag, sign, scale
 
 
-def _approx_matmul_int(qx, sx, qw, sw, spec: SimdiveSpec, k_chunk: int):
-    """Integer core: (M,K)x(K,N) with SIMDive scalar products, K-chunked."""
-    M, K = qx.shape
-    N = qw.shape[1]
-    pad = (-K) % k_chunk
-    if pad:
-        qx = jnp.pad(qx, ((0, 0), (0, pad)))
-        sx = jnp.pad(sx, ((0, 0), (0, pad)), constant_values=1)
-        qw = jnp.pad(qw, ((0, pad), (0, 0)))
-        sw = jnp.pad(sw, ((0, pad), (0, 0)), constant_values=1)
-    nc = (K + pad) // k_chunk
-    qxc = qx.reshape(M, nc, k_chunk).transpose(1, 0, 2)
-    sxc = sx.reshape(M, nc, k_chunk).transpose(1, 0, 2)
-    qwc = qw.reshape(nc, k_chunk, N)
-    swc = sw.reshape(nc, k_chunk, N)
-
-    def body(acc, inp):
-        qxk, sxk, qwk, swk = inp
-        p = simdive_mul(qxk[:, :, None], qwk[None, :, :], spec)  # (M,Kc,N)
-        s = sxk[:, :, None] * swk[None, :, :]
-        acc = acc + jnp.sum(p.astype(jnp.int64) * s.astype(jnp.int64), axis=1)
-        return acc, None
-
-    acc0 = jnp.zeros((M, N), jnp.int64)
-    acc, _ = jax.lax.scan(body, acc0, (qxc, sxc, qwc, swc))
-    return acc
-
-
 @partial(jax.custom_vjp, nondiff_argnums=(2,))
 def approx_matmul(x: jax.Array, w: jax.Array, cfg: ApproxConfig) -> jax.Array:
     """Float-in/out matmul with SIMDive products; exact grads (STE)."""
@@ -123,7 +109,8 @@ def _approx_matmul_fwd_impl(x, w, cfg):
     x2 = x.reshape(-1, x.shape[-1])
     qx, sx, scx = quantize_sign_magnitude(x2, cfg.width)
     qw, sw, scw = quantize_sign_magnitude(w, cfg.width, axis=0)
-    acc = _approx_matmul_int(qx, sx, qw, sw, cfg.spec(), cfg.k_chunk)
+    mm = get_op("matmul_emul", cfg.spec(), backend=cfg.backend)
+    acc = mm(qx, sx, qw, sw, k_chunk=cfg.k_chunk)
     out = acc.astype(jnp.float32) * (scx * scw)
     return out.reshape(*lead, w.shape[1]).astype(x.dtype)
 
@@ -164,7 +151,8 @@ def _fixed_point_div(num: jax.Array, den: jax.Array, cfg: ApproxConfig):
         lim = jnp.float32(2 ** w - 1)
         qn = jnp.clip(jnp.round(num * SC), 0, lim).astype(jnp.uint32)
         qd = jnp.clip(jnp.round(den * SC), 1, lim).astype(jnp.uint32)
-    q = simdive_div(qn, qd, spec, frac_out=cfg.frac_out)
+    div = get_op("elemwise", spec, backend=cfg.backend)
+    q = div(qn, qd, op="div", frac_out=cfg.frac_out)
     return q.astype(jnp.float32) / jnp.float32(2 ** cfg.frac_out)
 
 
@@ -216,12 +204,16 @@ def _approx_rmsnorm_impl(x, gamma, eps, cfg):
         #   r  = sqrt(qm)           = sqrt(m) * 2^16
         #   q  = (2^31 / r) * 2^16  = rsqrt(m) * 2^31
         spec = cfg.spec(cfg.div_width)
-        from .simdive import simdive_sqrt
         qm = jnp.maximum(jnp.round((ms + eps) * jnp.float32(2.0 ** 32)), 1.0)
         qm = qm.astype(jnp.uint64)
-        r = jnp.maximum(simdive_sqrt(qm, cfg.div_width), 1)
+        # sqrt has no Pallas impl yet — 'auto' serves it from ref on any host
+        sqrt_op = get_op(
+            "sqrt", spec,
+            backend=cfg.backend if cfg.backend == "ref" else "auto")
+        r = jnp.maximum(sqrt_op(qm), 1)
         one = jnp.full_like(r, jnp.uint64(1) << jnp.uint64(31))
-        q = simdive_div(one, r, spec, frac_out=16)
+        div = get_op("elemwise", spec, backend=cfg.backend)
+        q = div(one, r, op="div", frac_out=16)
         inv = q.astype(jnp.float32) * jnp.float32(2.0 ** -31)
     return (x.astype(jnp.float32) * inv * gamma.astype(jnp.float32)).astype(x.dtype)
 

@@ -6,9 +6,12 @@ added in the same add step (:mod:`repro.core.error_lut`). ``coeff_bits`` is
 the accuracy knob (0 = plain Mitchell); ``index_bits`` widens the table
 (3 = paper's 64 regions, 4 = the 256-region ALM variant of §3.4).
 
-These are the bit-exact *reference semantics*; the Pallas kernels in
-:mod:`repro.kernels` implement the same contract tile-by-tile and are tested
-to match these functions exactly.
+These are the bit-exact *reference semantics*, and they are literally the
+same code as the Pallas kernels in :mod:`repro.kernels`: both compose the
+stage library in :mod:`repro.kernels.datapath` (LOD -> log -> region
+correction -> anti-log), so "kernel matches reference" is structural, not a
+tested coincidence. (datapath imports only :mod:`repro.core.mitchell` /
+:mod:`repro.core.error_lut`, so there is no import cycle.)
 """
 from __future__ import annotations
 
@@ -18,14 +21,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from .mitchell import (
-    frac_bits,
-    mitchell_antilog_div,
-    mitchell_antilog_mul,
-    mitchell_log,
-    work_dtype,
-)
-from .error_lut import region_index, table_for
+from .mitchell import work_dtype
+from .error_lut import table_for
 
 __all__ = ["SimdiveSpec", "simdive_mul", "simdive_div", "simdive_sqrt"]
 
@@ -45,35 +42,26 @@ class SimdiveSpec:
         )
 
 
-def _logs_and_corr(a, b, spec: SimdiveSpec, op: str):
-    dt = work_dtype(spec.width)
-    au, bu = a.astype(dt), b.astype(dt)
-    la, lb = mitchell_log(au, spec.width), mitchell_log(bu, spec.width)
-    F = frac_bits(spec.width)
-    mask = (jnp.asarray(1, dt) << jnp.asarray(F, dt)) - jnp.asarray(1, dt)
-    idx = region_index(la & mask, lb & mask, spec.width, spec.index_bits)
-    tab = table_for(op, spec.width, spec.coeff_bits, spec.index_bits)
-    return au, bu, la, lb, tab[idx]
+def _lane_op(a, b, spec: SimdiveSpec, op: str, frac_out: int = 0):
+    from repro.kernels import datapath as dp
+
+    tab = dp.op_table(op, spec.width, spec.coeff_bits, spec.index_bits)
+    return dp.lane_op(a, b, tab, width=spec.width,
+                      index_bits=spec.index_bits, op=op, frac_out=frac_out,
+                      round_out=spec.round_output)
 
 
 @partial(jax.jit, static_argnames=("spec",))
 def simdive_mul(a: jax.Array, b: jax.Array, spec: SimdiveSpec) -> jax.Array:
     """Corrected approximate product of unsigned ints (< 2^width each)."""
-    au, bu, la, lb, corr = _logs_and_corr(a, b, spec, "mul")
-    p = mitchell_antilog_mul(la, lb, spec.width, corr=corr,
-                             round_out=spec.round_output)
-    return jnp.where((au == 0) | (bu == 0), jnp.zeros_like(p), p)
+    return _lane_op(a, b, spec, "mul")
 
 
 @partial(jax.jit, static_argnames=("spec", "frac_out"))
 def simdive_div(a: jax.Array, b: jax.Array, spec: SimdiveSpec,
                 frac_out: int = 0) -> jax.Array:
     """Corrected approximate quotient ``round_down(a/b * 2^frac_out)``."""
-    au, bu, la, lb, corr = _logs_and_corr(a, b, spec, "div")
-    q = mitchell_antilog_div(la, lb, spec.width, corr=corr,
-                             frac_out=frac_out, round_out=spec.round_output)
-    q = jnp.where(bu == 0, ~jnp.zeros_like(q), q)
-    return jnp.where(au == 0, jnp.zeros_like(q), q)
+    return _lane_op(a, b, spec, "div", frac_out=frac_out)
 
 
 @partial(jax.jit, static_argnames=("width", "frac_out"))
@@ -84,10 +72,12 @@ def simdive_sqrt(a: jax.Array, width: int, frac_out: int = 0) -> jax.Array:
     same datapath gives sqrt for free (``L >> 1``), which we use for
     approximate RMSNorm denominators. Returns round_down(sqrt(a)*2^frac_out).
     """
+    from repro.kernels import datapath as dp
+
     dt = work_dtype(width)
     au = a.astype(dt)
-    la = mitchell_log(au, width)
+    la = dp.lod_log(au, width)
     half = la >> jnp.asarray(1, dt)
-    out = mitchell_antilog_div(half, jnp.zeros_like(half), width,
-                               frac_out=frac_out)
-    return jnp.where(au == 0, jnp.zeros_like(out), out)
+    out = dp.antilog_div(half, jnp.zeros_like(half), width,
+                         frac_out=frac_out, num_zero=au == 0)
+    return out

@@ -1,11 +1,46 @@
 """repro.kernels — Pallas TPU kernels for the SIMDive hot spots.
 
-Three kernels, each with a bit-exact pure-jnp oracle in ref.py:
-  elemwise.py     fused LOD->log->correct->antilog elementwise mul/div/mixed
+Layering (see README.md for the full diagram):
+
+  datapath.py     composable stage library — THE log->correct->antilog
+                  datapath, written once, kernel-safe
+  elemwise.py     fused elementwise mul/div/mixed kernel body
   packed_simd.py  sub-word packed lanes (4x8b / 2x16b per uint32 word)
   logmatmul.py    tiled log-domain approximate matmul (K-innermost grid)
-Public entry points live in ops.py (padding + pallas/ref backend switch).
-"""
-from .ops import simdive_elemwise, simdive_matmul_int, simdive_packed
+  ref.py          bit-exact pure-jnp oracles (same stages, no pallas)
+  registry.py     get_op()/register_op() — backend resolution + block
+                  autotuning + the plug-in point for new ops
+  ops.py          built-in op registration + thin public wrappers
 
-__all__ = ["simdive_elemwise", "simdive_matmul_int", "simdive_packed"]
+Exports resolve lazily (PEP 562) so importing a leaf module (e.g.
+``repro.kernels.datapath`` from repro.core) never drags in the whole op
+surface — that is what keeps the core <-> kernels layering acyclic.
+"""
+from __future__ import annotations
+
+import importlib
+
+_EXPORTS = {
+    "simdive_elemwise": ".ops",
+    "simdive_packed": ".ops",
+    "simdive_matmul_int": ".ops",
+    "get_op": ".registry",
+    "register_op": ".registry",
+    "registered_ops": ".registry",
+    "resolve_backend": ".registry",
+    "autotune_cache": ".registry",
+    "clear_autotune_cache": ".registry",
+}
+
+__all__ = list(_EXPORTS)
+
+
+def __getattr__(name: str):
+    mod = _EXPORTS.get(name)
+    if mod is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    return getattr(importlib.import_module(mod, __name__), name)
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_EXPORTS))

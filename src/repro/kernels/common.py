@@ -1,46 +1,16 @@
-"""Shared in-kernel pieces of the SIMDive datapath.
+"""Legacy shim — the shared datapath stages moved to :mod:`.datapath`.
 
-Kernel bodies reuse the *non-jitted* bit-exact primitives from
-:mod:`repro.core.mitchell` (plain traceable jnp functions). The one thing
-that needs a kernel-specific formulation is the 64-entry coefficient lookup:
-a dynamic gather is awkward on the TPU VPU, so inside kernels the gather is
-expressed as a one-hot dot product — 64 MACs/element that land on the MXU.
-Exact because |coeff| < 2^14 << 2^24 (f32 integer-exact range) for widths
-<= 16; the width-32 path keeps a plain gather (Mosaic supports small-table
-VMEM gathers) and is exercised in interpret mode.
+Kept so external code importing the old names keeps working; new code
+should import from :mod:`repro.kernels.datapath` directly.
 """
 from __future__ import annotations
 
-import jax.numpy as jnp
+from .datapath import (  # noqa: F401
+    corr_lookup,
+    fraction_mask,
+    sign_split as split_sign,
+    tpu_compiler_params,
+)
 
-from repro.core.mitchell import frac_bits
-
-__all__ = ["corr_lookup", "split_sign"]
-
-
-def corr_lookup(idx: jnp.ndarray, tab: jnp.ndarray, width: int) -> jnp.ndarray:
-    """Gather tab[idx] (tab: (T,) int32, idx: any shape int32) -> int32."""
-    T = tab.shape[0]
-    if width <= 16:
-        onehot = (idx[..., None] == jnp.arange(T, dtype=jnp.int32)).astype(
-            jnp.float32
-        )
-        vals = jnp.einsum(
-            "...t,t->...", onehot, tab.astype(jnp.float32),
-            preferred_element_type=jnp.float32,
-        )
-        return vals.astype(jnp.int32)
-    return tab[idx]
-
-
-def split_sign(x: jnp.ndarray, width: int):
-    """Signed int -> (unsigned magnitude, sign in {-1,+1}) for the log lanes."""
-    sign = jnp.where(x < 0, jnp.int32(-1), jnp.int32(1))
-    mag = jnp.abs(x).astype(jnp.uint32)
-    mag = jnp.minimum(mag, jnp.uint32((1 << width) - 1))
-    return mag, sign
-
-
-def fraction_mask(width: int, dtype=jnp.uint32):
-    F = frac_bits(width)
-    return (jnp.asarray(1, dtype) << jnp.asarray(F, dtype)) - jnp.asarray(1, dtype)
+__all__ = ["corr_lookup", "split_sign", "fraction_mask",
+           "tpu_compiler_params"]

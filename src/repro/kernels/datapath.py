@@ -1,0 +1,263 @@
+"""Composable SIMDive datapath stages — the one shared log front-end.
+
+The paper's core claim (and RAPID's, for the pipelined variants) is that a
+single Mitchell log datapath — LOD -> log conversion -> ternary add with a
+64-region correction -> anti-log — serves multiplication, division, SISD and
+SIMD modes alike; only the adder input wiring differs. This module is that
+claim expressed as code: every kernel body (`elemwise`, `packed_simd`,
+`logmatmul`) and every pure-jnp oracle (`ref`) composes the *same* stage
+functions, so the datapath exists exactly once.
+
+Stage map (FPGA block -> function):
+
+    LOD + log conversion            lod_log
+    region index + coefficient LUT  region_corr        (corr_lookup inside)
+    ternary add + anti-log, mul     antilog_mul
+    ternary add + anti-log, div     antilog_div
+    sign XOR network                sign_split / sign_join
+    sub-word lane wiring            lane_expand / lane_repack
+    whole SISD unit (Fig. 2b)       lane_op            (composes the above)
+
+Every function is plain traceable jnp on values already in registers/VMEM —
+no jit, no pallas_call, no host logic — so identical code runs inside a
+compiled Pallas kernel body, under the Pallas interpreter, and as the
+bit-exact reference oracle. The underlying integer primitives come from
+:mod:`repro.core.mitchell`; this module must never import
+:mod:`repro.core.simdive` (which itself builds on these stages).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.error_lut import region_index, table_for
+from repro.core.mitchell import (
+    frac_bits,
+    mitchell_antilog_div,
+    mitchell_antilog_mul,
+    mitchell_log,
+    work_dtype,
+)
+
+__all__ = [
+    "fraction_mask",
+    "lod_log",
+    "corr_lookup",
+    "region_corr",
+    "split_tables",
+    "op_table",
+    "antilog_mul",
+    "antilog_div",
+    "sign_split",
+    "sign_join",
+    "lane_expand",
+    "lane_repack",
+    "lane_op",
+    "tpu_compiler_params",
+]
+
+
+# ------------------------------------------------------------- front end --
+def fraction_mask(width: int, dtype=jnp.uint32):
+    """Mask selecting the F-bit fraction field of a log value."""
+    F = frac_bits(width)
+    return (jnp.asarray(1, dtype) << jnp.asarray(F, dtype)) - jnp.asarray(1, dtype)
+
+
+def lod_log(a: jnp.ndarray, width: int) -> jnp.ndarray:
+    """Stage 1: LOD + log conversion, ``L = (k << F) | x_fp``.
+
+    Input must already be in the lane work dtype (uint32 for widths <= 16).
+    """
+    return mitchell_log(a, width)
+
+
+# ------------------------------------------------------------ correction --
+def corr_lookup(idx: jnp.ndarray, tab: jnp.ndarray, width: int) -> jnp.ndarray:
+    """Gather ``tab[idx]`` (tab: (T,) int32, idx: any shape int32) -> int32.
+
+    A dynamic gather is awkward on the TPU VPU, so for widths <= 16 the
+    gather is expressed as a one-hot dot product — 64 MACs/element that land
+    on the MXU. Exact because |coeff| < 2^14 << 2^24 (f32 integer-exact
+    range); the width-32 path keeps a plain gather (Mosaic supports small
+    VMEM table gathers) and is exercised in interpret mode.
+    """
+    T = tab.shape[0]
+    if width <= 16:
+        onehot = (idx[..., None] == jnp.arange(T, dtype=jnp.int32)).astype(
+            jnp.float32
+        )
+        vals = jnp.einsum(
+            "...t,t->...", onehot, tab.astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+        return vals.astype(jnp.int32)
+    return tab[idx]
+
+
+def region_corr(la: jnp.ndarray, lb: jnp.ndarray, tab: jnp.ndarray,
+                width: int, index_bits: int = 3,
+                gate: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Stage 2: region index from both log fractions + coefficient lookup.
+
+    ``gate`` (optional bool array): zero-detection — a False lane gets a
+    zero coefficient, mirroring the FPGA's zero-flag bypass of the LUT.
+    """
+    m = fraction_mask(width, la.dtype)
+    idx = region_index(la & m, lb & m, width, index_bits)
+    corr = corr_lookup(idx, tab, width)
+    if gate is not None:
+        corr = jnp.where(gate, corr, jnp.zeros_like(corr))
+    return corr
+
+
+def split_tables(tab: jnp.ndarray, index_bits: int, op: str):
+    """Mixed-functionality table wiring: '[mul | div]' -> per-half views."""
+    if op != "mixed":
+        return tab, tab
+    T = 1 << (2 * index_bits)
+    return tab[:T], tab[T:]
+
+
+def op_table(op: str, width: int, coeff_bits: int,
+             index_bits: int = 3) -> jnp.ndarray:
+    """Materialize the coefficient table an op needs ('mixed' -> [mul|div])."""
+    if op == "mixed":
+        return jnp.concatenate([
+            table_for("mul", width, coeff_bits, index_bits),
+            table_for("div", width, coeff_bits, index_bits),
+        ])
+    return table_for(op, width, coeff_bits, index_bits)
+
+
+# -------------------------------------------------------------- anti-log --
+def antilog_mul(la: jnp.ndarray, lb: jnp.ndarray, width: int,
+                corr: jnp.ndarray | None = None, round_out: bool = False,
+                zero: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Stage 3a: ternary add + product anti-log, with zero-flag bypass.
+
+    ``zero`` marks lanes where either operand is 0 (x * 0 = 0).
+    """
+    p = mitchell_antilog_mul(la, lb, width, corr=corr, round_out=round_out)
+    if zero is not None:
+        p = jnp.where(zero, jnp.zeros_like(p), p)
+    return p
+
+
+def antilog_div(la: jnp.ndarray, lb: jnp.ndarray, width: int,
+                corr: jnp.ndarray | None = None, frac_out: int = 0,
+                round_out: bool = False,
+                num_zero: jnp.ndarray | None = None,
+                den_zero: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Stage 3b: ternary subtract + quotient anti-log, with zero flags.
+
+    x / 0 saturates to the all-ones bus value (divider-IP overflow-flag
+    convention); 0 / x = 0 — applied in that order so 0 / 0 = 0.
+    """
+    q = mitchell_antilog_div(la, lb, width, corr=corr, frac_out=frac_out,
+                             round_out=round_out)
+    if den_zero is not None:
+        q = jnp.where(den_zero, ~jnp.zeros_like(q), q)
+    if num_zero is not None:
+        q = jnp.where(num_zero, jnp.zeros_like(q), q)
+    return q
+
+
+# ------------------------------------------------------------------ signs --
+def sign_split(x: jnp.ndarray, width: int):
+    """Signed int -> (unsigned magnitude clamped to the lane, sign {-1,+1}).
+
+    The log datapath is unsigned; signs travel outside it and are XORed
+    back on at the output, like every sign-magnitude log multiplier.
+    """
+    sign = jnp.where(x < 0, jnp.int32(-1), jnp.int32(1))
+    mag = jnp.abs(x).astype(jnp.uint32)
+    mag = jnp.minimum(mag, jnp.uint32((1 << width) - 1))
+    return mag, sign
+
+
+def sign_join(mag: jnp.ndarray, sign: jnp.ndarray) -> jnp.ndarray:
+    """Reattach an XORed sign product to an unsigned datapath result."""
+    return mag.astype(sign.dtype) * sign
+
+
+# ------------------------------------------------------------ lane wiring --
+def lane_expand(words: jnp.ndarray, width: int) -> list[jnp.ndarray]:
+    """Split packed uint32 words into their sub-word lanes (little-endian).
+
+    A word's nibbles *are* its lanes' nibbles, so this is one masked shift
+    cascade over the whole tile — the software rendition of the FPGA's
+    shared nibble LODs.
+    """
+    lpw = 32 // width
+    mask = jnp.uint32((1 << width) - 1)
+    return [(words >> jnp.uint32(width * i)) & mask for i in range(lpw)]
+
+
+def lane_repack(lanes: list[jnp.ndarray], owidth: int) -> jnp.ndarray:
+    """Repack 2w-bit lane results into uint32 words on the doubled bus.
+
+    Little-endian lane order, interleaved along the last axis: for 8-bit
+    inputs, lanes (0, 1) -> output word 2k and lanes (2, 3) -> word 2k+1.
+    ``owidth >= 32`` degenerates to one result per output word.
+    """
+    olpw = max(32 // owidth, 1)
+    omask = jnp.uint32((1 << min(owidth, 32)) - 1)
+    nw_out = len(lanes) // olpw
+    words = []
+    for j in range(nw_out):
+        w = jnp.zeros_like(lanes[0])
+        for i in range(olpw):
+            w = w | ((lanes[j * olpw + i] & omask) << jnp.uint32(owidth * i))
+        words.append(w)
+    lead = lanes[0].shape[:-1]
+    return jnp.stack(words, axis=-1).reshape(*lead, -1)
+
+
+# -------------------------------------------------------- composed SISD --
+def lane_op(a: jnp.ndarray, b: jnp.ndarray, tab: jnp.ndarray, *, width: int,
+            index_bits: int = 3, op: str = "mul", frac_out: int = 0,
+            mode: jnp.ndarray | None = None,
+            round_out: bool = False) -> jnp.ndarray:
+    """One full SIMDive SISD unit (Fig. 2b): the canonical stage composition.
+
+    ``op``: 'mul' | 'div' | 'mixed'. For 'mixed', ``tab`` is the
+    concatenated [mul | div] table pair (see :func:`op_table`) and ``mode``
+    selects per element (nonzero => mul) — both halves share the LOD + log
+    front-end exactly like the hardware shares everything but the adder's
+    2's-complement input. Results come back in the lane work dtype;
+    zero semantics: x*0 = 0, x/0 = max, 0/x = 0.
+    """
+    dt = work_dtype(width)
+    a = a.astype(dt)
+    b = b.astype(dt)
+    la = lod_log(a, width)
+    lb = lod_log(b, width)
+    nz = (a != 0) & (b != 0)
+    tab_m, tab_d = split_tables(tab, index_bits, op)
+    if op in ("mul", "mixed"):
+        cm = region_corr(la, lb, tab_m, width, index_bits, gate=nz)
+        p = antilog_mul(la, lb, width, corr=cm, round_out=round_out,
+                        zero=~nz)
+    if op in ("div", "mixed"):
+        cd = region_corr(la, lb, tab_d, width, index_bits, gate=nz)
+        q = antilog_div(la, lb, width, corr=cd, frac_out=frac_out,
+                        round_out=round_out, num_zero=a == 0,
+                        den_zero=b == 0)
+    if op == "mul":
+        return p
+    if op == "div":
+        return q
+    if op != "mixed":
+        raise ValueError(f"op must be 'mul' | 'div' | 'mixed', got {op!r}")
+    return jnp.where(mode != 0, p, q)
+
+
+# ------------------------------------------------------------ host compat --
+def tpu_compiler_params(**kwargs):
+    """jax-version-portable ``pltpu.CompilerParams`` (renamed across jax
+    releases: TPUCompilerParams <= 0.4.x, CompilerParams afterwards)."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    cls = getattr(pltpu, "CompilerParams", None) \
+        or getattr(pltpu, "TPUCompilerParams")
+    return cls(**kwargs)

@@ -1,10 +1,12 @@
 """Fused SIMDive element-wise multiplier/divider — Pallas TPU kernel.
 
-One `pallas_call` fuses: segmented LOD -> log conversion -> region index ->
-coefficient add (the "ternary add") -> anti-log, for a whole VMEM tile.
-This is the TPU rendition of the SIMDive SISD unit of Fig. 2(b): on an FPGA
-the win is LUT/carry-chain reuse; here it is a single HBM round-trip for the
-whole approximate op (vs. log/add/antilog as separate XLA ops).
+One `pallas_call` fuses the whole datapath — segmented LOD -> log conversion
+-> region index -> coefficient add (the "ternary add") -> anti-log — for a
+whole VMEM tile. This is the TPU rendition of the SIMDive SISD unit of
+Fig. 2(b): on an FPGA the win is LUT/carry-chain reuse; here it is a single
+HBM round-trip for the whole approximate op (vs. log/add/antilog as separate
+XLA ops). The datapath itself is :func:`repro.kernels.datapath.lane_op` —
+the same stage composition the oracle and every other kernel use.
 
 Tiles are (block_m, block_n) in VMEM; the 64-entry coefficient table rides
 along replicated to every grid step (it is 256 bytes — SMEM-sized).
@@ -20,15 +22,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.error_lut import region_index
-from repro.core.mitchell import (
-    frac_bits,
-    mitchell_antilog_div,
-    mitchell_antilog_mul,
-    mitchell_log,
-)
 from repro.core.simdive import SimdiveSpec
-from .common import corr_lookup, fraction_mask
+from . import datapath as dp
 
 __all__ = ["elemwise_pallas"]
 
@@ -37,43 +32,13 @@ DEFAULT_BLOCK = (256, 512)
 
 def _kernel(a_ref, b_ref, tab_ref, mode_ref, o_ref, *, spec: SimdiveSpec,
             op: str, frac_out: int):
-    width = spec.width
-    a = a_ref[...]
-    b = b_ref[...]
-    la = mitchell_log(a, width)
-    lb = mitchell_log(b, width)
-    m = fraction_mask(width, a.dtype)
-    idx = region_index(la & m, lb & m, width, spec.index_bits)
-    tab = tab_ref[...]
-    T = 1 << (2 * spec.index_bits)
-    if op == "mixed":  # concatenated [mul | div] tables, one lookup each
-        corr_m = corr_lookup(idx, tab[:T], width)
-        corr_d = corr_lookup(idx, tab[T:], width)
-    else:
-        corr_m = corr_d = corr_lookup(idx, tab, width)
-    nz = (a != 0) & (b != 0)
-    corr_m = jnp.where(nz, corr_m, jnp.int32(0))
-    corr_d = jnp.where(nz, corr_d, jnp.int32(0))
-
-    def do_mul():
-        p = mitchell_antilog_mul(la, lb, width, corr=corr_m,
-                                 round_out=spec.round_output)
-        return jnp.where((a == 0) | (b == 0), jnp.zeros_like(p), p)
-
-    def do_div():
-        q = mitchell_antilog_div(la, lb, width, corr=corr_d,
-                                 frac_out=frac_out,
-                                 round_out=spec.round_output)
-        q = jnp.where(b == 0, ~jnp.zeros_like(q), q)
-        return jnp.where(a == 0, jnp.zeros_like(q), q)
-
-    if op == "mul":
-        o_ref[...] = do_mul()
-    elif op == "div":
-        o_ref[...] = do_div()
-    else:  # mixed: shared front-end, per-element functionality select
-        mode = mode_ref[...]
-        o_ref[...] = jnp.where(mode != 0, do_mul(), do_div())
+    mode = mode_ref[...] if op == "mixed" else None
+    out = dp.lane_op(
+        a_ref[...], b_ref[...], tab_ref[...], width=spec.width,
+        index_bits=spec.index_bits, op=op, frac_out=frac_out, mode=mode,
+        round_out=spec.round_output,
+    )
+    o_ref[...] = out.astype(o_ref.dtype)
 
 
 @functools.partial(
@@ -93,14 +58,7 @@ def elemwise_pallas(a, b, spec: SimdiveSpec, op: str = "mul",
     bm, bn = min(block[0], M), min(block[1], N)
     assert M % bm == 0 and N % bn == 0, "ops.py pads to block multiples"
     grid = (M // bm, N // bn)
-    tab_m, tab_d = spec.tables()
-    tab = tab_m if op == "mul" else tab_d
-    if op == "mixed":
-        # mixed mode uses both tables glued [mul | div]; corr_lookup offsets
-        # are handled by passing the right half via the mode select below —
-        # simplest exact approach: two lookups, one table each. We pass the
-        # concatenated table and let the kernel look up both halves.
-        tab = jnp.concatenate([tab_m, tab_d])
+    tab = dp.op_table(op, spec.width, spec.coeff_bits, spec.index_bits)
     if mode is None:
         mode = jnp.zeros_like(a)
 

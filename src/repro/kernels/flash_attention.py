@@ -31,6 +31,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.error_lut import build_table
+from .datapath import tpu_compiler_params
 
 __all__ = ["flash_attention_pallas", "kernel_div_u32"]
 
@@ -175,7 +176,7 @@ def flash_attention_pallas(q, k, v, *, causal=True, window=0, q_chunk=512,
             pltpu.VMEM((qc,), jnp.float32),
             pltpu.VMEM((qc, dh), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(q, k, v, tab)

@@ -6,8 +6,11 @@ Grid (M/bm, N/bn, K/bk) with the K axis innermost ("arbitrary" semantics):
 each step loads an (bm, bk) X-tile and (bk, bn) W-tile into VMEM, walks the
 bk slice with a fori_loop producing rank-1 outer "products" in the log
 domain (one vector add + anti-log shift per element — no MXU multiply), and
-accumulates int32 partials straight into the output tile. Signs are XORed
-outside the log path, standard for sign-magnitude log arithmetic.
+accumulates int32 partials straight into the output tile. Signs are split
+and rejoined outside the log path via the shared
+:mod:`repro.kernels.datapath` sign stages, standard for sign-magnitude log
+arithmetic; the log front-end runs *once* per tile, outside the K loop —
+only the correction + anti-log stages ride the rank-1 sweep.
 
 VMEM budget per step: bm*bk + bk*bn input words + bm*bn accumulator —
 (128, 128, 128) int32 = 3 * 64 KiB, far under the ~16 MiB/core budget; the
@@ -27,12 +30,9 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.error_lut import region_index
-from repro.core.mitchell import mitchell_antilog_mul, mitchell_log
 from repro.core.simdive import SimdiveSpec
-from .common import corr_lookup, fraction_mask
+from . import datapath as dp
 
 __all__ = ["logmatmul_pallas"]
 
@@ -41,33 +41,25 @@ DEFAULT_BLOCKS = (128, 128, 128)  # (bm, bn, bk)
 
 def _kernel(x_ref, w_ref, tab_ref, o_ref, *, spec: SimdiveSpec, bk: int):
     width = spec.width
-    x = x_ref[...]                           # (bm, bk) int32 (signed)
-    w = w_ref[...]                           # (bk, bn) int32 (signed)
     tab = tab_ref[...]
-    m = fraction_mask(width)
-
-    xm = jnp.minimum(jnp.abs(x).astype(jnp.uint32), jnp.uint32((1 << width) - 1))
-    wm = jnp.minimum(jnp.abs(w).astype(jnp.uint32), jnp.uint32((1 << width) - 1))
-    lx = mitchell_log(xm, width)             # (bm, bk)
-    lw = mitchell_log(wm, width)             # (bk, bn)
-    sx = jnp.where(x < 0, jnp.int32(-1), jnp.int32(1))
-    sw = jnp.where(w < 0, jnp.int32(-1), jnp.int32(1))
+    xm, sx = dp.sign_split(x_ref[...], width)       # (bm, bk) magnitudes
+    wm, sw = dp.sign_split(w_ref[...], width)       # (bk, bn)
+    lx = dp.lod_log(xm, width)
+    lw = dp.lod_log(wm, width)
     zx = xm == 0
     zw = wm == 0
 
     def body(j, acc):
         la = jax.lax.dynamic_slice_in_dim(lx, j, 1, axis=1)      # (bm, 1)
         lb = jax.lax.dynamic_slice_in_dim(lw, j, 1, axis=0)      # (1, bn)
-        idx = region_index(la & m, lb & m, width, spec.index_bits)
-        corr = corr_lookup(idx, tab, width)
-        p = mitchell_antilog_mul(la, lb, width, corr=corr,
-                                 round_out=spec.round_output)
-        s = (jax.lax.dynamic_slice_in_dim(sx, j, 1, axis=1)
-             * jax.lax.dynamic_slice_in_dim(sw, j, 1, axis=0))
+        corr = dp.region_corr(la, lb, tab, width, spec.index_bits)
         zj = (jax.lax.dynamic_slice_in_dim(zx, j, 1, axis=1)
               | jax.lax.dynamic_slice_in_dim(zw, j, 1, axis=0))
-        contrib = jnp.where(zj, jnp.int32(0), p.astype(jnp.int32) * s)
-        return acc + contrib
+        p = dp.antilog_mul(la, lb, width, corr=corr,
+                           round_out=spec.round_output, zero=zj)
+        s = (jax.lax.dynamic_slice_in_dim(sx, j, 1, axis=1)
+             * jax.lax.dynamic_slice_in_dim(sw, j, 1, axis=0))
+        return acc + dp.sign_join(p, s)
 
     partial_sum = jax.lax.fori_loop(
         0, bk, body, jnp.zeros(o_ref.shape, jnp.int32)
@@ -96,7 +88,7 @@ def logmatmul_pallas(x, w, spec: SimdiveSpec, blocks=DEFAULT_BLOCKS,
     bm, bn, bk = (min(blocks[0], M), min(blocks[1], N), min(blocks[2], K))
     assert M % bm == 0 and N % bn == 0 and K % bk == 0
     grid = (M // bm, N // bn, K // bk)
-    tab, _ = spec.tables()
+    tab = dp.op_table("mul", spec.width, spec.coeff_bits, spec.index_bits)
     kern = functools.partial(_kernel, spec=spec, bk=bk)
     return pl.pallas_call(
         kern,
@@ -109,7 +101,7 @@ def logmatmul_pallas(x, w, spec: SimdiveSpec, blocks=DEFAULT_BLOCKS,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((M, N), jnp.int32),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=dp.tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
     )(x, w, tab)

@@ -1,36 +1,29 @@
-"""Public jit'd entry points for the SIMDive kernels.
+"""Built-in SIMDive ops: registration + thin public entry points.
 
-Handles shape normalization (flatten to 2D, pad to block multiples) and the
-backend switch:
-  * 'pallas'    — the Pallas kernels (interpret=True off-TPU, compiled on TPU)
-  * 'ref'       — the pure-jnp oracles
-  * 'auto'      — pallas on TPU, ref elsewhere (models/benches default; the
-                  interpret-mode kernels are for validation, not speed)
+Each op registers two implementations with :mod:`repro.kernels.registry`:
+a pure-jnp reference (the bit-exact oracle from ref.py) and, where one
+exists, the Pallas kernel. The impls own shape normalization (flatten to
+2D, pad to block multiples); everything else — backend resolution, block
+autotuning, dispatch — lives in the registry.
+
+The public wrappers (``simdive_elemwise`` / ``simdive_packed`` /
+``simdive_matmul_int``) keep their historical signatures and are now
+one-line shims over ``get_op``; model code (:mod:`repro.core.approx`)
+dispatches through the registry directly.
 """
 from __future__ import annotations
-
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.simdive import SimdiveSpec
+from repro.core.simdive import SimdiveSpec, simdive_mul
 from . import ref as _ref
-from .elemwise import elemwise_pallas
-from .logmatmul import logmatmul_pallas
-from .packed_simd import packed_pallas
+from .elemwise import DEFAULT_BLOCK as ELEMWISE_BLOCK, elemwise_pallas
+from .logmatmul import DEFAULT_BLOCKS as MATMUL_BLOCKS, logmatmul_pallas
+from .packed_simd import DEFAULT_BLOCK as PACKED_BLOCK, packed_pallas
+from .registry import get_op, register_op
 
 __all__ = ["simdive_elemwise", "simdive_packed", "simdive_matmul_int"]
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
-def _resolve(backend: str) -> str:
-    if backend == "auto":
-        return "pallas" if _on_tpu() else "ref"
-    return backend
 
 
 def _pad2d(x, bm, bn, fill=0):
@@ -41,72 +34,174 @@ def _pad2d(x, bm, bn, fill=0):
     return x
 
 
-def simdive_elemwise(a, b, spec: SimdiveSpec, op: str = "mul", mode=None,
-                     frac_out: int = 0, backend: str = "auto",
-                     block=(256, 512)):
-    """Elementwise SIMDive mul/div/mixed over same-shape uint arrays."""
-    backend = _resolve(backend)
+def _as2d(x):
+    return x.reshape(1, -1) if x is not None and x.ndim != 2 else x
+
+
+# --------------------------------------------------------------- elemwise --
+def _elemwise_ref(a, b, *, spec, op="mul", mode=None, frac_out=0):
     shape = a.shape
-    a2 = a.reshape(1, -1) if a.ndim != 2 else a
-    b2 = b.reshape(1, -1) if b.ndim != 2 else b
-    m2 = None
-    if mode is not None:
-        m2 = mode.reshape(1, -1) if mode.ndim != 2 else mode
-    if backend == "ref":
-        out = _ref.elemwise_ref(a2, b2, spec, op=op, mode=m2,
-                                frac_out=frac_out)
-        return out.reshape(shape)
+    out = _ref.elemwise_ref(_as2d(a), _as2d(b), spec, op=op,
+                            mode=_as2d(mode), frac_out=frac_out)
+    return out.reshape(shape)
+
+
+def _elemwise_pallas(a, b, *, spec, block, interpret, op="mul", mode=None,
+                     frac_out=0):
+    shape = a.shape
+    a2, b2, m2 = _as2d(a), _as2d(b), _as2d(mode)
     M, N = a2.shape
     bm, bn = min(block[0], M), min(block[1], N)
     ap = _pad2d(a2, bm, bn)
     bp = _pad2d(b2, bm, bn, fill=1)     # avoid div-by-zero in the pad region
     mp = _pad2d(m2, bm, bn) if m2 is not None else None
     out = elemwise_pallas(ap, bp, spec, op=op, mode=mp, frac_out=frac_out,
-                          block=(bm, bn), interpret=not _on_tpu())
+                          block=(bm, bn), interpret=interpret)
     return out[:M, :N].reshape(shape)
 
 
-def simdive_packed(aw, bw, spec: SimdiveSpec, op: str = "mul", mode=None,
-                   frac_out: int = 0, backend: str = "auto",
-                   block=(128, 256)):
-    """Packed-lane SIMDive over uint32 word tensors (last dim = words)."""
-    backend = _resolve(backend)
+# ----------------------------------------------------------------- packed --
+def _packed_ref(aw, bw, *, spec, op="mul", mode=None, frac_out=0):
     shape = aw.shape
-    a2 = aw.reshape(1, -1) if aw.ndim != 2 else aw
-    b2 = bw.reshape(1, -1) if bw.ndim != 2 else bw
-    m2 = None
-    if mode is not None:
-        m2 = mode.reshape(1, -1) if mode.ndim != 2 else mode
-    if backend == "ref":
-        out = _ref.packed_ref(a2, b2, spec, op=op, mode=m2, frac_out=frac_out)
-    else:
-        M, N = a2.shape
-        bm, bn = min(block[0], M), min(block[1], N)
-        ap = _pad2d(a2, bm, bn)
-        # pad words with lanes == 1 to keep the div path well-defined
-        one_word = sum(1 << (spec.width * i) for i in range(32 // spec.width))
-        bp = _pad2d(b2, bm, bn, fill=one_word)
-        mp = _pad2d(m2, bm, bn) if m2 is not None else None
-        out = packed_pallas(ap, bp, spec, op=op, mode=mp, frac_out=frac_out,
-                            block=(bm, bn), interpret=not _on_tpu())
-        out = out[:M, : 2 * N]
+    out = _ref.packed_ref(_as2d(aw), _as2d(bw), spec, op=op,
+                          mode=_as2d(mode), frac_out=frac_out)
     return out.reshape(*shape[:-1], 2 * shape[-1])
 
 
-def simdive_matmul_int(x, w, spec: SimdiveSpec, backend: str = "auto",
-                       blocks=(128, 128, 128)):
-    """Signed int32 (…,K) @ (K,N) with SIMDive products (int32 result)."""
-    backend = _resolve(backend)
+def _packed_pallas(aw, bw, *, spec, block, interpret, op="mul", mode=None,
+                   frac_out=0):
+    shape = aw.shape
+    a2, b2, m2 = _as2d(aw), _as2d(bw), _as2d(mode)
+    M, N = a2.shape
+    bm, bn = min(block[0], M), min(block[1], N)
+    ap = _pad2d(a2, bm, bn)
+    # pad words with lanes == 1 to keep the div path well-defined
+    one_word = sum(1 << (spec.width * i) for i in range(32 // spec.width))
+    bp = _pad2d(b2, bm, bn, fill=one_word)
+    mp = _pad2d(m2, bm, bn) if m2 is not None else None
+    out = packed_pallas(ap, bp, spec, op=op, mode=mp, frac_out=frac_out,
+                        block=(bm, bn), interpret=interpret)
+    return out[:M, : 2 * N].reshape(*shape[:-1], 2 * shape[-1])
+
+
+# ------------------------------------------------------------- matmul_int --
+def _matmul_int_ref(x, w, *, spec):
+    lead = x.shape[:-1]
+    out = _ref.logmatmul_ref(x.reshape(-1, x.shape[-1]), w, spec)
+    return out.reshape(*lead, w.shape[1])
+
+
+def _matmul_int_pallas(x, w, *, spec, block, interpret):
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
-    if backend == "ref":
-        out = _ref.logmatmul_ref(x2, w, spec)
-        return out.reshape(*lead, w.shape[1])
     M, K = x2.shape
     N = w.shape[1]
-    bm, bn, bk = min(blocks[0], M), min(blocks[1], N), min(blocks[2], K)
+    bm, bn, bk = min(block[0], M), min(block[1], N), min(block[2], K)
     xp = _pad2d(x2, bm, bk)
     wp = _pad2d(w, bk, bn)
     out = logmatmul_pallas(xp, wp, spec, blocks=(bm, bn, bk),
-                           interpret=not _on_tpu())
+                           interpret=interpret)
     return out[:M, :N].reshape(*lead, N)
+
+
+# ------------------------------------------------------------ matmul_emul --
+def _matmul_emul_ref(qx, sx, qw, sw, *, spec, k_chunk=128):
+    """Integer core of the model-facing emulated matmul: (M,K)x(K,N) with
+    SIMDive scalar products, K-chunked so the (M, Kc, N) product tensor
+    stays small; int64 accumulation (bit-exact seed semantics)."""
+    M, K = qx.shape
+    N = qw.shape[1]
+    pad = (-K) % k_chunk
+    if pad:
+        qx = jnp.pad(qx, ((0, 0), (0, pad)))
+        sx = jnp.pad(sx, ((0, 0), (0, pad)), constant_values=1)
+        qw = jnp.pad(qw, ((0, pad), (0, 0)))
+        sw = jnp.pad(sw, ((0, pad), (0, 0)), constant_values=1)
+    nc = (K + pad) // k_chunk
+    qxc = qx.reshape(M, nc, k_chunk).transpose(1, 0, 2)
+    sxc = sx.reshape(M, nc, k_chunk).transpose(1, 0, 2)
+    qwc = qw.reshape(nc, k_chunk, N)
+    swc = sw.reshape(nc, k_chunk, N)
+
+    def body(acc, inp):
+        qxk, sxk, qwk, swk = inp
+        p = simdive_mul(qxk[:, :, None], qwk[None, :, :], spec)  # (M,Kc,N)
+        s = sxk[:, :, None] * swk[None, :, :]
+        acc = acc + jnp.sum(p.astype(jnp.int64) * s.astype(jnp.int64), axis=1)
+        return acc, None
+
+    acc0 = jnp.zeros((M, N), jnp.int64)
+    acc, _ = jax.lax.scan(body, acc0, (qxc, sxc, qwc, swc))
+    return acc
+
+
+def _matmul_emul_pallas(qx, sx, qw, sw, *, spec, block, interpret,
+                        k_chunk=128):
+    """TPU path of the emulated matmul: recombine signs and run the tiled
+    log-domain kernel. Accumulates in int32 (exact for width 8 / bounded K;
+    the int64 reference is the accuracy-study oracle)."""
+    del k_chunk  # the kernel's K-tiling replaces the host-side chunking
+    x = qx.astype(jnp.int32) * sx
+    w = qw.astype(jnp.int32) * sw
+    return _matmul_int_pallas(x, w, spec=spec, block=block,
+                              interpret=interpret).astype(jnp.int64)
+
+
+# ------------------------------------------------------------------- sqrt --
+def _sqrt_ref(a, *, spec, frac_out=0):
+    from repro.core.simdive import simdive_sqrt
+
+    return simdive_sqrt(a, spec.width, frac_out=frac_out)
+
+
+# ----------------------------------------------------------- registration --
+register_op(
+    "elemwise",
+    ref=_elemwise_ref,
+    pallas=_elemwise_pallas,
+    default_block=ELEMWISE_BLOCK,
+    block_candidates=((128, 256), (256, 512), (512, 512)),
+)
+register_op(
+    "packed",
+    ref=_packed_ref,
+    pallas=_packed_pallas,
+    default_block=PACKED_BLOCK,
+    block_candidates=((64, 128), (128, 256), (256, 256)),
+)
+register_op(
+    "matmul_int",
+    ref=_matmul_int_ref,
+    pallas=_matmul_int_pallas,
+    default_block=MATMUL_BLOCKS,
+    block_candidates=((128, 128, 128), (64, 128, 256)),
+)
+register_op(
+    "matmul_emul",
+    ref=_matmul_emul_ref,
+    pallas=_matmul_emul_pallas,
+    default_block=MATMUL_BLOCKS,
+    block_candidates=((128, 128, 128), (64, 128, 256)),
+)
+register_op("sqrt", ref=_sqrt_ref)   # Pallas impl: future PR, plugs in here
+
+
+# ------------------------------------------------------------- public API --
+def simdive_elemwise(a, b, spec: SimdiveSpec, op: str = "mul", mode=None,
+                     frac_out: int = 0, backend: str = "auto", block=None):
+    """Elementwise SIMDive mul/div/mixed over same-shape uint arrays."""
+    return get_op("elemwise", spec, backend, block=block)(
+        a, b, op=op, mode=mode, frac_out=frac_out)
+
+
+def simdive_packed(aw, bw, spec: SimdiveSpec, op: str = "mul", mode=None,
+                   frac_out: int = 0, backend: str = "auto", block=None):
+    """Packed-lane SIMDive over uint32 word tensors (last dim = words)."""
+    return get_op("packed", spec, backend, block=block)(
+        aw, bw, op=op, mode=mode, frac_out=frac_out)
+
+
+def simdive_matmul_int(x, w, spec: SimdiveSpec, backend: str = "auto",
+                       blocks=None):
+    """Signed int32 (…,K) @ (K,N) with SIMDive products (int32 result)."""
+    return get_op("matmul_int", spec, backend, block=blocks)(x, w)

@@ -6,9 +6,12 @@ expanded inside VMEM. For memory-bound layers this divides the memory
 roofline term by ~4 — the TPU equivalent of the paper's "coalescing multiple
 memory accesses".
 
-The in-kernel lane expansion shares one front-end over all lanes the same
-way the FPGA shares nibble LODs: a uint32 word's nibbles *are* its lanes'
-nibbles, so the unpack+LOD is one masked shift cascade over the whole tile.
+The kernel body is pure wiring: :func:`repro.kernels.datapath.lane_expand`
+splits the word tile into lanes, each lane runs the one shared SISD datapath
+(:func:`~repro.kernels.datapath.lane_op` — identical composition to the
+elemwise kernel and the oracle), and
+:func:`~repro.kernels.datapath.lane_repack` interleaves the doubled-width
+results back onto the output bus.
 
 Outputs:
   * mul:  products are 16-bit, repacked 2 lanes/word -> (M, 2*Nw) words
@@ -23,76 +26,31 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.error_lut import region_index
-from repro.core.mitchell import (
-    mitchell_antilog_div,
-    mitchell_antilog_mul,
-    mitchell_log,
-)
 from repro.core.simdive import SimdiveSpec
-from .common import corr_lookup, fraction_mask
+from . import datapath as dp
 
 __all__ = ["packed_pallas"]
 
 DEFAULT_BLOCK = (128, 256)
 
 
-def _lane(w, i, width):
-    return (w >> jnp.uint32(width * i)) & jnp.uint32((1 << width) - 1)
-
-
 def _kernel(a_ref, b_ref, tab_ref, mode_ref, o_ref, *, spec: SimdiveSpec,
             op: str, frac_out: int):
     width = spec.width                      # 8 (4 lanes) or 16 (2 lanes)
-    lpw = 32 // width
-    aw = a_ref[...]
-    bw = b_ref[...]
     tab = tab_ref[...]
-    T = 1 << (2 * spec.index_bits)
-    m = fraction_mask(width)
-    outs = []
-    for i in range(lpw):                    # lane-parallel datapath
-        a = _lane(aw, i, width)
-        b = _lane(bw, i, width)
-        la = mitchell_log(a, width)
-        lb = mitchell_log(b, width)
-        idx = region_index(la & m, lb & m, width, spec.index_bits)
-        nz = (a != 0) & (b != 0)
-        if op == "mixed":
-            cm = jnp.where(nz, corr_lookup(idx, tab[:T], width), 0)
-            cd = jnp.where(nz, corr_lookup(idx, tab[T:], width), 0)
-        else:
-            cm = cd = jnp.where(nz, corr_lookup(idx, tab, width), 0)
-
-        p = mitchell_antilog_mul(la, lb, width, corr=cm,
-                                 round_out=spec.round_output)
-        p = jnp.where((a == 0) | (b == 0), jnp.zeros_like(p), p)
-        q = mitchell_antilog_div(la, lb, width, corr=cd, frac_out=frac_out,
-                                 round_out=spec.round_output)
-        q = jnp.where(b == 0, ~jnp.zeros_like(q), q)
-        q = jnp.where(a == 0, jnp.zeros_like(q), q)
-        if op == "mul":
-            lane_out = p
-        elif op == "div":
-            lane_out = q
-        else:
-            mode_i = _lane(mode_ref[...], i, width)
-            lane_out = jnp.where(mode_i != 0, p, q)
-        omask = jnp.uint32((1 << min(2 * width, 32)) - 1)
-        outs.append(lane_out & omask)                # 2w-bit lane results
-
-    # repack: lanes (0,1) -> output word 2k, lanes (2,3) -> word 2k+1
-    owidth = 2 * width
-    olpw = 32 // owidth                     # lanes per output word
-    nw_out = lpw // olpw
-    packed = []
-    for j in range(nw_out):
-        w = jnp.zeros_like(aw)
-        for i in range(olpw):
-            w = w | (outs[j * olpw + i] << jnp.uint32(owidth * i))
-        packed.append(w)
-    # interleave along the last axis: (..., Nw) x nw_out -> (..., nw_out*Nw)
-    o_ref[...] = jnp.stack(packed, axis=-1).reshape(aw.shape[0], -1)
+    a_lanes = dp.lane_expand(a_ref[...], width)
+    b_lanes = dp.lane_expand(b_ref[...], width)
+    if op == "mixed":
+        m_lanes = dp.lane_expand(mode_ref[...], width)
+    else:
+        m_lanes = [None] * len(a_lanes)
+    outs = [
+        dp.lane_op(a, b, tab, width=width, index_bits=spec.index_bits,
+                   op=op, frac_out=frac_out, mode=m,
+                   round_out=spec.round_output)
+        for a, b, m in zip(a_lanes, b_lanes, m_lanes)
+    ]
+    o_ref[...] = dp.lane_repack(outs, 2 * width)
 
 
 @functools.partial(
@@ -114,10 +72,7 @@ def packed_pallas(aw, bw, spec: SimdiveSpec, op: str = "mul", mode=None,
     bm, bn = min(block[0], M), min(block[1], Nw)
     assert M % bm == 0 and Nw % bn == 0
     grid = (M // bm, Nw // bn)
-    tab_m, tab_d = spec.tables()
-    tab = {"mul": tab_m, "div": tab_d}.get(op)
-    if tab is None:
-        tab = jnp.concatenate([tab_m, tab_d])
+    tab = dp.op_table(op, spec.width, spec.coeff_bits, spec.index_bits)
     if mode is None:
         mode = jnp.zeros_like(aw)
     kern = functools.partial(_kernel, spec=spec, op=op, frac_out=frac_out)

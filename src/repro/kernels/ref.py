@@ -1,8 +1,11 @@
 """Pure-jnp oracles for every Pallas kernel (bit-exact references).
 
-Each oracle mirrors its kernel's exact semantics — identical quantization,
-zero handling, packing and accumulation dtype — so tests can assert
-bit-for-bit equality (integer ops leave no tolerance to hide behind).
+Each oracle composes the *same* :mod:`repro.kernels.datapath` stages as its
+kernel — identical quantization, zero handling, packing and accumulation
+dtype — so tests can assert bit-for-bit equality (integer ops leave no
+tolerance to hide behind). The only per-oracle code is data movement
+(pack/unpack, the K-major loop); the log -> correct -> anti-log datapath
+exists once, in datapath.py.
 """
 from __future__ import annotations
 
@@ -11,22 +14,25 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.core.simdive import SimdiveSpec, simdive_div, simdive_mul
+from repro.core.simdive import SimdiveSpec
 from repro.core.simd_pack import pack, unpack
+from . import datapath as dp
 
 __all__ = ["elemwise_ref", "packed_ref", "logmatmul_ref"]
+
+
+def _lane_kwargs(spec: SimdiveSpec, op: str, frac_out: int):
+    return dict(width=spec.width, index_bits=spec.index_bits, op=op,
+                frac_out=frac_out, round_out=spec.round_output)
 
 
 @partial(jax.jit, static_argnames=("spec", "op", "frac_out"))
 def elemwise_ref(a, b, spec: SimdiveSpec, op: str = "mul", mode=None,
                  frac_out: int = 0):
-    p = simdive_mul(a, b, spec).astype(a.dtype)
-    q = simdive_div(a, b, spec, frac_out=frac_out).astype(a.dtype)
-    if op == "mul":
-        return p
-    if op == "div":
-        return q
-    return jnp.where(mode != 0, p, q)
+    tab = dp.op_table(op, spec.width, spec.coeff_bits, spec.index_bits)
+    out = dp.lane_op(a, b, tab, mode=mode,
+                     **_lane_kwargs(spec, op, frac_out))
+    return out.astype(a.dtype)
 
 
 @partial(jax.jit, static_argnames=("spec", "op", "frac_out"))
@@ -35,14 +41,10 @@ def packed_ref(aw, bw, spec: SimdiveSpec, op: str = "mul", mode=None,
     """Packed lanes oracle; returns (M, 2*Nw) words of 2*width-bit lanes."""
     a = unpack(aw, spec.width)
     b = unpack(bw, spec.width)
-    p = simdive_mul(a, b, spec).astype(jnp.uint32)
-    q = simdive_div(a, b, spec, frac_out=frac_out).astype(jnp.uint32)
-    if op == "mul":
-        lanes = p
-    elif op == "div":
-        lanes = q
-    else:
-        lanes = jnp.where(unpack(mode, spec.width) != 0, p, q)
+    m = unpack(mode, spec.width) if op == "mixed" else None
+    tab = dp.op_table(op, spec.width, spec.coeff_bits, spec.index_bits)
+    lanes = dp.lane_op(a, b, tab, mode=m,
+                       **_lane_kwargs(spec, op, frac_out)).astype(jnp.uint32)
     owidth = 2 * spec.width
     if owidth >= 32:
         return lanes  # one result per output word already
@@ -52,17 +54,15 @@ def packed_ref(aw, bw, spec: SimdiveSpec, op: str = "mul", mode=None,
 @partial(jax.jit, static_argnames=("spec",))
 def logmatmul_ref(x, w, spec: SimdiveSpec):
     """Signed int32 (M,K)@(K,N) with SIMDive products, int32 accumulation."""
-    xm = jnp.minimum(jnp.abs(x).astype(jnp.uint32),
-                     jnp.uint32((1 << spec.width) - 1))
-    wm = jnp.minimum(jnp.abs(w).astype(jnp.uint32),
-                     jnp.uint32((1 << spec.width) - 1))
-    sx = jnp.where(x < 0, jnp.int32(-1), jnp.int32(1))
-    sw = jnp.where(w < 0, jnp.int32(-1), jnp.int32(1))
+    xm, sx = dp.sign_split(x, spec.width)
+    wm, sw = dp.sign_split(w, spec.width)
+    tab = dp.op_table("mul", spec.width, spec.coeff_bits, spec.index_bits)
+    kw = _lane_kwargs(spec, "mul", 0)
 
     def row(args):
         xm_r, sx_r = args
-        p = simdive_mul(xm_r[:, None], wm, spec).astype(jnp.int32)
-        contrib = p * (sx_r[:, None] * sw)
+        p = dp.lane_op(xm_r[:, None], wm, tab, **kw).astype(jnp.int32)
+        contrib = dp.sign_join(p, sx_r[:, None] * sw)
         return jnp.sum(contrib, axis=0, dtype=jnp.int32)
 
     return jax.lax.map(row, (xm, sx))  # K-major loop keeps memory bounded

@@ -1,0 +1,227 @@
+"""Kernel registry — the single dispatch entry for every SIMDive op.
+
+``get_op(op, spec, backend, block=...)`` owns everything that used to be
+scattered across call sites:
+
+  * **backend resolution** — 'auto' picks the Pallas kernel on TPU and the
+    pure-jnp oracle elsewhere; 'pallas' resolves to compiled-on-TPU /
+    interpret-off-TPU; 'ref', 'pallas-interpret' and 'pallas-tpu' force a
+    specific lowering.
+  * **block-size selection** — per (op, width, shape-bucket) with a tiny
+    measure-and-cache autotune loop over each op's candidate list,
+    replacing the hardcoded ``DEFAULT_BLOCK`` constants. Explicit ``block``
+    arguments always win. The timing loop runs only for compiled TPU
+    dispatch (interpreter wall-clock is meaningless for block choice);
+    elsewhere — and under tracing, or with ``SIMDIVE_AUTOTUNE=0`` — the
+    registered default is cached without timing. ``SIMDIVE_AUTOTUNE=force``
+    times everywhere (tests / experiments).
+  * **registration** — :func:`register_op` is the hook new ops (e.g. a
+    future ``simdive_sqrt`` Pallas kernel) use to plug into the same
+    dispatch without touching ops.py.
+
+The built-in ops (elemwise / packed / matmul_int / matmul_emul / sqrt) are
+registered by :mod:`repro.kernels.ops` on first use.
+"""
+from __future__ import annotations
+
+import os
+import time
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+
+__all__ = [
+    "OpImpl",
+    "BoundOp",
+    "register_op",
+    "registered_ops",
+    "get_op",
+    "resolve_backend",
+    "shape_bucket",
+    "autotune_cache",
+    "clear_autotune_cache",
+]
+
+#: backends accepted by :func:`get_op`; 'auto'/'pallas' resolve per-host.
+BACKENDS = ("auto", "ref", "pallas", "pallas-interpret", "pallas-tpu")
+
+
+@dataclass(frozen=True)
+class OpImpl:
+    """One registered op: a reference impl plus an optional Pallas impl.
+
+    ``ref(*arrays, spec=..., **kw)`` is the bit-exact oracle entry;
+    ``pallas(*arrays, spec=..., block=..., interpret=..., **kw)`` the
+    kernel entry (both own their shape normalization / padding).
+    """
+    name: str
+    ref: Callable[..., Any]
+    pallas: Callable[..., Any] | None = None
+    default_block: tuple | None = None
+    block_candidates: tuple = ()
+
+
+_REGISTRY: dict[str, OpImpl] = {}
+_AUTOTUNE_CACHE: dict[tuple, tuple] = {}
+_BUILTINS_LOADED = False
+
+
+def register_op(name: str, *, ref: Callable, pallas: Callable | None = None,
+                default_block: tuple | None = None,
+                block_candidates: tuple = (),
+                override: bool = False) -> OpImpl:
+    """Register a new op under ``name``; the hook for plugging in ops
+    without touching ops.py. ``override=True`` replaces an existing entry
+    (tests / experiments)."""
+    if name in _REGISTRY and not override:
+        raise ValueError(f"op {name!r} already registered "
+                         "(pass override=True to replace)")
+    if pallas is not None and default_block is None and not block_candidates:
+        raise ValueError(
+            f"op {name!r}: a pallas impl needs default_block and/or "
+            "block_candidates (the registry passes block= to every call)")
+    entry = OpImpl(name=name, ref=ref, pallas=pallas,
+                   default_block=default_block,
+                   block_candidates=tuple(block_candidates))
+    _REGISTRY[name] = entry
+    return entry
+
+
+def _ensure_builtin_ops() -> None:
+    global _BUILTINS_LOADED
+    if not _BUILTINS_LOADED:
+        from . import ops  # noqa: F401  (registers the built-in ops)
+        _BUILTINS_LOADED = True
+
+
+def registered_ops() -> tuple[str, ...]:
+    _ensure_builtin_ops()
+    return tuple(sorted(_REGISTRY))
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def resolve_backend(backend: str) -> str:
+    """Collapse 'auto'/'pallas' onto a concrete lowering for this host."""
+    if backend not in BACKENDS:
+        raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
+    if backend == "auto":
+        # interpret-mode kernels are for validation, not speed
+        return "pallas-tpu" if _on_tpu() else "ref"
+    if backend == "pallas":
+        return "pallas-tpu" if _on_tpu() else "pallas-interpret"
+    return backend
+
+
+# ------------------------------------------------------------- autotune --
+def shape_bucket(shape: tuple) -> tuple:
+    """Pow-2 bucket of a shape: one autotune entry serves nearby shapes."""
+    return tuple(1 << max(int(d) - 1, 0).bit_length() for d in shape)
+
+
+def autotune_cache() -> dict:
+    """The live (op, width, shape-bucket, backend) -> block cache."""
+    return _AUTOTUNE_CACHE
+
+
+def clear_autotune_cache() -> None:
+    _AUTOTUNE_CACHE.clear()
+
+
+def _autotune_mode() -> str:
+    """'on' (time candidates on compiled TPU runs), 'off', or 'force'
+    (time even under the interpreter — tests / experiments)."""
+    v = os.environ.get("SIMDIVE_AUTOTUNE", "1")
+    if v in ("0", "off", ""):
+        return "off"
+    return "force" if v == "force" else "on"
+
+
+def _is_concrete(arrays) -> bool:
+    return not any(isinstance(a, jax.core.Tracer) for a in arrays)
+
+
+def _time_once(fn: Callable, *args, **kw) -> float:
+    jax.block_until_ready(fn(*args, **kw))          # warm / compile
+    t0 = time.perf_counter()
+    jax.block_until_ready(fn(*args, **kw))
+    return time.perf_counter() - t0
+
+
+def _pick_block(entry: OpImpl, spec, backend: str, arrays, kw) -> tuple:
+    """Cached per-(op, width, shape-bucket) block choice, autotuned once.
+
+    Timing only happens for compiled TPU runs ('force' overrides):
+    interpreter wall-clock says nothing about TPU block quality and costs
+    several full op executions.
+    """
+    key = (entry.name, spec.width,
+           tuple(shape_bucket(a.shape) for a in arrays), backend)
+    cached = _AUTOTUNE_CACHE.get(key)
+    if cached is not None:
+        return cached
+    candidates = entry.block_candidates or (entry.default_block,)
+    mode = _autotune_mode()
+    tune = (len(candidates) > 1 and _is_concrete(arrays)
+            and (mode == "force" or (mode == "on" and backend == "pallas-tpu")))
+    if not tune:
+        block = entry.default_block or candidates[0]
+        if _is_concrete(arrays):                # don't pin choices mid-trace
+            _AUTOTUNE_CACHE[key] = block
+        return block
+    best, best_t = None, None
+    for cand in candidates:
+        t = _time_once(entry.pallas, *arrays, spec=spec, block=cand,
+                       interpret=backend != "pallas-tpu", **kw)
+        if best_t is None or t < best_t:
+            best, best_t = cand, t
+    _AUTOTUNE_CACHE[key] = best
+    return best
+
+
+# ------------------------------------------------------------- dispatch --
+@dataclass(frozen=True)
+class BoundOp:
+    """An op bound to (spec, resolved backend, block policy) — callable."""
+    entry: OpImpl
+    spec: Any
+    backend: str            # resolved: 'ref' | 'pallas-interpret' | 'pallas-tpu'
+    block: tuple | None     # None => registry picks (autotune cache)
+
+    def __call__(self, *arrays, **kw):
+        if self.backend == "ref":
+            return self.entry.ref(*arrays, spec=self.spec, **kw)
+        block = self.block
+        if block is None:
+            block = _pick_block(self.entry, self.spec, self.backend,
+                                arrays, kw)
+        return self.entry.pallas(
+            *arrays, spec=self.spec, block=block,
+            interpret=self.backend != "pallas-tpu", **kw)
+
+
+def get_op(op: str, spec, backend: str = "auto", *,
+           block: tuple | None = None) -> BoundOp:
+    """Resolve ``op`` to a callable bound to ``spec``/``backend``/``block``.
+
+    The returned :class:`BoundOp` takes the op's arrays plus per-call
+    keywords (``op=``, ``mode=``, ``frac_out=``, ...). Ops registered
+    without a Pallas impl silently serve the 'auto' backend from their
+    reference impl; asking for a Pallas backend explicitly raises.
+    """
+    _ensure_builtin_ops()
+    entry = _REGISTRY.get(op)
+    if entry is None:
+        raise KeyError(
+            f"unknown op {op!r}; registered: {sorted(_REGISTRY)}")
+    resolved = resolve_backend(backend)
+    if resolved != "ref" and entry.pallas is None:
+        if backend == "auto":
+            resolved = "ref"
+        else:
+            raise ValueError(f"op {op!r} has no Pallas implementation "
+                             f"(requested backend {backend!r})")
+    return BoundOp(entry=entry, spec=spec, backend=resolved, block=block)

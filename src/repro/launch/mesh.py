@@ -3,18 +3,39 @@
 A function (not a module constant) so importing this module never touches
 jax device state — the dry-run driver sets XLA_FLAGS *before* any jax
 import, then calls this.
+
+Compat: ``jax.sharding.AxisType`` (explicit/auto axis typing) only exists
+on newer jax. Where it is absent, :func:`_make_mesh` falls back to
+positional ``Mesh(devices, axis_names)`` construction, which carries the
+same default-auto semantics on those versions.
 """
 from __future__ import annotations
 
+import math
+
+import numpy as np
+
 import jax
-from jax.sharding import AxisType
+
+try:  # jax >= 0.5-era axis typing
+    from jax.sharding import AxisType
+except ImportError:  # older jax: every axis is implicitly 'auto'
+    AxisType = None
+from jax.sharding import Mesh
+
+
+def _make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]) -> Mesh:
+    if AxisType is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(AxisType.Auto,) * len(axes))
+    devices = np.asarray(jax.devices()[: math.prod(shape)]).reshape(shape)
+    return Mesh(devices, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_host_mesh(model: int | None = None):
@@ -22,5 +43,4 @@ def make_host_mesh(model: int | None = None):
     n = len(jax.devices())
     model = model or 1
     assert n % model == 0
-    return jax.make_mesh((n // model, model), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    return _make_mesh((n // model, model), ("data", "model"))

@@ -12,6 +12,12 @@ All matmuls go through :func:`dense`, which understands:
     serving path; bytes/weight drop 2x vs bf16, 4x vs f32),
   * SIMDive bit-exact emulation (``ApproxConfig.emulate``) for accuracy
     studies on small models.
+
+Every approximate op below bottoms out in the kernel registry
+(:func:`repro.kernels.registry.get_op`) via :mod:`repro.core.approx`:
+``ApproxConfig.backend`` selects the serving backend ('ref' = bit-exact
+oracle, 'pallas'/'auto' = the fused Pallas kernels) without any change
+to this layer.
 """
 from __future__ import annotations
 

@@ -9,9 +9,12 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
 
-from repro.models.moe import _dispatch, _moe_ffn_jnp, init_moe, moe_ffn
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.models.moe import _dispatch, _moe_ffn_jnp, init_moe, moe_ffn  # noqa: E402
 
 
 def _params(key, D=16, F=32, E=4, shared=0):

@@ -1,0 +1,243 @@
+"""Kernel-registry tests: dispatch, parity across backends, autotune cache.
+
+Parity is the layering contract of this repo: every registered op's Pallas
+path (interpret mode off-TPU) must match its reference bit-for-bit, and the
+model-facing emulation (`matmul_emul`) must be the exact seed semantics.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import SimdiveSpec, pack
+from repro.core.approx import ApproxConfig, approx_matmul, quantize_sign_magnitude
+from repro.kernels import registry
+from repro.kernels.registry import (
+    autotune_cache,
+    clear_autotune_cache,
+    get_op,
+    register_op,
+    registered_ops,
+    resolve_backend,
+    shape_bucket,
+)
+
+RNG = np.random.default_rng(11)
+
+
+def _uints(shape, width, lo=0):
+    return jnp.asarray(RNG.integers(lo, 1 << width, shape, dtype=np.uint32))
+
+
+# ------------------------------------------------------------- dispatch --
+def test_builtin_ops_registered():
+    ops = registered_ops()
+    for name in ("elemwise", "packed", "matmul_int", "matmul_emul", "sqrt"):
+        assert name in ops
+
+
+def test_resolve_backend_off_tpu():
+    # CI/dev hosts are CPU: 'auto' serves ref, 'pallas' serves interpret
+    assert resolve_backend("auto") == "ref"
+    assert resolve_backend("pallas") == "pallas-interpret"
+    assert resolve_backend("ref") == "ref"
+    with pytest.raises(ValueError):
+        resolve_backend("vhdl")
+
+
+def test_unknown_op_and_missing_pallas():
+    spec = SimdiveSpec(width=8)
+    with pytest.raises(KeyError):
+        get_op("simdive_cbrt", spec)
+    # sqrt has no Pallas impl: 'auto' silently falls back to ref ...
+    out = get_op("sqrt", spec, backend="auto")(jnp.asarray([4, 9], jnp.uint32))
+    assert np.array_equal(np.asarray(out), [2, 3])
+    # ... but an explicit Pallas request is an error, not a silent downgrade
+    with pytest.raises(ValueError):
+        get_op("sqrt", spec, backend="pallas")
+
+
+def test_register_hook_and_override_guard():
+    spec = SimdiveSpec(width=8)
+
+    def double_ref(a, *, spec):
+        return a * 2
+
+    register_op("test_double", ref=double_ref, override=True)
+    try:
+        out = get_op("test_double", spec, backend="ref")(
+            jnp.asarray([1, 2], jnp.uint32))
+        assert np.array_equal(np.asarray(out), [2, 4])
+        with pytest.raises(ValueError):
+            register_op("test_double", ref=double_ref)  # no override
+    finally:
+        registry._REGISTRY.pop("test_double", None)
+
+
+def test_register_pallas_requires_block_info():
+    def impl(a, *, spec, block, interpret):
+        return a
+
+    with pytest.raises(ValueError, match="default_block"):
+        register_op("test_blockless", ref=impl, pallas=impl, override=True)
+
+
+# --------------------------------------------------------------- parity --
+@pytest.mark.parametrize("width", [8, 16])
+@pytest.mark.parametrize("op", ["mul", "div", "mixed"])
+def test_elemwise_parity_all_backends(width, op):
+    spec = SimdiveSpec(width=width, coeff_bits=6)
+    a = _uints((19, 70), width)
+    b = _uints((19, 70), width, lo=1)
+    mode = _uints((19, 70), 1)
+    kw = dict(op=op, mode=mode, frac_out=3)
+    want = get_op("elemwise", spec, "ref")(a, b, **kw)
+    got = get_op("elemwise", spec, "pallas-interpret",
+                 block=(8, 64))(a, b, **kw)
+    assert got.dtype == want.dtype
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("width", [8, 16])
+def test_packed_parity_all_backends(width):
+    spec = SimdiveSpec(width=width, coeff_bits=6)
+    lpw = 32 // width
+    lanes = (6, 24 * lpw)
+    aw = pack(_uints(lanes, width), width)
+    bw = pack(_uints(lanes, width, lo=1), width)
+    want = get_op("packed", spec, "ref")(aw, bw, op="mul")
+    got = get_op("packed", spec, "pallas-interpret",
+                 block=(4, 8))(aw, bw, op="mul")
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("width", [8, 16])
+def test_matmul_parity_all_backends(width):
+    spec = SimdiveSpec(width=width, coeff_bits=6)
+    hi = min(1 << width, 1 << 10)
+    x = jnp.asarray(RNG.integers(-hi + 1, hi, (9, 33), dtype=np.int32))
+    w = jnp.asarray(RNG.integers(-hi + 1, hi, (33, 20), dtype=np.int32))
+    want = get_op("matmul_int", spec, "ref")(x, w)
+    got = get_op("matmul_int", spec, "pallas-interpret",
+                 block=(8, 8, 16))(x, w)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_matmul_emul_pallas_matches_ref_in_exact_range():
+    """Within int32-exact bounds (width 8, small K) the TPU path of the
+    emulation must agree with the int64 reference bit-for-bit. (Outside
+    those bounds the paths legitimately differ — int32 vs int64
+    accumulation; see ops.py — and 'ref' stays the accuracy oracle.)"""
+    spec = SimdiveSpec(width=8, coeff_bits=6)
+    x = jnp.asarray(RNG.normal(size=(6, 40)).astype(np.float32))
+    w = jnp.asarray(RNG.normal(size=(40, 12)).astype(np.float32))
+    qx, sx, _ = quantize_sign_magnitude(x, 8)
+    qw, sw, _ = quantize_sign_magnitude(w, 8, axis=0)
+    want = get_op("matmul_emul", spec, "ref")(qx, sx, qw, sw, k_chunk=16)
+    got = get_op("matmul_emul", spec, "pallas-interpret",
+                 block=(8, 8, 16))(qx, sx, qw, sw, k_chunk=16)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_matmul_emul_matches_manual_emulation():
+    """The registry's model-facing emulation is the seed-exact int64 core."""
+    from repro.core.simdive import simdive_mul
+
+    spec = SimdiveSpec(width=8, coeff_bits=6)
+    x = jnp.asarray(RNG.normal(size=(4, 21)).astype(np.float32))
+    w = jnp.asarray(RNG.normal(size=(21, 6)).astype(np.float32))
+    qx, sx, _ = quantize_sign_magnitude(x, 8)
+    qw, sw, _ = quantize_sign_magnitude(w, 8, axis=0)
+    got = get_op("matmul_emul", spec, "ref")(qx, sx, qw, sw, k_chunk=8)
+    p = simdive_mul(qx[:, :, None], qw[None, :, :], spec).astype(np.int64)
+    s = (sx[:, :, None] * sw[None, :, :]).astype(np.int64)
+    want = np.sum(np.asarray(p) * np.asarray(s), axis=1)
+    assert np.array_equal(np.asarray(got), want)
+
+
+def test_approx_matmul_routes_through_registry():
+    """approx_matmul == quantize + registry matmul_emul + rescale, bit-for-bit."""
+    cfg = ApproxConfig(mode="simdive")
+    x = jnp.asarray(RNG.normal(size=(5, 37)).astype(np.float32))
+    w = jnp.asarray(RNG.normal(size=(37, 11)).astype(np.float32))
+    got = approx_matmul(x, w, cfg)
+    qx, sx, scx = quantize_sign_magnitude(x, cfg.width)
+    qw, sw, scw = quantize_sign_magnitude(w, cfg.width, axis=0)
+    acc = get_op("matmul_emul", cfg.spec(), cfg.backend)(
+        qx, sx, qw, sw, k_chunk=cfg.k_chunk)
+    want = (acc.astype(jnp.float32) * (scx * scw)).astype(x.dtype)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+# ------------------------------------------------------------- autotune --
+def test_shape_bucket_pow2():
+    assert shape_bucket((1, 7)) == (1, 8)
+    assert shape_bucket((8, 128)) == (8, 128)
+    assert shape_bucket((130, 300)) == (256, 512)
+
+
+def test_autotune_cache_stable_for_repeated_shapes():
+    spec = SimdiveSpec(width=8, coeff_bits=6)
+    a = _uints((8, 64), 8)
+    b = _uints((8, 64), 8, lo=1)
+    clear_autotune_cache()
+    try:
+        op = get_op("elemwise", spec, "pallas-interpret")   # block=None
+        first = op(a, b, op="mul")
+        key = ("elemwise", 8, (shape_bucket((8, 64)),) * 2,
+               "pallas-interpret")
+        assert key in autotune_cache()
+        chosen = autotune_cache()[key]
+        # repeated shape: same cached choice, no re-tuning, same bits
+        second = op(a, b, op="mul")
+        assert autotune_cache()[key] == chosen
+        assert np.array_equal(np.asarray(first), np.asarray(second))
+        # a nearby shape in the same pow-2 bucket reuses the entry
+        a2 = _uints((7, 60), 8)
+        b2 = _uints((7, 60), 8, lo=1)
+        get_op("elemwise", spec, "pallas-interpret")(a2, b2, op="mul")
+        assert len([k for k in autotune_cache() if k[0] == "elemwise"]) == 1
+    finally:
+        clear_autotune_cache()
+
+
+def test_autotune_timing_loop_forced(monkeypatch):
+    """SIMDIVE_AUTOTUNE=force runs the measure loop even off-TPU and the
+    winner is cached and bit-equal to ref."""
+    monkeypatch.setenv("SIMDIVE_AUTOTUNE", "force")
+    timed = []
+    real_time_once = registry._time_once
+    monkeypatch.setattr(registry, "_time_once",
+                        lambda *a, **k: timed.append(1) or real_time_once(*a, **k))
+    spec = SimdiveSpec(width=8, coeff_bits=6)
+    a = _uints((8, 32), 8)
+    b = _uints((8, 32), 8, lo=1)
+    clear_autotune_cache()
+    try:
+        out = get_op("elemwise", spec, "pallas-interpret")(a, b, op="mul")
+        key = ("elemwise", 8, (shape_bucket((8, 32)),) * 2,
+               "pallas-interpret")
+        entry = registry._REGISTRY["elemwise"]
+        assert len(timed) == len(entry.block_candidates)   # loop really ran
+        assert autotune_cache()[key] in entry.block_candidates
+        want = get_op("elemwise", spec, "ref")(a, b, op="mul")
+        assert np.array_equal(np.asarray(out), np.asarray(want))
+        # second call: cache hit, no re-timing
+        get_op("elemwise", spec, "pallas-interpret")(a, b, op="mul")
+        assert len(timed) == len(entry.block_candidates)
+    finally:
+        clear_autotune_cache()
+
+
+def test_explicit_block_bypasses_autotune():
+    spec = SimdiveSpec(width=8, coeff_bits=6)
+    a = _uints((8, 32), 8)
+    b = _uints((8, 32), 8, lo=1)
+    clear_autotune_cache()
+    try:
+        out = get_op("elemwise", spec, "pallas-interpret",
+                     block=(8, 32))(a, b, op="mul")
+        assert not autotune_cache()          # nothing was tuned or cached
+        want = get_op("elemwise", spec, "ref")(a, b, op="mul")
+        assert np.array_equal(np.asarray(out), np.asarray(want))
+    finally:
+        clear_autotune_cache()
