@@ -10,15 +10,20 @@
 
 Images: USC-SIPI is not available offline — deterministic synthetic photos
 (smoothed multi-scale noise, full 8-bit dynamic range) stand in; PSNR
-*orderings* are the reproduced claim.
+*orderings* are the reproduced claim. PSNR/SSIM come from
+:mod:`repro.metrics`; SIMDive/Mitchell arithmetic dispatches through the
+kernel registry; the constant-correction competitors live in
+:mod:`repro.core.baselines`.
 """
 from __future__ import annotations
 
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import SimdiveSpec, simdive_div, simdive_mul
-from benchmarks.table2_sisd import _const_corr_op
+from repro.core import SimdiveSpec
+from repro.core.baselines import const_corr_op
+from repro.kernels import get_op
+from repro.metrics import psnr, ssim
 
 
 def synth_image(seed, hw=256):
@@ -30,11 +35,6 @@ def synth_image(seed, hw=256):
         img += up * scale
     img = (img - img.min()) / np.ptp(img)
     return (img * 255).astype(np.uint32)
-
-
-def psnr(a, b):
-    mse = np.mean((a.astype(np.float64) - b.astype(np.float64)) ** 2)
-    return 99.0 if mse == 0 else 10 * np.log10(255.0 ** 2 / mse)
 
 
 def blend(img1, img2, mul):
@@ -73,30 +73,43 @@ def gaussian(img, mul, div):
     return np.clip(out, 0, 255)
 
 
-def main(report=print):
+def make_ops(backend="ref"):
+    """Fig. 3/4 multiplier/divider families, registry-dispatched."""
     spec = SimdiveSpec(width=16, coeff_bits=6)
     mit = SimdiveSpec(width=16, coeff_bits=0, round_output=False)
-
+    sd = get_op("elemwise", spec, backend)
+    mt = get_op("elemwise", mit, backend)
     muls = {
         "accurate": lambda a, b: a.astype(jnp.uint32) * b,
-        "simdive": lambda a, b: simdive_mul(a, b, spec),
-        "mitchell": lambda a, b: simdive_mul(a, b, mit),
-        "mbm-const": _const_corr_op("mul", 16),
+        "simdive": lambda a, b: sd(a, b, op="mul"),
+        "mitchell": lambda a, b: mt(a, b, op="mul"),
+        "mbm-const": const_corr_op("mul", 16),
     }
     divs = {
         "accurate": lambda a, b: ((a.astype(jnp.uint64) << FO)
                                   // b.astype(jnp.uint64)).astype(jnp.uint32),
-        "simdive": lambda a, b: simdive_div(a, b, spec, frac_out=FO),
-        "mitchell": lambda a, b: simdive_div(a, b, mit, frac_out=FO),
-        "inzed-const": lambda a, b: _const_corr_op("div", 16)(a, b, FO),
+        "simdive": lambda a, b: sd(a, b, op="div", frac_out=FO),
+        "mitchell": lambda a, b: mt(a, b, op="div", frac_out=FO),
+        "inzed-const": lambda a, b: const_corr_op("div", 16)(a, b, FO),
     }
+    return muls, divs
+
+
+def main(report=print, quick=False):
+    muls, divs = make_ops()
+    rows = {}
 
     i1, i2 = synth_image(1), synth_image(2)
     ref_blend = blend(i1, i2, muls["accurate"])
-    report("fig3,design,PSNR-dB (blending; paper: simdive 46.6, mbm 32.1)")
+    report("fig3,design,PSNR-dB,SSIM (blending; paper: simdive 46.6, mbm 32.1)")
     for name in ("simdive", "mitchell", "mbm-const"):
         out = blend(i1, i2, muls[name])
-        report(f"fig3,{name},{psnr(ref_blend, out):.1f}")
+        rows[f"fig3/{name}"] = {"psnr_db": psnr(ref_blend, out),
+                                "ssim": ssim(ref_blend, out)}
+        report(f"fig3,{name},{rows[f'fig3/{name}']['psnr_db']:.1f},"
+               f"{rows[f'fig3/{name}']['ssim']:.4f}")
+    if quick:
+        return rows
 
     # Fig 4 caption: PSNR w.r.t. the original noise-free image — the
     # filter denoises; approximate arithmetic must not degrade the result.
@@ -123,7 +136,9 @@ def main(report=print):
     report("fig4,design,PSNR-dB vs noise-free (paper: div-only simdive 24.5"
            " vs inzed 20.9; hybrid simdive 23.3 vs 21.3)")
     for k, v in cases.items():
+        rows[f"fig4/{k}"] = {"psnr_db": float(np.mean(v))}
         report(f"fig4,{k},{np.mean(v):.1f}")
+    return rows
 
 
 if __name__ == "__main__":

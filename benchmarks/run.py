@@ -1,47 +1,219 @@
-"""Benchmark harness entry point: one module per paper table/figure.
+"""Benchmark driver: paper tables/figures + the machine-readable trajectory.
 
 Usage:
-  PYTHONPATH=src python -m benchmarks.run              # everything
-  PYTHONPATH=src python -m benchmarks.run --only table2,roofline
+  PYTHONPATH=src python benchmarks/run.py                # everything
+  PYTHONPATH=src python benchmarks/run.py --quick        # CI-sized sweep
+  PYTHONPATH=src python benchmarks/run.py --only table2,grid
 
-Each module prints ``<table>,<row>,<values...>`` CSV lines; the combined
-stream is also written to results/bench.csv. ``roofline`` renders the
-EXPERIMENTS.md §Roofline table from results/dryrun/*.json (it does not
-compile anything itself — run repro.launch.dryrun first for fresh cells).
+Two outputs per run:
+
+  results/bench.csv      the human-readable ``<table>,<row>,<values>`` CSV
+                         stream (one ``main(report=...)`` per suite module,
+                         unchanged format).
+  BENCH_simdive.json     the machine-readable trajectory. Every invocation
+                         *appends* one run record, so the file accumulates
+                         the per-PR perf/accuracy history CI diffs against.
+
+A run record's ``grid`` section is the conformance-shaped sweep: one entry
+per (op, width, coeff_bits, backend) combination, each carrying the full
+:mod:`repro.metrics` error profile (ARE%/MRED/NMED/PRE%/WCE/error-rate
+against the exact result) and a shape-bucketed throughput measurement —
+everything flows through the kernel-registry ``get_op`` entry point. The
+``suites`` section captures each table/figure module's structured rows.
 """
 from __future__ import annotations
 
 import argparse
+import inspect
+import json
 import os
 import sys
 import time
 import traceback
 
+# support plain `python benchmarks/run.py` (repo root not on sys.path then)
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if __package__ in (None, ""):
+    sys.path.insert(0, _REPO_ROOT)
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import SimdiveSpec
+from repro.kernels import get_op
+from repro.metrics import (
+    DIV_FRAC_OUT,
+    error_stats,
+    grid8,
+    sample_uints,
+    time_callable,
+)
+
 SUITES = [
-    # (name, module, what it reproduces)
-    ("table2", "benchmarks.table2_sisd",
+    # (name, module, runs-under---quick, what it reproduces)
+    ("table2", "benchmarks.table2_sisd", True,
      "Table 2: SISD mul/div ARE%/PRE% vs accurate/trunc/Mitchell/MBM/INZeD"),
-    ("table3", "benchmarks.table3_simd",
+    ("table3", "benchmarks.table3_simd", True,
      "Table 3: SIMD packed mul-div cost profile (TPU analogue)"),
-    ("table4", "benchmarks.table4_ann",
+    ("table4", "benchmarks.table4_ann", False,
      "Table 4: quantized ANN inference w/ approximate multipliers"),
-    ("fig1", "benchmarks.fig1_error_maps",
+    ("fig1", "benchmarks.fig1_error_maps", True,
      "Fig 1: error heat maps over the fraction square"),
-    ("fig34", "benchmarks.fig34_imaging",
+    ("fig34", "benchmarks.fig34_imaging", False,
      "Fig 3/4: image blending + Gaussian smoothing PSNR"),
-    ("roofline", "benchmarks.roofline",
+    ("roofline", "benchmarks.roofline", False,
      "§Roofline: per (arch x shape) terms from the dry-run sweep"),
 ]
 
+GRID_SEED = 0         # explicit seed: trajectory numbers must reproduce
+
+
+# ------------------------------------------------------------------ grid --
+def _grid_operands(op: str, width: int, n: int, exhaustive: bool):
+    """Seeded operand sets; the divider uses the paper's N/8 format."""
+    if exhaustive and width == 8:
+        return grid8()
+    return sample_uints(width, n, GRID_SEED,
+                        b_width=8 if op == "div" else None)
+
+
+def _grid_configs(quick: bool):
+    """The (op, width, coeff_bits, backend) sweep of one trajectory run."""
+    coeff_sweep = (0, 4, 6) if quick else (0, 2, 4, 6, 8)
+    for width in (8, 16):
+        for op in ("mul", "div"):
+            for cb in coeff_sweep:
+                yield (op, width, cb, "ref")
+    # the interpreter path is a correctness artifact, not a speed one:
+    # keep it to the paper's headline config so runs stay bounded
+    for op in ("mul", "div"):
+        yield (op, 8, 6, "pallas-interpret")
+
+
+def run_grid(report, quick: bool) -> list[dict]:
+    records = []
+    report("# === grid: (op, width, coeff_bits, backend) error + throughput"
+           " trajectory")
+    for op, width, cb, backend in _grid_configs(quick):
+        spec = SimdiveSpec(width=width, coeff_bits=cb)
+        interp = backend == "pallas-interpret"
+        exhaustive = width == 8 and not interp
+        n = 4096 if interp else (65025 if exhaustive else
+                                 (50_000 if quick else 250_000))
+        a_np, b_np = _grid_operands(op, width, n, exhaustive)
+        a, b = jnp.asarray(a_np), jnp.asarray(b_np)
+        kw = {"op": op} if op == "mul" else {"op": op,
+                                             "frac_out": DIV_FRAC_OUT}
+        bound = get_op("elemwise", spec, backend,
+                       block=(16, 256) if interp else None)
+        call = (lambda x, y, _b=bound, _kw=kw: _b(x, y, **_kw))
+        out = np.asarray(call(a, b)).astype(np.float64)
+        if op == "mul":
+            true = a_np.astype(np.float64) * b_np.astype(np.float64)
+        else:
+            out = out / 2.0 ** DIV_FRAC_OUT
+            true = a_np.astype(np.float64) / b_np.astype(np.float64)
+        err = error_stats(out, true)
+        timed = jax.jit(call) if not interp else call
+        t = time_callable(timed, a, b, iters=1 if interp else 5,
+                          items=int(a.size))
+        rec = {
+            "op": op, "width": width, "coeff_bits": cb,
+            "index_bits": spec.index_bits, "backend": backend,
+            "n": int(a.size), "seed": GRID_SEED,
+            "exhaustive": bool(exhaustive),
+            "frac_out": 0 if op == "mul" else DIV_FRAC_OUT,
+            "error": err.as_dict(),
+            "throughput": t.as_dict(),
+        }
+        records.append(rec)
+        report(f"grid,{op}/{width}b/cb{cb}/{backend},ARE%={err.are_pct:.4f},"
+               f"PRE%={err.pre_pct:.3f},mean_us={t.mean_us:.0f}")
+    return records
+
+
+# ----------------------------------------------------------------- suites --
+def _jsonify(x):
+    """Structured suite rows -> plain JSON (dataclasses via .as_dict())."""
+    if hasattr(x, "as_dict"):
+        return _jsonify(x.as_dict())
+    if isinstance(x, dict):
+        return {str(k): _jsonify(v) for k, v in x.items()}
+    if isinstance(x, (list, tuple)):
+        return [_jsonify(v) for v in x]
+    if isinstance(x, (np.floating, np.integer)):
+        return x.item()
+    if isinstance(x, (str, int, float, bool)) or x is None:
+        return x
+    return str(x)
+
+
+def run_suites(report, wanted, quick: bool):
+    suites, failures = {}, 0
+    for name, module, quick_ok, desc in SUITES:
+        if wanted is not None:
+            if name not in wanted:
+                continue
+        elif quick and not quick_ok:
+            continue
+        report(f"# === {name}: {desc}")
+        t0 = time.time()
+        try:
+            mod = __import__(module, fromlist=["main"])
+            kw = {"report": report}
+            if "quick" in inspect.signature(mod.main).parameters:
+                kw["quick"] = quick
+            rows = mod.main(**kw)
+            dt = time.time() - t0
+            suites[name] = {"status": "ok", "seconds": round(dt, 2),
+                            "rows": _jsonify(rows)}
+            report(f"# --- {name} done in {dt:.1f}s")
+        except Exception as e:  # noqa: BLE001 — keep the harness sweeping
+            failures += 1
+            suites[name] = {"status": "failed",
+                            "error": f"{type(e).__name__}: {e}"}
+            report(f"# !!! {name} FAILED: {type(e).__name__}: {e}")
+            traceback.print_exc()
+    return suites, failures
+
+
+# ------------------------------------------------------------- trajectory --
+def append_trajectory(path: str, run_record: dict) -> None:
+    """Append one run to the BENCH file (schema: simdive-bench/v1)."""
+    doc = {"schema": "simdive-bench/v1", "runs": []}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                prev = json.load(f)
+            if isinstance(prev, dict) and isinstance(prev.get("runs"), list):
+                doc = prev
+        except (json.JSONDecodeError, OSError):
+            pass  # corrupt trajectory: restart rather than crash the bench
+    doc["runs"].append(run_record)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+        f.write("\n")
+
 
 def main() -> None:
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--only", default=None,
-                    help="comma-separated suite names (default: all)")
-    ap.add_argument("--out", default=os.path.join(
-        os.path.dirname(__file__), "..", "results", "bench.csv"))
+                    help="comma-separated suite names, may include 'grid' "
+                         "(default: all)")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-sized run: reduced grid sweep, fast suites only")
+    ap.add_argument("--out", default=os.path.join(_REPO_ROOT, "results",
+                                                  "bench.csv"))
+    ap.add_argument("--bench-out",
+                    default=os.path.join(_REPO_ROOT, "BENCH_simdive.json"))
     args = ap.parse_args()
     wanted = set(args.only.split(",")) if args.only else None
+    valid = {name for name, _, _, _ in SUITES} | {"grid"}
+    if wanted is not None and not wanted <= valid:
+        # a typo'd suite name must not append an empty trajectory record
+        ap.error(f"unknown --only names {sorted(wanted - valid)}; "
+                 f"valid: {sorted(valid)}")
 
     os.makedirs(os.path.dirname(args.out), exist_ok=True)
     lines: list[str] = []
@@ -50,24 +222,35 @@ def main() -> None:
         print(msg, flush=True)
         lines.append(str(msg))
 
-    failures = 0
-    for name, module, desc in SUITES:
-        if wanted and name not in wanted:
-            continue
-        report(f"# === {name}: {desc}")
-        t0 = time.time()
+    t_start = time.time()
+    grid_records = []
+    grid_failed = False
+    if wanted is None or "grid" in wanted:
         try:
-            mod = __import__(module, fromlist=["main"])
-            mod.main(report=report)
-            report(f"# --- {name} done in {time.time() - t0:.1f}s")
-        except Exception as e:  # noqa: BLE001 — keep the harness sweeping
-            failures += 1
-            report(f"# !!! {name} FAILED: {type(e).__name__}: {e}")
+            grid_records = run_grid(report, args.quick)
+        except Exception as e:  # noqa: BLE001
+            grid_failed = True
+            report(f"# !!! grid FAILED: {type(e).__name__}: {e}")
             traceback.print_exc()
+    suites, failures = run_suites(
+        report, None if wanted is None else wanted - {"grid"}, args.quick)
+    failures += int(grid_failed)
 
     with open(args.out, "w") as f:
         f.write("\n".join(lines) + "\n")
-    print(f"# wrote {args.out}; failures={failures}")
+
+    append_trajectory(args.bench_out, {
+        "created_unix": int(time.time()),
+        "quick": bool(args.quick),
+        "only": sorted(wanted) if wanted else None,
+        "seconds": round(time.time() - t_start, 2),
+        "jax": jax.__version__,
+        "platform": jax.default_backend(),
+        "failures": failures,
+        "grid": grid_records,
+        "suites": suites,
+    })
+    print(f"# wrote {args.out} and {args.bench_out}; failures={failures}")
     sys.exit(1 if failures else 0)
 
 

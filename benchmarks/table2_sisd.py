@@ -5,7 +5,8 @@ design. Area/delay/power/energy are Vivado synthesis artifacts; their
 TPU-meaningful analogue here is the op/traffic profile (#adds+shifts vs
 #multiplies per scalar op, table bytes).
 
-Competitor models (same taxonomy as the paper):
+Competitor models (same taxonomy as the paper; implementations shared with
+Fig. 3/4 via :mod:`repro.core.baselines`):
   accurate        — exact integer multiply / divide
   trunc7 / trunc15— truncated multipliers (top-k bits, round)
   mitchell        — plain Mitchell [22]
@@ -14,137 +15,102 @@ Competitor models (same taxonomy as the paper):
   simdive         — ours: 64-region table + rounding (coeff_bits=6)
   simdive-alm     — §3.4 variant: 256 regions (8-input-LUT devices)
 
-Expected anchors (paper Table 2): mitchell 3.85/11.11, simdive 0.82/4.9 mul;
-mitchell-div 4.11/~13, simdive-div 0.77/5.24.
+SIMDive rows dispatch through the kernel registry (``get_op("elemwise")``),
+the same entry point models and kernels use; error statistics come from
+:mod:`repro.metrics`. All samplers take explicit seeds so row values are
+reproducible run-to-run (the BENCH trajectory depends on this).
 """
 from __future__ import annotations
 
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import SimdiveSpec, mitchell_div, mitchell_mul, simdive_div, simdive_mul
-from repro.core.error_lut import ideal_correction_div, ideal_correction_mul
-from repro.core.mitchell import frac_bits, mitchell_antilog_div, mitchell_antilog_mul, mitchell_log, work_dtype
+from repro.core import SimdiveSpec, mitchell_div, mitchell_mul
+from repro.core.baselines import const_corr_op, trunc_mul
+from repro.kernels import get_op
+from repro.metrics import DIV_FRAC_OUT as FRAC_OUT
+from repro.metrics import error_stats, grid8, sample_uints
 
 
 def _grid8():
-    a = np.arange(1, 256, dtype=np.uint32)
-    A, B = np.meshgrid(a, a, indexing="ij")
-    return jnp.asarray(A.ravel()), jnp.asarray(B.ravel())
+    """Exhaustive nonzero 8-bit operand grid (255 x 255 pairs)."""
+    A, B = grid8()
+    return jnp.asarray(A), jnp.asarray(B)
 
 
 def _sample16(n=250_000, seed=0, div_width=16):
-    r = np.random.default_rng(seed)
-    return (jnp.asarray(r.integers(1, 1 << 16, n, dtype=np.uint32)),
-            jnp.asarray(r.integers(1, 1 << div_width, n, dtype=np.uint32)))
+    a, b = sample_uints(16, n, seed, b_width=div_width)
+    return jnp.asarray(a), jnp.asarray(b)
 
 
-def trunc_mul(a, b, width, keep):
-    """Truncated multiplier: multiply the top-``keep`` bits exactly."""
-    from repro.core.mitchell import leading_one
-    dt = work_dtype(width)
-    au, bu = a.astype(dt), b.astype(dt)
-    ka = leading_one(au, width).astype(jnp.int32)
-    kb = leading_one(bu, width).astype(jnp.int32)
-    sa = jnp.maximum(ka - (keep - 1), 0)
-    sb = jnp.maximum(kb - (keep - 1), 0)
-    ah = (au >> sa.astype(dt))
-    bh = (bu >> sb.astype(dt))
-    return (ah * bh) << (sa + sb).astype(dt)
+def _simdive(op, spec, backend="ref"):
+    """SIMDive row through the one registry entry point."""
+    bound = get_op("elemwise", spec, backend)
+    if op == "mul":
+        return lambda a, b: np.asarray(bound(a, b, op="mul")).astype(np.float64)
+    return lambda a, b: np.asarray(
+        bound(a, b, op="div", frac_out=FRAC_OUT)).astype(np.float64) / 2**FRAC_OUT
 
 
-def _const_corr_op(op, width):
-    """Single-constant correction (MBM/INZeD style)."""
-    g = (np.arange(512) + 0.5) / 512
-    X1, X2 = np.meshgrid(g, g, indexing="ij")
-    f = ideal_correction_mul if op == "mul" else ideal_correction_div
-    c = float(f(X1, X2).mean())
-    F = frac_bits(width)
-    cc = jnp.asarray(int(round(c * (1 << F))), jnp.int32)
-
-    def mul(a, b):
-        dt = work_dtype(width)
-        au, bu = a.astype(dt), b.astype(dt)
-        la, lb = mitchell_log(au, width), mitchell_log(bu, width)
-        p = mitchell_antilog_mul(la, lb, width, corr=jnp.broadcast_to(cc, la.shape))
-        return jnp.where((au == 0) | (bu == 0), jnp.zeros_like(p), p)
-
-    def div(a, b, frac_out):
-        dt = work_dtype(width)
-        au, bu = a.astype(dt), b.astype(dt)
-        la, lb = mitchell_log(au, width), mitchell_log(bu, width)
-        q = mitchell_antilog_div(la, lb, width,
-                                 corr=jnp.broadcast_to(cc, la.shape),
-                                 frac_out=frac_out)
-        return jnp.where(au == 0, jnp.zeros_like(q), q)
-
-    return mul if op == "mul" else div
-
-
-def _stats(approx, true):
-    re = np.abs(approx - true) / true
-    return 100 * re.mean(), 100 * re.max()
-
-
-def run(width=8):
-    A, B = _grid8() if width == 8 else _sample16()
+def run(width=8, seed=0, backend="ref"):
+    """All Table 2 rows at one width -> [(op, design, ErrorStats), ...]."""
+    A, B = _grid8() if width == 8 else _sample16(seed=seed)
     # the paper's divider format is 16/8 (8-bit divisor): keeps the
     # quotient above the frac_out quantization floor
-    Ad, Bd = (A, B) if width == 8 else _sample16(div_width=8)
+    Ad, Bd = (A, B) if width == 8 else _sample16(seed=seed, div_width=8)
     t = np.asarray(A, np.float64) * np.asarray(B, np.float64)
     tq = np.asarray(Ad, np.float64) / np.asarray(Bd, np.float64)
-    FO = 12
     rows = []
 
-    # multipliers
     muls = {
         "accurate": lambda a, b: np.asarray(a, np.float64) * np.asarray(b, np.float64),
-        f"trunc{min(7, width-1)}": lambda a, b: np.asarray(
+        f"trunc{min(7, width - 1)}": lambda a, b: np.asarray(
             trunc_mul(a, b, width, 7)).astype(np.float64),
         "trunc15": lambda a, b: np.asarray(
             trunc_mul(a, b, width, 15)).astype(np.float64),
         "mitchell": lambda a, b: np.asarray(
             mitchell_mul(a, b, width)).astype(np.float64),
         "mbm-const": lambda a, b: np.asarray(
-            _const_corr_op("mul", width)(a, b)).astype(np.float64),
-        "simdive": lambda a, b: np.asarray(simdive_mul(
-            a, b, SimdiveSpec(width=width, coeff_bits=6))).astype(np.float64),
-        "simdive-alm": lambda a, b: np.asarray(simdive_mul(
-            a, b, SimdiveSpec(width=width, coeff_bits=8, index_bits=4)
-        )).astype(np.float64),
+            const_corr_op("mul", width)(a, b)).astype(np.float64),
+        "simdive": _simdive("mul", SimdiveSpec(width=width, coeff_bits=6),
+                            backend),
+        "simdive-alm": _simdive(
+            "mul", SimdiveSpec(width=width, coeff_bits=8, index_bits=4),
+            backend),
     }
     for name, f in muls.items():
-        are, pre = _stats(f(A, B), t)
-        rows.append(("mul", name, are, pre))
+        rows.append(("mul", name, error_stats(f(A, B), t)))
 
     divs = {
         "accurate": lambda a, b: np.asarray(a, np.float64) / np.asarray(b, np.float64),
         "mitchell": lambda a, b: np.asarray(
-            mitchell_div(a, b, width, frac_out=FO)).astype(np.float64) / 2**FO,
-        "inzed-const": lambda a, b: np.asarray(_const_corr_op("div", width)(
-            a, b, FO)).astype(np.float64) / 2**FO,
-        "simdive": lambda a, b: np.asarray(simdive_div(
-            a, b, SimdiveSpec(width=width, coeff_bits=6), frac_out=FO
-        )).astype(np.float64) / 2**FO,
-        "simdive-alm": lambda a, b: np.asarray(simdive_div(
-            a, b, SimdiveSpec(width=width, coeff_bits=8, index_bits=4),
-            frac_out=FO)).astype(np.float64) / 2**FO,
+            mitchell_div(a, b, width, frac_out=FRAC_OUT)
+        ).astype(np.float64) / 2**FRAC_OUT,
+        "inzed-const": lambda a, b: np.asarray(const_corr_op("div", width)(
+            a, b, FRAC_OUT)).astype(np.float64) / 2**FRAC_OUT,
+        "simdive": _simdive("div", SimdiveSpec(width=width, coeff_bits=6),
+                            backend),
+        "simdive-alm": _simdive(
+            "div", SimdiveSpec(width=width, coeff_bits=8, index_bits=4),
+            backend),
     }
     for name, f in divs.items():
-        are, pre = _stats(np.maximum(f(Ad, Bd), 1e-12), tq)
-        rows.append(("div", name, are, pre))
+        rows.append(("div", name, error_stats(np.maximum(f(Ad, Bd), 1e-12), tq)))
     return rows
 
 
-def main(report=print):
-    rows = run(8)
+def main(report=print, quick=False):
+    rows = run(8, seed=0)
     report("op,design,ARE%,PRE%   (8-bit exhaustive; paper Table 2 anchors:"
            " mitchell 3.85/11.11, simdive 0.82/4.9 | div 4.11/13, 0.77/5.24)")
-    for op, name, are, pre in rows:
-        report(f"table2,{op}/{name},{are:.3f},{pre:.2f}")
-    rows16 = run(16)
-    for op, name, are, pre in rows16:
-        report(f"table2_16b,{op}/{name},{are:.3f},{pre:.2f}")
+    for op, name, s in rows:
+        report(f"table2,{op}/{name},{s.are_pct:.3f},{s.pre_pct:.2f}")
+    if quick:
+        return {"table2": rows}
+    rows16 = run(16, seed=0)
+    for op, name, s in rows16:
+        report(f"table2_16b,{op}/{name},{s.are_pct:.3f},{s.pre_pct:.2f}")
+    return {"table2": rows, "table2_16b": rows16}
 
 
 if __name__ == "__main__":

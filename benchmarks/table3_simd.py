@@ -12,11 +12,11 @@ on a VC707. Off-FPGA, the TPU-meaningful equivalents are:
     kernel path is the TPU artifact and is validated in interpret mode.
 
 Also demonstrates mixed precision + mixed functionality (§3.2): one call
-processing 8-bit mul lanes and 8-bit div lanes simultaneously.
+processing 8-bit mul lanes and 8-bit div lanes simultaneously. Timing uses
+the shared :mod:`repro.metrics` harness (warmup + ``block_until_ready``,
+shape-bucketed).
 """
 from __future__ import annotations
-
-import time
 
 import numpy as np
 import jax
@@ -24,20 +24,12 @@ import jax.numpy as jnp
 
 from repro.core import SimdiveSpec, pack
 from repro.kernels import get_op
+from repro.metrics import time_callable
 
 
-def _time(f, *args, iters=5):
-    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else \
-        jax.block_until_ready(f(*args))
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        jax.block_until_ready(f(*args))
-    return (time.perf_counter() - t0) / iters * 1e6  # us
-
-
-def main(report=print):
+def main(report=print, quick=False):
     rng = np.random.default_rng(0)
-    M, Nw = 256, 1024                       # 1M 8-bit lanes
+    M, Nw = (64, 256) if quick else (256, 1024)   # 1M 8-bit lanes full mode
     lanes = (M, Nw * 4)
     a = rng.integers(0, 256, lanes, dtype=np.uint32)
     b = rng.integers(1, 256, lanes, dtype=np.uint32)
@@ -51,6 +43,7 @@ def main(report=print):
     bu = jnp.asarray(b)
 
     n_lanes = a.size
+    rows = {}
     report("table3,metric,value,unit")
     report(f"table3,operand-bytes/lane packed,{aw.nbytes * 2 / n_lanes:.2f},B"
            " (4 lanes per uint32 word)")
@@ -72,15 +65,18 @@ def main(report=print):
     f_unpacked = jax.jit(lambda x, y: elem_op(x, y, op="mul"))
     f_exact = jax.jit(lambda x, y: x * y)
 
-    rows = [
-        ("packed mul (4x8b lanes)", _time(f_packed_mul, aw, bw)),
-        ("packed div", _time(f_packed_div, aw, bw)),
-        ("packed mixed mul/div", _time(f_packed_mix, aw, bw, mw)),
-        ("unpacked simdive mul", _time(f_unpacked, au, bu)),
-        ("exact uint32 mul", _time(f_exact, au, bu)),
+    timed = [
+        ("packed mul (4x8b lanes)", f_packed_mul, (aw, bw)),
+        ("packed div", f_packed_div, (aw, bw)),
+        ("packed mixed mul/div", f_packed_mix, (aw, bw, mw)),
+        ("unpacked simdive mul", f_unpacked, (au, bu)),
+        ("exact uint32 mul", f_exact, (au, bu)),
     ]
-    for name, us in rows:
-        report(f"table3,host-relative {name},{us:.0f},us per {n_lanes} lanes")
+    for name, f, args in timed:
+        t = time_callable(f, *args, iters=2 if quick else 5, items=n_lanes)
+        rows[name] = t
+        report(f"table3,host-relative {name},{t.mean_us:.0f},us per "
+               f"{n_lanes} lanes ({t.items_per_s:.3g} lanes/s)")
 
     # pallas kernel (interpret) single-shot sanity at reduced size
     small_a, small_b = aw[:16, :64], bw[:16, :64]
@@ -88,6 +84,7 @@ def main(report=print):
                  block=(16, 64))(small_a, small_b, op="mul")
     report(f"table3,pallas-packed-kernel validated,{out.shape},shape"
            " (interpret mode; TPU is the target)")
+    return rows
 
 
 if __name__ == "__main__":

@@ -24,6 +24,7 @@ import jax.numpy as jnp
 from repro.core import SimdiveSpec
 from repro.core.approx import quantize_sign_magnitude
 from repro.kernels import get_op
+from repro.metrics import classification_accuracy
 
 
 def make_dataset(n_train=6000, n_test=1000, seed=0, shift=2, noise=4.0):
@@ -108,12 +109,8 @@ def quantized_infer(ws, x, mul):
     return act
 
 
-def accuracy(logits, y):
-    return float((np.asarray(logits).argmax(-1) == y).mean()) * 100
-
-
-def main(report=print):
-    (xtr, ytr), (xte, yte) = make_dataset()
+def main(report=print, quick=False):
+    (xtr, ytr), (xte, yte) = make_dataset(seed=0)
     # approximate paths dispatch through the kernel registry entry point
     muls = {
         "accurate8": lambda a, b: (a.astype(jnp.int64) @ b.astype(jnp.int64)
@@ -127,17 +124,24 @@ def main(report=print):
     }
     report("table4,config,double-precision,accurate-8b,simdive-8b,mitchell-8b"
            "  (paper: SIMDive matches accurate to ~0.05%)")
-    for hidden in ((100,), (100, 100)):
-        ws, fwd = train_float(xtr, ytr, hidden=hidden)
-        acc_f = accuracy(fwd(ws, jnp.asarray(xte)), yte)
+    rows = {}
+    configs = ((100,),) if quick else ((100,), (100, 100))
+    for hidden in configs:
+        ws, fwd = train_float(xtr, ytr, hidden=hidden,
+                              steps=200 if quick else 600, seed=0)
+        acc_f = classification_accuracy(fwd(ws, jnp.asarray(xte)), yte)
         accs = {}
         for name, mul in muls.items():
-            accs[name] = accuracy(quantized_infer(ws, xte, mul), yte)
+            accs[name] = classification_accuracy(
+                quantized_infer(ws, xte, mul), yte)
         report(f"table4,{len(hidden)}x100,{acc_f:.2f},{accs['accurate8']:.2f},"
                f"{accs['simdive']:.2f},{accs['mitchell']:.2f}")
         delta = abs(accs["simdive"] - accs["accurate8"])
         report(f"table4,delta-simdive-vs-accurate-{len(hidden)}h,{delta:.2f},"
                "pct-points")
+        rows[f"{len(hidden)}x100"] = {"float": acc_f, **accs,
+                                      "delta_simdive_pct_points": delta}
+    return rows
 
 
 if __name__ == "__main__":

@@ -14,11 +14,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.table4_ann import (
-    accuracy,
     make_dataset,
     quantized_infer,
     train_float,
 )
+from repro.metrics import classification_accuracy as accuracy
 from repro.core import SimdiveSpec
 from repro.kernels import get_op
 

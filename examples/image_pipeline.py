@@ -10,9 +10,10 @@ Run:  PYTHONPATH=src python examples/image_pipeline.py
 import numpy as np
 import jax.numpy as jnp
 
-from benchmarks.fig34_imaging import GAUSS, FO, blend, gaussian, psnr, synth_image
-from benchmarks.table2_sisd import _const_corr_op
+from benchmarks.fig34_imaging import GAUSS, FO, blend, gaussian, synth_image
 from repro.core import SimdiveSpec, simdive_div, simdive_mul
+from repro.core.baselines import const_corr_op
+from repro.metrics import psnr
 
 
 def main():
@@ -22,13 +23,13 @@ def main():
         "accurate": lambda a, b: a.astype(jnp.uint32) * b,
         "simdive": lambda a, b: simdive_mul(a, b, spec),
         "mitchell": lambda a, b: simdive_mul(a, b, mit),
-        "mbm-const": _const_corr_op("mul", 16),
+        "mbm-const": const_corr_op("mul", 16),
     }
     divs = {
         "accurate": lambda a, b: ((a.astype(jnp.uint64) << FO)
                                   // b.astype(jnp.uint64)).astype(jnp.uint32),
         "simdive": lambda a, b: simdive_div(a, b, spec, frac_out=FO),
-        "inzed-const": lambda a, b: _const_corr_op("div", 16)(a, b, FO),
+        "inzed-const": lambda a, b: const_corr_op("div", 16)(a, b, FO),
     }
 
     img_a, img_b = synth_image(0), synth_image(1)

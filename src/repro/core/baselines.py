@@ -1,0 +1,79 @@
+"""Competitor designs from the paper's evaluation taxonomy (Table 2).
+
+These are the *baselines* SIMDive is measured against, factored out of the
+benchmark scripts so Table 2, Fig. 3/4 and the conformance suite share one
+definition of each competitor:
+
+  trunc_mul       truncated multiplier — multiply the top-``keep`` bits
+                  exactly (the DRUM-style family)
+  const_corr_op   Mitchell datapath + one *constant* log-domain correction,
+                  the mean of the ideal correction surface — MBM [28] for
+                  multiplication, INZeD [29] for division
+
+SIMDive itself (per-region correction) lives in :mod:`repro.core.simdive`;
+plain Mitchell in :mod:`repro.core.mitchell`.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from .error_lut import ideal_correction_div, ideal_correction_mul
+from .mitchell import (
+    frac_bits,
+    leading_one,
+    mitchell_antilog_div,
+    mitchell_antilog_mul,
+    mitchell_log,
+    work_dtype,
+)
+
+__all__ = ["trunc_mul", "const_corr_op"]
+
+
+def trunc_mul(a, b, width: int, keep: int):
+    """Truncated multiplier: multiply the top-``keep`` bits exactly."""
+    dt = work_dtype(width)
+    au, bu = a.astype(dt), b.astype(dt)
+    ka = leading_one(au, width).astype(jnp.int32)
+    kb = leading_one(bu, width).astype(jnp.int32)
+    sa = jnp.maximum(ka - (keep - 1), 0)
+    sb = jnp.maximum(kb - (keep - 1), 0)
+    ah = (au >> sa.astype(dt))
+    bh = (bu >> sb.astype(dt))
+    return (ah * bh) << (sa + sb).astype(dt)
+
+
+def const_corr_op(op: str, width: int):
+    """Single-constant-correction op (MBM for 'mul', INZeD for 'div').
+
+    The constant is the mean of the ideal log-domain correction surface
+    (error_lut's closed form) over the fraction square — the best single
+    coefficient, i.e. SIMDive with one region. Returns ``mul(a, b)`` or
+    ``div(a, b, frac_out)`` on unsigned operands; zero handling matches the
+    SIMDive datapath (x*0 = 0, 0/x = 0).
+    """
+    g = (np.arange(512) + 0.5) / 512
+    X1, X2 = np.meshgrid(g, g, indexing="ij")
+    f = ideal_correction_mul if op == "mul" else ideal_correction_div
+    c = float(f(X1, X2).mean())
+    F = frac_bits(width)
+    cc = jnp.asarray(int(round(c * (1 << F))), jnp.int32)
+
+    def mul(a, b):
+        dt = work_dtype(width)
+        au, bu = a.astype(dt), b.astype(dt)
+        la, lb = mitchell_log(au, width), mitchell_log(bu, width)
+        p = mitchell_antilog_mul(la, lb, width, corr=jnp.broadcast_to(cc, la.shape))
+        return jnp.where((au == 0) | (bu == 0), jnp.zeros_like(p), p)
+
+    def div(a, b, frac_out):
+        dt = work_dtype(width)
+        au, bu = a.astype(dt), b.astype(dt)
+        la, lb = mitchell_log(au, width), mitchell_log(bu, width)
+        q = mitchell_antilog_div(la, lb, width,
+                                 corr=jnp.broadcast_to(cc, la.shape),
+                                 frac_out=frac_out)
+        return jnp.where(au == 0, jnp.zeros_like(q), q)
+
+    return mul if op == "mul" else div

@@ -1,0 +1,39 @@
+"""repro.metrics — the one place error, image and timing metrics live.
+
+Benchmarks (`benchmarks/table*.py`, `fig*.py`, `run.py`), the tier-2
+conformance suite (`tests/conformance/`) and the BENCH trajectory all pull
+their statistics from here, so a metric's definition can never drift
+between the table that reports it and the test that bounds it.
+
+  error_stats / ErrorStats   ARE%/MRED/NMED/PRE%/WCE/error-rate
+  relative_error             per-lane relative error distances
+  classification_accuracy    top-1 % (Table 4)
+  psnr / ssim                image quality (Fig. 3/4)
+  time_callable / TimingStats  warmup + block_until_ready wall-clock,
+                               pow-2 shape-bucketed (registry bucketing)
+  grid8 / sample_uints / DIV_FRAC_OUT  shared operand sets + divider
+                               fixed-point convention for every sweep
+"""
+from .errors import (
+    ErrorStats,
+    classification_accuracy,
+    error_stats,
+    relative_error,
+)
+from .image import psnr, ssim
+from .operands import DIV_FRAC_OUT, grid8, sample_uints
+from .timing import TimingStats, time_callable
+
+__all__ = [
+    "ErrorStats",
+    "error_stats",
+    "relative_error",
+    "classification_accuracy",
+    "psnr",
+    "ssim",
+    "TimingStats",
+    "time_callable",
+    "DIV_FRAC_OUT",
+    "grid8",
+    "sample_uints",
+]

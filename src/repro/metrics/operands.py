@@ -1,0 +1,48 @@
+"""Shared operand sets + evaluation conventions for the error sweeps.
+
+Every exhaustive or sampled sweep — Table 2, Fig. 1, the BENCH grid in
+``benchmarks/run.py`` and the tier-2 conformance suite — draws its
+operands from here, so "the 8-bit grid" provably means the same operand
+set everywhere (and a fix to one sweep cannot silently diverge from the
+others). Arrays are host numpy; call sites wrap in ``jnp.asarray``.
+
+``DIV_FRAC_OUT`` is the divider fixed-point output format of the whole
+evaluation (paper's 16/8 divider: 12 fractional quotient bits keeps every
+quotient above the quantization floor); Table 2, the BENCH grid and the
+conformance bounds must all quantize quotients identically or trajectory
+diffs compare different formats under the same config key.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["DIV_FRAC_OUT", "grid8", "sample_uints"]
+
+#: divider fixed-point output bits used by every error sweep
+DIV_FRAC_OUT = 12
+
+
+def grid8(include_zero: bool = False, flat: bool = True):
+    """The exhaustive 8-bit operand grid as two uint32 arrays.
+
+    ``include_zero`` adds the zero row/column (the zero-flag bypass is
+    part of the datapath contract; accuracy sweeps exclude it because a
+    zero operand has no relative error). ``flat`` ravels the meshgrid.
+    """
+    a = np.arange(0 if include_zero else 1, 256, dtype=np.uint32)
+    A, B = np.meshgrid(a, a, indexing="ij")
+    if flat:
+        return A.ravel(), B.ravel()
+    return A, B
+
+
+def sample_uints(width: int, n: int, seed: int, *, lo: int = 1,
+                 b_width: int | None = None):
+    """Seeded uniform operand pair; ``b_width`` narrows the second operand
+    (the paper's N/8 divider format)."""
+    rng = np.random.default_rng(seed)
+    dt = np.uint32 if width <= 16 else np.uint64
+    a = rng.integers(lo, 1 << width, n, dtype=np.uint64).astype(dt)
+    b = rng.integers(lo, 1 << (b_width or width), n,
+                     dtype=np.uint64).astype(dt)
+    return a, b

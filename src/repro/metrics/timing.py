@@ -1,0 +1,75 @@
+"""Wall-clock timing harness for registry ops and jitted callables.
+
+One timing discipline for every benchmark: warm the callable (compile +
+autotune) with ``jax.block_until_ready`` on its full output pytree, then
+time ``iters`` synchronous repetitions and report mean/best. Results carry
+the operands' pow-2 shape buckets (the same bucketing the kernel registry's
+autotune cache uses), so trajectory entries from different runs compare
+like against like even when exact shapes drift.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import jax
+
+from repro.kernels.registry import shape_bucket
+
+__all__ = ["TimingStats", "time_callable"]
+
+
+@dataclass(frozen=True)
+class TimingStats:
+    """Synchronous wall-clock profile of one callable on fixed operands."""
+    mean_s: float
+    best_s: float
+    iters: int
+    warmup: int
+    shape_buckets: tuple      # pow-2 bucket of each array operand
+    items: int | None         # caller-declared work items (e.g. lanes)
+
+    @property
+    def mean_us(self) -> float:
+        return self.mean_s * 1e6
+
+    @property
+    def items_per_s(self) -> float | None:
+        if self.items is None or self.mean_s == 0:
+            return None
+        return self.items / self.mean_s
+
+    def as_dict(self) -> dict:
+        """Plain-JSON form (the BENCH_simdive.json ``throughput`` object)."""
+        return {
+            "mean_us": self.mean_us,
+            "best_us": self.best_s * 1e6,
+            "iters": self.iters,
+            "warmup": self.warmup,
+            "shape_buckets": [list(b) for b in self.shape_buckets],
+            "items": self.items,
+            "items_per_s": self.items_per_s,
+        }
+
+
+def time_callable(fn, *args, iters: int = 5, warmup: int = 1,
+                  items: int | None = None, **kw) -> TimingStats:
+    """Time ``fn(*args, **kw)`` end-to-end, device-synchronized.
+
+    ``items`` declares how many logical work units one call processes
+    (lanes, elements, MACs) so :attr:`TimingStats.items_per_s` is
+    meaningful. Interpreter-mode wall-clock is still *reported* by this
+    harness — trajectory consumers filter on the backend field instead of
+    this layer guessing which numbers matter.
+    """
+    buckets = tuple(shape_bucket(a.shape) for a in args if hasattr(a, "shape"))
+    for _ in range(max(warmup, 1)):
+        jax.block_until_ready(fn(*args, **kw))
+    times = []
+    for _ in range(max(iters, 1)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kw))
+        times.append(time.perf_counter() - t0)
+    return TimingStats(mean_s=sum(times) / len(times), best_s=min(times),
+                       iters=len(times), warmup=max(warmup, 1),
+                       shape_buckets=buckets, items=items)

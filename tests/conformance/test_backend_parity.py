@@ -1,0 +1,58 @@
+"""Tier-2 conformance: exhaustive 8-bit backend parity, full coeff sweep.
+
+PR 1's tier-1 parity tests cover random operands at default coefficients;
+this suite closes the gap: for EVERY 8-bit operand pair (256 x 256,
+including the zero row/column the hardware's zero flag handles) and every
+``coeff_bits`` setting, the Pallas kernel path (interpret mode off-TPU)
+must be bit-identical to the reference oracle — for mul AND div. Integer
+outputs leave no tolerance to hide behind.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import SimdiveSpec
+from repro.kernels import get_op
+from repro.metrics import grid8
+
+pytestmark = pytest.mark.tier2
+
+COEFF_SWEEP = (0, 1, 2, 3, 4, 5, 6, 7, 8)
+
+
+def _full_grid8():
+    """Every 8-bit pair, zeros included (zero-flag bypass is part of the
+    datapath contract)."""
+    A, B = grid8(include_zero=True, flat=False)
+    return jnp.asarray(A), jnp.asarray(B)
+
+
+@pytest.mark.parametrize("coeff_bits", COEFF_SWEEP)
+@pytest.mark.parametrize("op", ["mul", "div"])
+def test_exhaustive_parity_interpret_vs_ref(op, coeff_bits):
+    A, B = _full_grid8()
+    spec = SimdiveSpec(width=8, coeff_bits=coeff_bits)
+    kw = {"op": op} if op == "mul" else {"op": op, "frac_out": 12}
+    want = get_op("elemwise", spec, "ref")(A, B, **kw)
+    got = get_op("elemwise", spec, "pallas-interpret",
+                 block=(64, 128))(A, B, **kw)
+    assert got.dtype == want.dtype
+    mismatch = np.asarray(got) != np.asarray(want)
+    assert not mismatch.any(), (
+        f"{op} cb={coeff_bits}: {mismatch.sum()} mismatching pairs, "
+        f"first at {np.argwhere(mismatch)[:4].tolist()}")
+
+
+@pytest.mark.parametrize("coeff_bits", (0, 4, 6))
+def test_exhaustive_parity_mixed_mode(coeff_bits):
+    """Mixed functionality (§3.2): per-element mul/div selection must also
+    agree bit-for-bit across backends."""
+    A, B = _full_grid8()
+    rng = np.random.default_rng(7)
+    mode = jnp.asarray(rng.integers(0, 2, A.shape, dtype=np.uint32))
+    spec = SimdiveSpec(width=8, coeff_bits=coeff_bits)
+    kw = dict(op="mixed", mode=mode, frac_out=8)
+    want = get_op("elemwise", spec, "ref")(A, B, **kw)
+    got = get_op("elemwise", spec, "pallas-interpret",
+                 block=(64, 128))(A, B, **kw)
+    assert np.array_equal(np.asarray(got), np.asarray(want))

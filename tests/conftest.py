@@ -1,10 +1,53 @@
-"""Test-process JAX config.
+"""Test-process JAX config + the tier-1 / tier-2 split.
 
 x64 is enabled so the 32-bit SIMDive datapath (which needs uint64
 intermediates, like the FPGA's 64-bit product bus) can run on CPU.
 NOTE: tests deliberately see the real single CPU device — only
 ``launch/dryrun.py`` requests the 512 placeholder devices.
+
+Tiers: tests marked ``@pytest.mark.tier2`` are the conformance suite
+(``tests/conformance/``) — exhaustive operand sweeps and paper-bound
+assertions that take minutes, not seconds. They are *deselected* (not
+skipped) unless ``--tier2`` is passed, so the fast tier-1 run's
+pass/skip counts are unaffected by tier-2 growth:
+
+  PYTHONPATH=src python -m pytest -x -q              # tier-1 (default)
+  PYTHONPATH=src python -m pytest -q --tier2         # tier-1 + tier-2
+  PYTHONPATH=src python -m pytest -q --tier2 tests/conformance  # tier-2 only
 """
 import jax
+import pytest
 
 jax.config.update("jax_enable_x64", True)
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--tier2", action="store_true", default=False,
+        help="run the tier-2 conformance suite (exhaustive sweeps, "
+             "paper-accuracy bounds; minutes of runtime)")
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "tier2: tier-2 conformance test (exhaustive/slow; needs --tier2)")
+
+
+def pytest_ignore_collect(collection_path, config):
+    # tier-2 modules aren't even imported without --tier2 (a module-level
+    # importorskip would otherwise surface as a skip in the tier-1 counts)
+    if not config.getoption("--tier2"):
+        if collection_path.is_dir() and collection_path.name == "conformance":
+            return True
+    return None
+
+
+def pytest_collection_modifyitems(config, items):
+    if config.getoption("--tier2"):
+        return
+    kept = [i for i in items if i.get_closest_marker("tier2") is None]
+    deselected = [i for i in items if i.get_closest_marker("tier2")]
+    if deselected:
+        config.hook.pytest_deselected(items=deselected)
+        items[:] = kept

@@ -1,0 +1,136 @@
+"""Property-based tests of the datapath stage algebra (kernels/datapath).
+
+The stage library is the one shared implementation of the paper's
+datapath; these properties pin down the algebra every kernel body relies
+on, across all SUPPORTED_WIDTHS:
+
+  * lane_expand / lane_repack are inverse bijections on packed words,
+  * sign_split / sign_join are inverse on the signed lane range,
+  * region_corr selects exactly the coefficient ``tab[region_index(...)]``
+    — i.e. the kernel-friendly one-hot/MXU gather agrees with a plain
+    host-side table gather for every width.
+
+Sampling is deterministic (seeded generators, many draws per property) so
+these stay in tier-1 with no optional-dependency skips; the
+hypothesis-driven wide-operand suite lives in tests/conformance/.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.error_lut import region_index, table_for
+from repro.core.mitchell import SUPPORTED_WIDTHS, work_dtype
+from repro.kernels import datapath as dp
+
+PACK_WIDTHS = (8, 16)   # sub-word lanes exist below 32
+N_DRAWS = 25
+
+
+def _draws(seed0):
+    return [np.random.default_rng(seed0 + i) for i in range(N_DRAWS)]
+
+
+@pytest.mark.parametrize("width", PACK_WIDTHS)
+def test_lane_expand_repack_roundtrip(width):
+    """repack(expand(w)) == w for every packed word tensor."""
+    for rng in _draws(100 + width):
+        rows = int(rng.integers(1, 5))
+        words = int(rng.integers(1, 17))
+        w = jnp.asarray(
+            rng.integers(0, 1 << 32, (rows, words), dtype=np.uint64)
+            .astype(np.uint32))
+        lanes = dp.lane_expand(w, width)
+        assert len(lanes) == 32 // width
+        back = dp.lane_repack(lanes, width)
+        assert back.dtype == w.dtype
+        assert np.array_equal(np.asarray(back), np.asarray(w))
+
+
+@pytest.mark.parametrize("width", PACK_WIDTHS)
+def test_lane_expand_values_little_endian(width):
+    """Lane i of word k is bits [i*w, (i+1)*w) — the FPGA sub-word wiring."""
+    for rng in _draws(200 + width):
+        w_np = rng.integers(0, 1 << 32, 8, dtype=np.uint64).astype(np.uint32)
+        lanes = dp.lane_expand(jnp.asarray(w_np), width)
+        for i, lane in enumerate(lanes):
+            want = (w_np >> (width * i)) & ((1 << width) - 1)
+            assert np.array_equal(np.asarray(lane), want)
+
+
+def test_lane_repack_interleaves_doubled_width():
+    """2w-bit products of a 4-lane word pair land little-endian across two
+    output words (the FPGA's doubled output bus)."""
+    lanes = [jnp.asarray([v], jnp.uint32) for v in (0x1111, 0x2222,
+                                                    0x3333, 0x4444)]
+    out = np.asarray(dp.lane_repack(lanes, 16))
+    assert out.tolist() == [0x22221111, 0x44443333]
+
+
+@pytest.mark.parametrize("width", SUPPORTED_WIDTHS)
+def test_sign_split_join_inverse(width):
+    """join(split(x)) == x over the signed lane range (sign-magnitude)."""
+    hi = min((1 << width) - 1, (1 << 31) - 1)   # int32 sign channel
+    for rng in _draws(300 + width):
+        x = jnp.asarray(rng.integers(-hi, hi + 1, 256, dtype=np.int64)
+                        .astype(np.int32))
+        mag, sign = dp.sign_split(x, width)
+        assert mag.dtype == jnp.uint32
+        assert set(np.unique(np.asarray(sign))) <= {-1, 1}
+        back = dp.sign_join(mag, sign)
+        assert np.array_equal(np.asarray(back), np.asarray(x))
+
+
+def test_sign_split_clamps_to_lane():
+    """Out-of-lane magnitudes saturate at the lane maximum (width 8)."""
+    mag, sign = dp.sign_split(jnp.asarray([-300, 300], jnp.int32), 8)
+    assert np.asarray(mag).tolist() == [255, 255]
+    assert np.asarray(sign).tolist() == [-1, 1]
+
+
+@pytest.mark.parametrize("width", SUPPORTED_WIDTHS)
+@pytest.mark.parametrize("op", ["mul", "div"])
+@pytest.mark.parametrize("index_bits", [3, 4])
+def test_region_corr_agrees_with_region_index(width, op, index_bits):
+    """region_corr == tab[region_index(fracs)] for every width — the
+    one-hot (MXU) gather and a plain gather are the same function."""
+    dt = work_dtype(width)
+    tab = table_for(op, width, coeff_bits=6, index_bits=index_bits)
+    for rng in _draws(400 + width):
+        a = jnp.asarray(rng.integers(1, 1 << width, 128,
+                                     dtype=np.uint64)).astype(dt)
+        b = jnp.asarray(rng.integers(1, 1 << width, 128,
+                                     dtype=np.uint64)).astype(dt)
+        la, lb = dp.lod_log(a, width), dp.lod_log(b, width)
+        got = dp.region_corr(la, lb, tab, width, index_bits)
+        m = dp.fraction_mask(width, la.dtype)
+        idx = np.asarray(region_index(la & m, lb & m, width, index_bits))
+        want = np.asarray(tab)[idx]
+        assert np.array_equal(np.asarray(got), want)
+
+
+@pytest.mark.parametrize("width", SUPPORTED_WIDTHS)
+def test_region_corr_zero_gate(width):
+    """A False gate lane must get coefficient 0 (the zero-flag bypass)."""
+    dt = work_dtype(width)
+    tab = table_for("mul", width, coeff_bits=6)
+    for rng in _draws(500 + width):
+        a = jnp.asarray(rng.integers(1, 1 << width, 64,
+                                     dtype=np.uint64)).astype(dt)
+        la = dp.lod_log(a, width)
+        gate = jnp.asarray(rng.integers(0, 2, 64) == 1)
+        corr = dp.region_corr(la, la, tab, width, gate=gate)
+        assert not np.asarray(corr)[~np.asarray(gate)].any()
+
+
+def test_split_tables_mixed_halves():
+    """'mixed' tables are the [mul | div] concatenation, split back out."""
+    for index_bits in (3, 4):
+        tab = dp.op_table("mixed", 8, coeff_bits=6, index_bits=index_bits)
+        tm, td = dp.split_tables(tab, index_bits, "mixed")
+        assert np.array_equal(np.asarray(tm),
+                              np.asarray(table_for("mul", 8, 6, index_bits)))
+        assert np.array_equal(np.asarray(td),
+                              np.asarray(table_for("div", 8, 6, index_bits)))
+        # non-mixed ops pass the table through untouched
+        same_m, same_d = dp.split_tables(tab, index_bits, "mul")
+        assert same_m is tab and same_d is tab

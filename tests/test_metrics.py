@@ -1,0 +1,125 @@
+"""Unit tests of the shared metrics module (repro.metrics).
+
+The benchmarks and the tier-2 conformance bounds both consume these
+definitions, so they get their own hand-computed fixtures here.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.metrics import (
+    ErrorStats,
+    classification_accuracy,
+    error_stats,
+    psnr,
+    relative_error,
+    ssim,
+    time_callable,
+)
+
+
+# ---------------------------------------------------------------- errors --
+def test_error_stats_hand_computed():
+    exact = np.array([10.0, 20.0, 40.0, 0.0])
+    approx = np.array([11.0, 20.0, 38.0, 0.0])
+    s = error_stats(approx, exact)
+    # relative errors on nonzero lanes: 0.1, 0, 0.05
+    assert s.n == 4
+    assert s.mred == pytest.approx(0.05)
+    assert s.are_pct == pytest.approx(5.0)
+    assert s.pre_pct == pytest.approx(10.0)
+    assert s.wce == pytest.approx(2.0)
+    assert s.nmed == pytest.approx((1 + 0 + 2 + 0) / 4 / 40.0)
+    assert s.error_rate == pytest.approx(2 / 4)
+    assert isinstance(s, ErrorStats)
+
+
+def test_error_stats_exact_match_is_all_zero():
+    x = np.arange(1, 100, dtype=np.float64)
+    s = error_stats(x, x)
+    assert (s.are_pct, s.pre_pct, s.wce, s.error_rate) == (0, 0, 0, 0)
+
+
+def test_error_stats_roundtrips_to_json_dict():
+    s = error_stats([1.0, 2.0], [1.0, 4.0])
+    d = s.as_dict()
+    assert set(d) == {"n", "are_pct", "mred", "nmed", "pre_pct", "wce",
+                      "error_rate"}
+    assert all(isinstance(v, (int, float)) for v in d.values())
+
+
+def test_error_stats_shape_mismatch_raises():
+    with pytest.raises(ValueError, match="shape mismatch"):
+        error_stats(np.zeros(3), np.zeros(4))
+    with pytest.raises(ValueError, match="at least one"):
+        error_stats(np.zeros(0), np.zeros(0))
+
+
+def test_relative_error_zero_exact_lanes():
+    re = relative_error([0.0, 5.0, 3.0], [0.0, 0.0, 2.0])
+    assert re[0] == 0.0            # 0 where both are zero
+    assert np.isinf(re[1])         # nonzero output where zero required
+    assert re[2] == pytest.approx(0.5)
+
+
+def test_classification_accuracy():
+    logits = np.array([[0.1, 0.9], [0.8, 0.2], [0.3, 0.7]])
+    assert classification_accuracy(logits, [1, 0, 0]) == pytest.approx(
+        200 / 3)
+
+
+# ----------------------------------------------------------------- image --
+def test_psnr_identical_and_known_mse():
+    img = np.random.default_rng(0).integers(0, 256, (32, 32)).astype(float)
+    assert psnr(img, img) == 99.0
+    # uniform +5 error: MSE 25 -> 10*log10(255^2/25)
+    assert psnr(img, img + 5) == pytest.approx(10 * np.log10(255**2 / 25))
+
+
+def test_psnr_orders_by_noise_level():
+    rng = np.random.default_rng(1)
+    img = rng.integers(0, 256, (64, 64)).astype(float)
+    a = psnr(img, img + rng.normal(scale=2, size=img.shape))
+    b = psnr(img, img + rng.normal(scale=20, size=img.shape))
+    assert a > b
+
+
+def test_ssim_bounds_and_ordering():
+    rng = np.random.default_rng(2)
+    img = rng.integers(0, 256, (64, 64)).astype(float)
+    assert ssim(img, img) == pytest.approx(1.0)
+    light = ssim(img, np.clip(img + rng.normal(scale=5, size=img.shape), 0, 255))
+    heavy = ssim(img, np.clip(img + rng.normal(scale=60, size=img.shape), 0, 255))
+    assert -1.0 <= heavy < light < 1.0
+
+
+def test_ssim_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        ssim(np.zeros((16, 16)), np.zeros((16, 17)))
+    with pytest.raises(ValueError):
+        ssim(np.zeros((4, 4)), np.zeros((4, 4)), win=8)
+
+
+# ---------------------------------------------------------------- timing --
+def test_time_callable_stats_and_buckets():
+    calls = []
+
+    def f(x, y):
+        calls.append(1)
+        return jnp.asarray(x) + jnp.asarray(y)
+
+    a = jnp.zeros((7, 60))
+    t = time_callable(f, a, a, iters=3, warmup=2, items=a.size)
+    assert len(calls) == 5                       # 2 warmup + 3 timed
+    assert t.iters == 3 and t.warmup == 2
+    assert t.best_s <= t.mean_s
+    assert t.shape_buckets == ((8, 64), (8, 64))  # pow-2 registry bucketing
+    assert t.items_per_s is not None and t.items_per_s > 0
+    d = t.as_dict()
+    assert d["mean_us"] == pytest.approx(t.mean_s * 1e6)
+    assert d["shape_buckets"] == [[8, 64], [8, 64]]
+
+
+def test_time_callable_without_items():
+    t = time_callable(lambda: jnp.zeros(4), iters=1)
+    assert t.items is None and t.items_per_s is None
