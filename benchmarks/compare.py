@@ -1,0 +1,295 @@
+"""The trajectory regression gate, as a CLI.
+
+Diffs a candidate BENCH run against the committed baseline trajectory and
+exits non-zero on any regression (see :mod:`repro.metrics.trajectory` for
+the classification rules and default thresholds).
+
+Usage:
+  python benchmarks/compare.py
+      Gate the committed trajectory against itself: latest grid-bearing
+      run vs the previous one. With fewer than two grid runs there is
+      nothing to diff — the gate passes vacuously (a fresh clone must
+      never fail CI).
+  python benchmarks/compare.py --candidate fresh.json
+      Gate a fresh run file (e.g. tier-2 CI's ``run.py --quick`` output,
+      written to a scratch path) against the committed baseline. The
+      latest grid-bearing run on each side is compared.
+  python benchmarks/compare.py --self-test
+      No sweeps, no files: run the gate over built-in fixtures and verify
+      every class trips (and only then). Tier-1 CI runs this on every
+      push so a compare.py breakage cannot hide until the nightly diff.
+
+Exit codes: 0 pass · 1 regression (per-key report on stdout) · 2 the
+trajectory itself could not be read.
+"""
+from __future__ import annotations
+
+import argparse
+import copy
+import importlib.util
+import os
+import sys
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_TRAJ_PATH = os.path.join(_REPO_ROOT, "src", "repro", "metrics",
+                          "trajectory.py")
+if __package__ in (None, ""):
+    sys.path.insert(0, _REPO_ROOT)
+    sys.path.insert(0, os.path.join(_REPO_ROOT, "src"))
+
+
+def _load_trajectory_module():
+    """Load trajectory.py straight from its file, not via the package.
+
+    ``repro.metrics.__init__`` eagerly imports the timing harness and with
+    it jax; the gate must stay runnable on a box whose accelerator stack
+    is broken (that being one of the failure modes it judges), so it takes
+    the pure-stdlib module alone. Falls back to the package import when
+    the source layout differs (e.g. an installed distribution).
+    """
+    name = "simdive_bench_trajectory"
+    try:
+        spec = importlib.util.spec_from_file_location(name, _TRAJ_PATH)
+        mod = importlib.util.module_from_spec(spec)
+        sys.modules[name] = mod      # dataclasses resolve via sys.modules
+        try:
+            spec.loader.exec_module(mod)
+        except BaseException:
+            sys.modules.pop(name, None)
+            raise
+        return mod
+    except (OSError, ImportError, AttributeError):
+        from repro.metrics import trajectory
+        return trajectory
+
+
+_traj = _load_trajectory_module()
+SCHEMA_V1 = _traj.SCHEMA_V1
+Thresholds = _traj.Thresholds
+TrajectoryError = _traj.TrajectoryError
+diff_runs = _traj.diff_runs
+latest_grid_run = _traj.latest_grid_run
+load_trajectory = _traj.load_trajectory
+migrate_doc = _traj.migrate_doc
+
+DEFAULT_BENCH = os.path.join(_REPO_ROOT, "BENCH_simdive.json")
+
+
+# ------------------------------------------------------------- fixtures --
+def fixture_entry(**over) -> dict:
+    """One healthy v2 grid entry; keyword overrides patch any field.
+
+    Shared with tests/test_trajectory.py — the gate's unit tests and its
+    --self-test must agree on what a plausible record looks like.
+    """
+    entry = {
+        "kernel": "elemwise", "op": "mul", "width": 8, "coeff_bits": 6,
+        "index_bits": 3, "backend": "ref", "status": "ok",
+        "n": 65025, "seed": 0, "exhaustive": True, "frac_out": 0,
+        "error": {"n": 65025, "are_pct": 0.845, "mred": 0.00845,
+                  "nmed": 0.0018, "pre_pct": 4.54, "wce": 1072.0,
+                  "error_rate": 0.984},
+        "throughput": {"mean_us": 900.0, "best_us": 850.0, "iters": 5,
+                       "warmup": 1, "shape_buckets": [[65536], [65536]],
+                       "items": 65025, "items_per_s": 7.2e7},
+    }
+    err = over.pop("error", None)
+    tp = over.pop("throughput", None)
+    entry.update(over)
+    if err:
+        entry["error"] = {**entry["error"], **err}
+    if tp:
+        entry["throughput"] = {**entry["throughput"], **tp}
+    return entry
+
+
+def fixture_v1_entry(**over) -> dict:
+    """:func:`fixture_entry` as a v1 record — the fields v2 backfills
+    (``kernel``/``status``) stripped. The one place the v1/v2 field delta
+    is encoded for fixtures; tests derive v1 records from here too."""
+    return {k: v for k, v in fixture_entry(**over).items()
+            if k not in ("kernel", "status")}
+
+
+def fixture_run(entries: list[dict] | None = None, **over) -> dict:
+    """One v2 run record around ``entries`` (default: a 3-config grid
+    spanning exhaustive/sampled/parity, the classes the gate treats
+    differently)."""
+    if entries is None:
+        entries = [
+            fixture_entry(),
+            fixture_entry(op="div", width=16, exhaustive=False, n=250000,
+                          frac_out=12,
+                          error={"are_pct": 0.41, "mred": 0.0041},
+                          throughput={"mean_us": 1500.0,
+                                      "shape_buckets": [[262144], [262144]]}),
+            fixture_entry(backend="pallas-interpret", exhaustive=False,
+                          n=4096,
+                          throughput={"mean_us": 4.0e6,
+                                      "shape_buckets": [[4096], [4096]]}),
+        ]
+    run = {"created_unix": 0, "quick": True, "only": None, "seconds": 1.0,
+           "jax": "0.0", "platform": "cpu", "failures": 0,
+           "grid": entries, "suites": {}}
+    run.update(over)
+    return run
+
+
+def _self_test() -> int:
+    """Exercise every gate class on fixtures; 0 iff the gate behaves."""
+    base = fixture_run()
+    checks: list[tuple[str, bool, str]] = []
+
+    def check(name: str, ok: bool, detail: str = "") -> None:
+        checks.append((name, ok, detail))
+
+    # identical runs pass clean
+    r = diff_runs(base, copy.deepcopy(base))
+    check("identical-pass", r.ok and r.compared == 3, r.render())
+
+    # worsened exhaustive ARE% -> error-regression
+    cand = copy.deepcopy(base)
+    cand["grid"][0]["error"]["are_pct"] += 0.01
+    r = diff_runs(base, cand)
+    check("exhaustive-error-trips",
+          not r.ok and [f.kind for f in r.failures] == ["error-regression"],
+          r.render())
+
+    # sampled config: small drift tolerated, big drift trips
+    cand = copy.deepcopy(base)
+    cand["grid"][1]["error"]["are_pct"] *= 1.01
+    check("sampled-rtol-tolerated", diff_runs(base, cand).ok,
+          diff_runs(base, cand).render())
+    cand["grid"][1]["error"]["are_pct"] *= 1.10
+    r = diff_runs(base, cand)
+    check("sampled-error-trips",
+          not r.ok and [f.kind for f in r.failures] == ["error-regression"],
+          r.render())
+
+    # >5% ref throughput drop trips; interpreter timing never does
+    cand = copy.deepcopy(base)
+    cand["grid"][0]["throughput"]["best_us"] *= 1.10
+    cand["grid"][2]["throughput"]["best_us"] *= 50.0
+    r = diff_runs(base, cand)
+    check("ref-throughput-trips",
+          not r.ok
+          and [f.kind for f in r.failures] == ["throughput-regression"],
+          r.render())
+
+    # a per-config failure is a gate failure, distinct from 'missing'
+    cand = copy.deepcopy(base)
+    cand["grid"][0] = {k: v for k, v in cand["grid"][0].items()
+                       if k != "error"}
+    cand["grid"][0].update(status="failed", error_msg="XlaRuntimeError: boom")
+    r = diff_runs(base, cand)
+    check("config-failed-trips",
+          not r.ok and [f.kind for f in r.failures] == ["config-failed"],
+          r.render())
+
+    # missing config: warning by default, failure under strict_missing
+    cand = copy.deepcopy(base)
+    del cand["grid"][0]
+    r = diff_runs(base, cand)
+    check("missing-warns", r.ok and any(f.kind == "config-missing"
+                                        for f in r.findings), r.render())
+    r = diff_runs(base, cand, Thresholds(strict_missing=True))
+    check("missing-strict-fails",
+          not r.ok and [f.kind for f in r.failures] == ["config-missing"],
+          r.render())
+
+    # v1 documents migrate and gate cleanly against v2 runs
+    v1 = migrate_doc({"schema": SCHEMA_V1,
+                      "runs": [{"grid": [fixture_v1_entry()]}]})
+    r = diff_runs(v1["runs"][0], fixture_run(entries=[fixture_entry()]))
+    check("v1-migration-compares", r.ok and r.compared == 1, r.render())
+
+    # a brand-new config that already failed is a failure, not news
+    cand = copy.deepcopy(base)
+    cand["grid"].append({**fixture_entry(op="mixed"), "status": "failed",
+                         "error_msg": "new and broken"})
+    del cand["grid"][-1]["error"]
+    r = diff_runs(base, cand)
+    check("new-failed-config-trips",
+          not r.ok and [f.kind for f in r.failures] == ["config-failed"],
+          r.render())
+
+    failed = [c for c in checks if not c[1]]
+    for name, ok, detail in checks:
+        print(f"self-test {'ok  ' if ok else 'FAIL'} {name}")
+        if not ok and detail:
+            print("  " + detail.replace("\n", "\n  "))
+    print(f"self-test: {len(checks) - len(failed)}/{len(checks)} passed")
+    return 1 if failed else 0
+
+
+# ------------------------------------------------------------------ CLI --
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Diff a BENCH run against the committed trajectory "
+                    "and fail on regressions.")
+    ap.add_argument("--baseline", default=DEFAULT_BENCH,
+                    help="committed trajectory file (default: "
+                         "BENCH_simdive.json)")
+    ap.add_argument("--candidate", default=None,
+                    help="fresh run file to gate; default: the baseline's "
+                         "own latest grid run vs its previous one")
+    ap.add_argument("--throughput-drop-pct", type=float,
+                    default=Thresholds.throughput_drop_pct,
+                    help="max tolerated %% slowdown on ref configs "
+                         "(default %(default)s)")
+    ap.add_argument("--error-rtol", type=float,
+                    default=Thresholds.sampled_error_rtol,
+                    help="relative error-stat headroom on sampled configs "
+                         "(default %(default)s)")
+    ap.add_argument("--strict-missing", action="store_true",
+                    help="fail (not warn) when a baseline config is absent "
+                         "from the candidate")
+    ap.add_argument("--self-test", action="store_true",
+                    help="no files: verify the gate trips on built-in "
+                         "fixtures (tier-1 CI)")
+    args = ap.parse_args(argv)
+
+    if args.self_test:
+        return _self_test()
+
+    th = Thresholds(throughput_drop_pct=args.throughput_drop_pct,
+                    sampled_error_rtol=args.error_rtol,
+                    strict_missing=args.strict_missing)
+    try:
+        base_doc = load_trajectory(args.baseline)
+        if args.candidate is not None:
+            cand_doc = load_trajectory(args.candidate, missing_ok=False)
+            cand = latest_grid_run(cand_doc)
+            baseline = latest_grid_run(base_doc)
+            cand_label = os.path.basename(args.candidate)
+        else:
+            # self-diff: the file's latest grid run against its own history
+            runs = base_doc.get("runs", [])
+            cand_i = next((i for i in range(len(runs) - 1, -1, -1)
+                           if runs[i].get("grid")), None)
+            cand = runs[cand_i] if cand_i is not None else None
+            baseline = (latest_grid_run(base_doc, before=cand_i)
+                        if cand_i is not None else None)
+            cand_label = f"{os.path.basename(args.baseline)}[latest]"
+    except TrajectoryError as e:
+        print(f"trajectory gate: cannot read inputs: {e}")
+        return 2
+
+    if cand is None:
+        print("trajectory gate: candidate has no grid-bearing run; "
+              "nothing to gate (pass)")
+        return 0
+    if baseline is None:
+        print("trajectory gate: no baseline grid run to diff against; "
+              "nothing to gate (pass)")
+        return 0
+
+    report = diff_runs(baseline, cand, th,
+                       baseline_label=os.path.basename(args.baseline),
+                       candidate_label=cand_label)
+    print(report.render())
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

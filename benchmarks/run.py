@@ -15,11 +15,21 @@ Two outputs per run:
                          the per-PR perf/accuracy history CI diffs against.
 
 A run record's ``grid`` section is the conformance-shaped sweep: one entry
-per (op, width, coeff_bits, backend) combination, each carrying the full
+per (kernel, op, width, coeff_bits, backend) combination — ``elemwise``
+mul/div, ``packed`` (all four 8-bit lanes per word, mul/div/mixed mode)
+and ``matmul_int``/``matmul_emul`` (accumulate-level NMED vs the exact
+integer matmul across a small K sweep) — each carrying the full
 :mod:`repro.metrics` error profile (ARE%/MRED/NMED/PRE%/WCE/error-rate
-against the exact result) and a shape-bucketed throughput measurement —
+against the exact result) and a shape-bucketed throughput measurement;
 everything flows through the kernel-registry ``get_op`` entry point. The
 ``suites`` section captures each table/figure module's structured rows.
+
+Schema: ``simdive-bench/v2`` (see :mod:`repro.metrics.trajectory`). A
+config that raises mid-sweep is recorded as ``{"status": "failed", ...}``
+and the sweep continues — the regression gate (``benchmarks/compare.py``)
+can then distinguish a config that *broke* from one that merely wasn't
+run. v1 files are migrated in place on the next append; a file that does
+not parse at all is renamed aside (never silently discarded).
 """
 from __future__ import annotations
 
@@ -41,14 +51,18 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import SimdiveSpec
+from repro.core.approx import quantize_sign_magnitude
+from repro.core.simd_pack import pack, unpack
 from repro.kernels import get_op
 from repro.metrics import (
     DIV_FRAC_OUT,
+    PACKED_DIV_FRAC_OUT,
     error_stats,
     grid8,
     sample_uints,
     time_callable,
 )
+from repro.metrics.trajectory import SCHEMA_V2, TrajectoryError, migrate_doc
 
 SUITES = [
     # (name, module, runs-under---quick, what it reproduces)
@@ -71,66 +85,274 @@ GRID_SEED = 0         # explicit seed: trajectory numbers must reproduce
 
 # ------------------------------------------------------------------ grid --
 def _grid_operands(op: str, width: int, n: int, exhaustive: bool):
-    """Seeded operand sets; the divider uses the paper's N/8 format."""
+    """Seeded operand sets; the divider uses the paper's N/8 format.
+
+    ``b_lo=1`` pins the divisor floor explicitly: the exhaustive path
+    excludes zeros via :func:`grid8`, and the sampled paths must match it
+    — a single zero divisor makes the exact quotient non-finite and
+    poisons the whole config's relative statistics (``error_stats`` now
+    also refuses non-finite references outright).
+    """
     if exhaustive and width == 8:
         return grid8()
     return sample_uints(width, n, GRID_SEED,
-                        b_width=8 if op == "div" else None)
+                        b_width=8 if op == "div" else None, b_lo=1)
+
+
+#: the grid sweeps the paper's 64-region tables only; the config carries it
+#: explicitly because it is part of the gate key (a failed record must
+#: still know the full identity of what it *tried* to measure)
+GRID_INDEX_BITS = 3
 
 
 def _grid_configs(quick: bool):
-    """The (op, width, coeff_bits, backend) sweep of one trajectory run."""
+    """The (kernel, op, width, coeff_bits, backend) sweep of one run."""
     coeff_sweep = (0, 4, 6) if quick else (0, 2, 4, 6, 8)
+    common = dict(index_bits=GRID_INDEX_BITS)
     for width in (8, 16):
         for op in ("mul", "div"):
             for cb in coeff_sweep:
-                yield (op, width, cb, "ref")
+                yield dict(kernel="elemwise", op=op, width=width,
+                           coeff_bits=cb, backend="ref", **common)
     # the interpreter path is a correctness artifact, not a speed one:
     # keep it to the paper's headline config so runs stay bounded
     for op in ("mul", "div"):
-        yield (op, 8, 6, "pallas-interpret")
+        yield dict(kernel="elemwise", op=op, width=8, coeff_bits=6,
+                   backend="pallas-interpret", **common)
+    # packed: all four 8-bit lanes of every word at once, incl. the paper's
+    # §3.2 mixed functionality (per-lane mul/div select)
+    for op in ("mul", "div", "mixed"):
+        for cb in ((6,) if quick else (0, 6)):
+            yield dict(kernel="packed", op=op, width=8, coeff_bits=cb,
+                       backend="ref", **common)
+    yield dict(kernel="packed", op="mul", width=8, coeff_bits=6,
+               backend="pallas-interpret", **common)
+    # matmul: accumulate-level error vs the exact integer matmul across a
+    # small K sweep (NMED is the headline — cancellation makes per-output
+    # relative error meaningless near zero sums)
+    for k in ((32, 128) if quick else (32, 128, 512)):
+        yield dict(kernel="matmul_int", op="matmul", width=8, coeff_bits=6,
+                   backend="ref", k=k, **common)
+    yield dict(kernel="matmul_emul", op="matmul", width=8, coeff_bits=6,
+               backend="ref", k=128, **common)
+    yield dict(kernel="matmul_int", op="matmul", width=8, coeff_bits=6,
+               backend="pallas-interpret", k=32, **common)
 
 
-def run_grid(report, quick: bool) -> list[dict]:
-    records = []
-    report("# === grid: (op, width, coeff_bits, backend) error + throughput"
-           " trajectory")
-    for op, width, cb, backend in _grid_configs(quick):
-        spec = SimdiveSpec(width=width, coeff_bits=cb)
-        interp = backend == "pallas-interpret"
-        exhaustive = width == 8 and not interp
-        n = 4096 if interp else (65025 if exhaustive else
-                                 (50_000 if quick else 250_000))
-        a_np, b_np = _grid_operands(op, width, n, exhaustive)
-        a, b = jnp.asarray(a_np), jnp.asarray(b_np)
-        kw = {"op": op} if op == "mul" else {"op": op,
-                                             "frac_out": DIV_FRAC_OUT}
-        bound = get_op("elemwise", spec, backend,
-                       block=(16, 256) if interp else None)
-        call = (lambda x, y, _b=bound, _kw=kw: _b(x, y, **_kw))
-        out = np.asarray(call(a, b)).astype(np.float64)
-        if op == "mul":
-            true = a_np.astype(np.float64) * b_np.astype(np.float64)
-        else:
-            out = out / 2.0 ** DIV_FRAC_OUT
-            true = a_np.astype(np.float64) / b_np.astype(np.float64)
-        err = error_stats(out, true)
-        timed = jax.jit(call) if not interp else call
-        t = time_callable(timed, a, b, iters=1 if interp else 5,
-                          items=int(a.size))
-        rec = {
-            "op": op, "width": width, "coeff_bits": cb,
-            "index_bits": spec.index_bits, "backend": backend,
-            "n": int(a.size), "seed": GRID_SEED,
-            "exhaustive": bool(exhaustive),
-            "frac_out": 0 if op == "mul" else DIV_FRAC_OUT,
-            "error": err.as_dict(),
-            "throughput": t.as_dict(),
+def _cfg_geometry(cfg: dict, quick: bool) -> dict:
+    """Sweep sizes + *timed operand shapes* of one config.
+
+    Shared by the runners and the per-config failure path: the gate keys
+    entries on (config, shape-bucket), so a failed record must land on the
+    same key as its healthy baseline twin even though it never timed
+    anything — its buckets come from here, not from a measurement.
+    """
+    from repro.kernels.registry import shape_bucket
+
+    interp = cfg["backend"] == "pallas-interpret"
+    if cfg["kernel"] == "elemwise":
+        exhaustive = cfg["width"] == 8 and not interp
+        # sampled size is the same under --quick and full (the ref sweep is
+        # vectorized and cheap): a quick run must land on the committed
+        # full baseline's gate keys or the 16-bit sweep is never gated
+        n = 4096 if interp else (65025 if exhaustive else 250_000)
+        shapes = ((n,), (n,))
+        g = {"exhaustive": exhaustive, "n": n}
+    elif cfg["kernel"] == "packed":
+        # same size under --quick and full: the packed ref sweep is cheap,
+        # and identical shapes keep the quick run's gate keys colliding
+        # with a full committed baseline
+        n = 4096 if interp else 16_384                         # total lanes
+        rows = 16 if interp else 64
+        words = n // (rows * (32 // cfg["width"]))
+        shapes = ((rows, words), (rows, words))
+        g = {"n": n, "rows": rows}
+    else:                                  # matmul_int / matmul_emul
+        m = 32 if interp else 64
+        shapes = ((m, cfg["k"]), (cfg["k"], m))
+        g = {"m": m}
+    g["shape_buckets"] = [list(shape_bucket(s)) for s in shapes]
+    return g
+
+
+def _measure(call, a, b, *, interp: bool, items: int):
+    timed = jax.jit(call) if not interp else call
+    return time_callable(timed, a, b, iters=1 if interp else 5, items=items)
+
+
+def _run_elemwise(cfg: dict, quick: bool) -> dict:
+    op, width, cb = cfg["op"], cfg["width"], cfg["coeff_bits"]
+    spec = SimdiveSpec(width=width, coeff_bits=cb,
+                       index_bits=cfg["index_bits"])
+    interp = cfg["backend"] == "pallas-interpret"
+    geo = _cfg_geometry(cfg, quick)
+    exhaustive, n = geo["exhaustive"], geo["n"]
+    a_np, b_np = _grid_operands(op, width, n, exhaustive)
+    a, b = jnp.asarray(a_np), jnp.asarray(b_np)
+    kw = {"op": op} if op == "mul" else {"op": op, "frac_out": DIV_FRAC_OUT}
+    bound = get_op("elemwise", spec, cfg["backend"],
+                   block=(16, 256) if interp else None)
+    call = (lambda x, y, _b=bound, _kw=kw: _b(x, y, **_kw))
+    out = np.asarray(call(a, b)).astype(np.float64)
+    if op == "mul":
+        true = a_np.astype(np.float64) * b_np.astype(np.float64)
+    else:
+        out = out / 2.0 ** DIV_FRAC_OUT
+        true = a_np.astype(np.float64) / b_np.astype(np.float64)
+    err = error_stats(out, true)
+    t = _measure(call, a, b, interp=interp, items=int(a.size))
+    return {
+        "n": int(a.size), "seed": GRID_SEED,
+        "exhaustive": bool(exhaustive),
+        "frac_out": 0 if op == "mul" else DIV_FRAC_OUT,
+        "error": err.as_dict(), "throughput": t.as_dict(),
+    }
+
+
+def _run_packed(cfg: dict, quick: bool) -> dict:
+    """All four 8-bit lanes per uint32 word, through the packed kernel."""
+    op, width, cb = cfg["op"], cfg["width"], cfg["coeff_bits"]
+    spec = SimdiveSpec(width=width, coeff_bits=cb,
+                       index_bits=cfg["index_bits"])
+    interp = cfg["backend"] == "pallas-interpret"
+    lpw = 32 // width
+    geo = _cfg_geometry(cfg, quick)
+    n, rows = geo["n"], geo["rows"]
+    a_np, b_np = sample_uints(width, n, GRID_SEED, b_lo=1)
+    a_l = jnp.asarray(a_np.reshape(rows, -1))
+    b_l = jnp.asarray(b_np.reshape(rows, -1))
+    aw, bw = pack(a_l, width), pack(b_l, width)
+    kw: dict = {"op": op}
+    mode_np = None
+    if op != "mul":
+        kw["frac_out"] = PACKED_DIV_FRAC_OUT
+    if op == "mixed":
+        mode_np = np.random.default_rng(GRID_SEED + 1).integers(
+            0, 2, a_l.shape).astype(np.uint32)
+        kw["mode"] = pack(jnp.asarray(mode_np), width)
+    bound = get_op("packed", spec, cfg["backend"],
+                   block=(4, 16) if interp else None)
+    call = (lambda x, y, _b=bound, _kw=kw: _b(x, y, **_kw))
+    lanes = np.asarray(unpack(jnp.asarray(call(aw, bw)), 2 * width)
+                       ).astype(np.float64)
+    af = a_np.reshape(rows, -1).astype(np.float64)
+    bf = b_np.reshape(rows, -1).astype(np.float64)
+    scale = 2.0 ** PACKED_DIV_FRAC_OUT
+    if op == "mul":
+        out, true = lanes, af * bf
+    elif op == "div":
+        out, true = lanes / scale, af / bf
+    else:   # mixed: product lanes at integer scale, quotients at 2^frac
+        sel = mode_np.astype(bool)
+        out = np.where(sel, lanes, lanes / scale)
+        true = np.where(sel, af * bf, af / bf)
+    err = error_stats(out, true)
+    t = _measure(call, aw, bw, interp=interp, items=n)
+    return {
+        "n": n, "seed": GRID_SEED,
+        "exhaustive": False, "lanes_per_word": lpw,
+        "frac_out": 0 if op == "mul" else PACKED_DIV_FRAC_OUT,
+        "error": err.as_dict(), "throughput": t.as_dict(),
+    }
+
+
+def _run_matmul(cfg: dict, quick: bool) -> dict:
+    """Accumulate-level error of the matmul kernels vs exact int matmul."""
+    kernel, width, cb, k = (cfg["kernel"], cfg["width"], cfg["coeff_bits"],
+                            cfg["k"])
+    spec = SimdiveSpec(width=width, coeff_bits=cb,
+                       index_bits=cfg["index_bits"])
+    interp = cfg["backend"] == "pallas-interpret"
+    m = n_out = _cfg_geometry(cfg, quick)["m"]
+    rng = np.random.default_rng(GRID_SEED + 2)
+    bound = get_op(kernel, spec, cfg["backend"],
+                   block=(8, 8, 16) if interp else None)
+    if kernel == "matmul_int":
+        hi = (1 << width) - 1
+        x = jnp.asarray(rng.integers(-hi, hi + 1, (m, k), dtype=np.int32))
+        w = jnp.asarray(rng.integers(-hi, hi + 1, (k, n_out),
+                                     dtype=np.int32))
+        call = (lambda xx, ww, _b=bound: _b(xx, ww))
+        exact = (np.asarray(x, np.int64) @ np.asarray(w, np.int64))
+        args = (x, w)
+    else:   # matmul_emul: the model-facing quantized emulation
+        xf = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+        wf = jnp.asarray(rng.normal(size=(k, n_out)).astype(np.float32))
+        qx, sx, _ = quantize_sign_magnitude(xf, width)
+        qw, sw, _ = quantize_sign_magnitude(wf, width, axis=0)
+        call = (lambda a, b, _b=bound, _s=(sx, sw): _b(a, _s[0], b, _s[1]))
+        exact = (np.asarray(qx, np.int64) * np.asarray(sx, np.int64)) @ \
+                (np.asarray(qw, np.int64) * np.asarray(sw, np.int64))
+        args = (qx, qw)
+    appr = np.asarray(call(*args)).astype(np.float64)
+    err = error_stats(appr, exact)
+    t = _measure(call, *args, interp=interp, items=m * k * n_out)
+    return {
+        "n": int(exact.size),
+        "seed": GRID_SEED, "exhaustive": False,
+        "shape": {"m": m, "k": k, "n": n_out}, "frac_out": 0,
+        "error": err.as_dict(), "throughput": t.as_dict(),
+    }
+
+
+_GRID_RUNNERS = {
+    "elemwise": _run_elemwise,
+    "packed": _run_packed,
+    "matmul_int": _run_matmul,
+    "matmul_emul": _run_matmul,
+}
+
+
+def _cfg_label(cfg: dict) -> str:
+    label = (f"{cfg['kernel']}/{cfg['op']}/{cfg['width']}b/"
+             f"cb{cfg['coeff_bits']}/{cfg['backend']}")
+    if "k" in cfg:
+        label += f"/K{cfg['k']}"
+    return label
+
+
+def run_grid(report, quick: bool, records: list[dict]) -> int:
+    """Sweep every grid config, appending records into ``records``.
+
+    One config failing must not lose the rest of the sweep (nor the
+    records already computed — the caller owns the list, so even an
+    escaping exception keeps them): failures append a
+    ``{"status": "failed", ...}`` record and the gate downstream treats
+    them as regressions, distinct from configs that were never run.
+    Returns the number of failed configs.
+    """
+    failures = 0
+    report("# === grid: (kernel, op, width, coeff_bits, backend) error + "
+           "throughput trajectory")
+    for cfg in _grid_configs(quick):
+        base = {
+            "kernel": cfg["kernel"], "op": cfg["op"], "width": cfg["width"],
+            "coeff_bits": cfg["coeff_bits"],
+            "index_bits": cfg["index_bits"], "backend": cfg["backend"],
         }
+        try:
+            rec = {**base, "status": "ok",
+                   **_GRID_RUNNERS[cfg["kernel"]](cfg, quick)}
+            err, tp = rec["error"], rec["throughput"]
+            report(f"grid,{_cfg_label(cfg)},ARE%={err['are_pct']:.4f},"
+                   f"NMED={err['nmed']:.3e},PRE%={err['pre_pct']:.3f},"
+                   f"mean_us={tp['mean_us']:.0f}")
+        except Exception as e:  # noqa: BLE001 — keep the sweep going
+            failures += 1
+            rec = {**base, "status": "failed",
+                   "error_msg": f"{type(e).__name__}: {e}"}
+            try:
+                # declared buckets land the failure on the same gate key
+                # as its healthy baseline twin (it never timed anything)
+                rec["shape_buckets"] = _cfg_geometry(cfg, quick)[
+                    "shape_buckets"]
+            except Exception:  # noqa: BLE001 — geometry must never mask
+                pass           # the original failure
+            report(f"# !!! grid config {_cfg_label(cfg)} FAILED: "
+                   f"{type(e).__name__}: {e}")
+            traceback.print_exc()
         records.append(rec)
-        report(f"grid,{op}/{width}b/cb{cb}/{backend},ARE%={err.are_pct:.4f},"
-               f"PRE%={err.pre_pct:.3f},mean_us={t.mean_us:.0f}")
-    return records
+    return failures
 
 
 # ----------------------------------------------------------------- suites --
@@ -180,16 +402,27 @@ def run_suites(report, wanted, quick: bool):
 
 # ------------------------------------------------------------- trajectory --
 def append_trajectory(path: str, run_record: dict) -> None:
-    """Append one run to the BENCH file (schema: simdive-bench/v1)."""
-    doc = {"schema": "simdive-bench/v1", "runs": []}
+    """Append one run to the BENCH file (schema: simdive-bench/v2).
+
+    v1 documents are migrated in place (the rewrite persists them as v2).
+    A file that cannot be interpreted as a trajectory at all is renamed
+    aside to ``<path>.corrupt-<runid>`` — the accumulated history is the
+    very thing the regression gate diffs against, so it is *never*
+    silently discarded — and the run starts a fresh document.
+    """
+    doc = {"schema": SCHEMA_V2, "runs": []}
     if os.path.exists(path):
         try:
             with open(path) as f:
                 prev = json.load(f)
-            if isinstance(prev, dict) and isinstance(prev.get("runs"), list):
-                doc = prev
-        except (json.JSONDecodeError, OSError):
-            pass  # corrupt trajectory: restart rather than crash the bench
+            doc = migrate_doc(prev)
+        except (json.JSONDecodeError, OSError, TrajectoryError) as e:
+            runid = run_record.get("created_unix", "unknown")
+            aside = f"{path}.corrupt-{runid}"
+            os.replace(path, aside)
+            print(f"# !!! {path} is not a readable trajectory "
+                  f"({type(e).__name__}: {e}); kept it at {aside} and "
+                  "started a fresh history", file=sys.stderr)
     doc["runs"].append(run_record)
     with open(path, "w") as f:
         json.dump(doc, f, indent=1)
@@ -215,7 +448,9 @@ def main() -> None:
         ap.error(f"unknown --only names {sorted(wanted - valid)}; "
                  f"valid: {sorted(valid)}")
 
-    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    # abspath first: a bare --out filename has an empty dirname, and
+    # os.makedirs('') raises
+    os.makedirs(os.path.dirname(os.path.abspath(args.out)), exist_ok=True)
     lines: list[str] = []
 
     def report(msg):
@@ -223,18 +458,20 @@ def main() -> None:
         lines.append(str(msg))
 
     t_start = time.time()
-    grid_records = []
-    grid_failed = False
+    grid_records: list[dict] = []
+    grid_failures = 0
     if wanted is None or "grid" in wanted:
         try:
-            grid_records = run_grid(report, args.quick)
-        except Exception as e:  # noqa: BLE001
-            grid_failed = True
-            report(f"# !!! grid FAILED: {type(e).__name__}: {e}")
+            grid_failures = run_grid(report, args.quick, grid_records)
+        except Exception as e:  # noqa: BLE001 — per-config capture is in
+            # run_grid; this catches harness-level breakage, and the
+            # records accumulated so far survive in grid_records
+            grid_failures += 1
+            report(f"# !!! grid harness FAILED: {type(e).__name__}: {e}")
             traceback.print_exc()
     suites, failures = run_suites(
         report, None if wanted is None else wanted - {"grid"}, args.quick)
-    failures += int(grid_failed)
+    failures += grid_failures
 
     with open(args.out, "w") as f:
         f.write("\n".join(lines) + "\n")

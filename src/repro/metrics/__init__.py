@@ -13,6 +13,9 @@ between the table that reports it and the test that bounds it.
                                pow-2 shape-bucketed (registry bucketing)
   grid8 / sample_uints / DIV_FRAC_OUT  shared operand sets + divider
                                fixed-point convention for every sweep
+  trajectory                   BENCH_simdive.json schema + migration +
+                               the regression gate (diff_runs); pure
+                               stdlib, see benchmarks/compare.py
 """
 from .errors import (
     ErrorStats,
@@ -21,8 +24,15 @@ from .errors import (
     relative_error,
 )
 from .image import psnr, ssim
-from .operands import DIV_FRAC_OUT, grid8, sample_uints
+from .operands import DIV_FRAC_OUT, PACKED_DIV_FRAC_OUT, grid8, sample_uints
 from .timing import TimingStats, time_callable
+from .trajectory import (
+    GateReport,
+    Thresholds,
+    TrajectoryError,
+    diff_runs,
+    load_trajectory,
+)
 
 __all__ = [
     "ErrorStats",
@@ -34,6 +44,12 @@ __all__ = [
     "TimingStats",
     "time_callable",
     "DIV_FRAC_OUT",
+    "PACKED_DIV_FRAC_OUT",
     "grid8",
     "sample_uints",
+    "GateReport",
+    "Thresholds",
+    "TrajectoryError",
+    "diff_runs",
+    "load_trajectory",
 ]

@@ -84,6 +84,12 @@ def error_stats(approx, exact) -> ErrorStats:
         raise ValueError(f"shape mismatch: approx {a.shape} vs exact {e.shape}")
     if a.size == 0:
         raise ValueError("error_stats needs at least one lane")
+    if not np.isfinite(e).all():
+        # a non-finite reference (a zero divisor upstream, usually) would
+        # silently turn every aggregate into NaN — fail the sweep loudly
+        raise ValueError(
+            f"exact reference contains {int((~np.isfinite(e)).sum())} "
+            "non-finite lane(s) (zero divisor in the operand set?)")
     err = np.abs(a - e)
     nz = e != 0
     re = err[nz] / np.abs(e[nz])

@@ -16,10 +16,16 @@ from __future__ import annotations
 
 import numpy as np
 
-__all__ = ["DIV_FRAC_OUT", "grid8", "sample_uints"]
+__all__ = ["DIV_FRAC_OUT", "PACKED_DIV_FRAC_OUT", "grid8", "sample_uints"]
 
 #: divider fixed-point output bits used by every error sweep
 DIV_FRAC_OUT = 12
+
+#: quotient bits of every *packed* 8-bit sweep (BENCH grid and tier-2
+#: bounds alike): packed lanes double on output, so 8 fractional bits is
+#: the widest format whose quotients (max 255 << 8) still fit the 16-bit
+#: output lane
+PACKED_DIV_FRAC_OUT = 8
 
 
 def grid8(include_zero: bool = False, flat: bool = True):
@@ -37,12 +43,21 @@ def grid8(include_zero: bool = False, flat: bool = True):
 
 
 def sample_uints(width: int, n: int, seed: int, *, lo: int = 1,
-                 b_width: int | None = None):
+                 b_width: int | None = None, b_lo: int | None = None):
     """Seeded uniform operand pair; ``b_width`` narrows the second operand
-    (the paper's N/8 divider format)."""
+    (the paper's N/8 divider format).
+
+    ``b_lo`` floors the second operand independently of ``lo``: a divider
+    sweep that wants zeros among the dividends (the zero-flag bypass) must
+    still never sample a zero divisor — ``b == 0`` makes the exact quotient
+    non-finite and poisons every relative statistic of the config (the
+    exhaustive path excludes zeros via :func:`grid8`; this keeps the
+    sampled paths consistent with it). Defaults to ``lo``.
+    """
     rng = np.random.default_rng(seed)
     dt = np.uint32 if width <= 16 else np.uint64
     a = rng.integers(lo, 1 << width, n, dtype=np.uint64).astype(dt)
-    b = rng.integers(lo, 1 << (b_width or width), n,
+    b = rng.integers(lo if b_lo is None else b_lo,
+                     1 << (b_width or width), n,
                      dtype=np.uint64).astype(dt)
     return a, b

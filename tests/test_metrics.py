@@ -13,6 +13,7 @@ from repro.metrics import (
     error_stats,
     psnr,
     relative_error,
+    sample_uints,
     ssim,
     time_callable,
 )
@@ -55,6 +56,15 @@ def test_error_stats_shape_mismatch_raises():
         error_stats(np.zeros(0), np.zeros(0))
 
 
+def test_error_stats_rejects_non_finite_reference():
+    """A zero divisor upstream makes the exact reference inf/nan; that must
+    fail the sweep loudly instead of silently NaN-ing every aggregate."""
+    with pytest.raises(ValueError, match="non-finite"):
+        error_stats(np.ones(3), np.array([1.0, np.inf, 2.0]))
+    with pytest.raises(ValueError, match="non-finite"):
+        error_stats(np.ones(2), np.array([np.nan, 1.0]))
+
+
 def test_relative_error_zero_exact_lanes():
     re = relative_error([0.0, 5.0, 3.0], [0.0, 0.0, 2.0])
     assert re[0] == 0.0            # 0 where both are zero
@@ -66,6 +76,43 @@ def test_classification_accuracy():
     logits = np.array([[0.1, 0.9], [0.8, 0.2], [0.3, 0.7]])
     assert classification_accuracy(logits, [1, 0, 0]) == pytest.approx(
         200 / 3)
+
+
+# -------------------------------------------------------------- operands --
+@pytest.mark.parametrize("width", [8, 16, 32])
+def test_sample_uints_b_lo_floors_divisors_independently(width):
+    """Regression (zero-divisor audit): a sweep that wants zeros among the
+    dividends must still never sample a zero divisor — ``b_lo`` floors the
+    second operand independently of ``lo``."""
+    a, b = sample_uints(width, 4096, 0, lo=0, b_lo=1, b_width=8)
+    assert int(np.asarray(a).min()) == 0 or width > 8  # zeros reach the
+    #                     dividend (guaranteed only on the dense 8-bit range)
+    assert int(np.asarray(b).min()) >= 1   # ... but never the divisor
+    assert int(np.asarray(b).max()) < 256  # and b_width still narrows b
+    # default: b_lo follows lo (bit-parity sweeps sample zeros on purpose)
+    _, b0 = sample_uints(8, 4096, 0, lo=0)
+    assert (np.asarray(b0) == 0).any()
+
+
+@pytest.mark.parametrize("width", [8, 16])
+@pytest.mark.parametrize("op", ["mul", "div"])
+def test_grid_operand_divisors_never_zero(op, width):
+    """Regression: every BENCH grid operand path (exhaustive, sampled and
+    the interpreter's short sweep) yields finite exact references — the
+    div paths may not contain a single zero divisor."""
+    import os
+    import sys
+
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    from benchmarks.run import _grid_operands
+
+    for n, exhaustive in ((4096, False), (50_000, False),
+                          (65025, width == 8)):
+        a, b = _grid_operands(op, width, n, exhaustive)
+        assert int(np.asarray(b).min()) >= 1, (op, width, n, exhaustive)
+        true = np.asarray(a, np.float64) / np.asarray(b, np.float64)
+        assert np.isfinite(true).all()
 
 
 # ----------------------------------------------------------------- image --

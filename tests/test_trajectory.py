@@ -1,0 +1,386 @@
+"""Tier-1 tests of the trajectory regression gate.
+
+Three layers under test, bottom-up:
+
+  repro.metrics.trajectory   schema migration, indexing, classification
+  benchmarks/compare.py      the CLI (exit codes are the CI contract)
+  benchmarks/run.py          append_trajectory's corrupt-file rescue and
+                             in-place v1 -> v2 migration
+
+The fabricated runs come from compare.py's own fixture builders, so these
+tests and ``compare.py --self-test`` (tier-1 CI's no-sweep gate check)
+agree on what a plausible record looks like.
+"""
+import copy
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks import compare  # noqa: E402
+from benchmarks.compare import (  # noqa: E402
+    fixture_entry,
+    fixture_run,
+    fixture_v1_entry,
+)
+from benchmarks.run import append_trajectory  # noqa: E402
+from repro.metrics.trajectory import (  # noqa: E402
+    SCHEMA_V1,
+    SCHEMA_V2,
+    Thresholds,
+    TrajectoryError,
+    diff_runs,
+    grid_key,
+    index_grid,
+    latest_grid_run,
+    load_trajectory,
+    migrate_doc,
+)
+
+
+# ------------------------------------------------------------- loading ----
+def test_load_missing_baseline_is_empty_doc(tmp_path):
+    doc = load_trajectory(str(tmp_path / "nope.json"))
+    assert doc == {"schema": SCHEMA_V2, "runs": []}
+    with pytest.raises(TrajectoryError, match="no trajectory"):
+        load_trajectory(str(tmp_path / "nope.json"), missing_ok=False)
+
+
+def test_load_corrupt_or_malformed_raises(tmp_path):
+    p = tmp_path / "bad.json"
+    p.write_text("{truncated")
+    with pytest.raises(TrajectoryError, match="unreadable"):
+        load_trajectory(str(p))
+    p.write_text(json.dumps({"schema": "simdive-bench/v9", "runs": []}))
+    with pytest.raises(TrajectoryError, match="unknown trajectory schema"):
+        load_trajectory(str(p))
+    p.write_text(json.dumps({"not": "a trajectory"}))
+    with pytest.raises(TrajectoryError, match="not a trajectory"):
+        load_trajectory(str(p))
+
+
+def test_migrate_v1_backfills_and_preserves_unknown_fields():
+    v1_entry = fixture_v1_entry()
+    v1_entry["some_future_field"] = {"x": 1}
+    doc = {"schema": SCHEMA_V1,
+           "runs": [{"created_unix": 7, "custom_run_field": "kept",
+                     "grid": [v1_entry]}]}
+    out = migrate_doc(doc)
+    assert out["schema"] == SCHEMA_V2
+    e = out["runs"][0]["grid"][0]
+    assert e["kernel"] == "elemwise" and e["status"] == "ok"
+    assert e["some_future_field"] == {"x": 1}          # unknown-key tolerance
+    assert out["runs"][0]["custom_run_field"] == "kept"
+    assert doc["schema"] == SCHEMA_V1                  # input not mutated
+    assert migrate_doc(out) == out                     # idempotent
+
+
+def test_migrated_v1_entry_keys_like_its_v2_twin():
+    doc = migrate_doc({"schema": SCHEMA_V1,
+                       "runs": [{"grid": [fixture_v1_entry()]}]})
+    assert grid_key(doc["runs"][0]["grid"][0]) == grid_key(fixture_entry())
+
+
+# ------------------------------------------------------------ indexing ----
+def test_grid_key_separates_configs_and_buckets():
+    base = fixture_entry()
+    assert grid_key(base) == grid_key(copy.deepcopy(base))
+    assert grid_key(base) != grid_key(fixture_entry(op="div"))
+    assert grid_key(base) != grid_key(fixture_entry(kernel="packed"))
+    assert grid_key(base) != grid_key(fixture_entry(
+        throughput={"shape_buckets": [[128, 64], [64, 128]]}))
+
+
+def test_failed_entry_without_timing_lands_on_same_key():
+    """run_grid records declared shape_buckets on failures so the gate can
+    say 'this config broke' instead of 'missing + new'."""
+    healthy = fixture_entry()
+    failed = {k: v for k, v in healthy.items()
+              if k not in ("error", "throughput")}
+    failed.update(status="failed", error_msg="boom",
+                  shape_buckets=healthy["throughput"]["shape_buckets"])
+    assert grid_key(failed) == grid_key(healthy)
+    r = diff_runs(fixture_run(entries=[healthy]),
+                  fixture_run(entries=[failed]))
+    assert [f.kind for f in r.failures] == ["config-failed"]
+
+
+def test_index_grid_keeps_worst_on_collision():
+    ok = fixture_entry()
+    bad = {**fixture_entry(), "status": "failed", "error_msg": "x"}
+    ix = index_grid({"grid": [ok, bad]})
+    assert list(ix.values())[0]["status"] == "failed"
+    ix = index_grid({"grid": [bad, ok]})
+    assert list(ix.values())[0]["status"] == "failed"
+
+
+def test_latest_grid_run_skips_gridless_records():
+    doc = {"runs": [{"grid": [fixture_entry()], "created_unix": 1},
+                    {"grid": [], "created_unix": 2},
+                    {"grid": [fixture_entry()], "created_unix": 3},
+                    {"grid": [], "created_unix": 4}]}
+    assert latest_grid_run(doc)["created_unix"] == 3
+    assert latest_grid_run(doc, before=2)["created_unix"] == 1
+    assert latest_grid_run({"runs": []}) is None
+
+
+# -------------------------------------------------------- classification --
+def test_identical_runs_pass():
+    base = fixture_run()
+    r = diff_runs(base, copy.deepcopy(base))
+    assert r.ok and r.compared == 3 and not r.findings
+
+
+def test_worsened_exhaustive_error_stat_trips_error_class():
+    base = fixture_run()
+    cand = copy.deepcopy(base)
+    cand["grid"][0]["error"]["are_pct"] += 1e-3    # any worsening at all
+    r = diff_runs(base, cand)
+    assert not r.ok
+    assert [f.kind for f in r.failures] == ["error-regression"]
+    assert "are_pct" in r.failures[0].detail
+    assert "REGRESSION" in r.render()
+
+
+def test_every_error_field_is_gated():
+    base = fixture_run(entries=[fixture_entry()])
+    for field in ("are_pct", "mred", "nmed", "pre_pct", "wce", "error_rate"):
+        cand = copy.deepcopy(base)
+        cand["grid"][0]["error"][field] += 1e-3
+        r = diff_runs(base, cand)
+        assert not r.ok and field in r.failures[0].detail, field
+
+
+def test_sampled_config_gets_rtol_headroom():
+    base = fixture_run()
+    cand = copy.deepcopy(base)
+    cand["grid"][1]["error"]["are_pct"] *= 1.01    # within 2% rtol
+    assert diff_runs(base, cand).ok
+    cand["grid"][1]["error"]["are_pct"] *= 1.05    # beyond it
+    r = diff_runs(base, cand)
+    assert [f.kind for f in r.failures] == ["error-regression"]
+
+
+def test_ref_throughput_drop_trips_and_interpreter_never_does():
+    base = fixture_run()
+    cand = copy.deepcopy(base)
+    cand["grid"][2]["throughput"]["best_us"] *= 100  # interpret config
+    assert diff_runs(base, cand).ok
+    cand["grid"][0]["throughput"]["best_us"] *= 1.06  # ref, >5%
+    r = diff_runs(base, cand)
+    assert [f.kind for f in r.failures] == ["throughput-regression"]
+    # error improvements never mask a slowdown
+    cand["grid"][0]["error"]["are_pct"] = 0.0
+    assert not diff_runs(base, cand).ok
+
+
+def test_throughput_threshold_is_configurable():
+    base = fixture_run(entries=[fixture_entry()])
+    cand = copy.deepcopy(base)
+    cand["grid"][0]["throughput"]["best_us"] *= 1.2
+    assert not diff_runs(base, cand).ok
+    assert diff_runs(base, cand, Thresholds(throughput_drop_pct=30.0)).ok
+
+
+def test_missing_config_warns_by_default_fails_under_strict():
+    base = fixture_run()
+    cand = copy.deepcopy(base)
+    del cand["grid"][0]
+    r = diff_runs(base, cand)
+    assert r.ok and any(f.kind == "config-missing" for f in r.findings)
+    r = diff_runs(base, cand, Thresholds(strict_missing=True))
+    assert [f.kind for f in r.failures] == ["config-missing"]
+
+
+def test_new_and_fixed_configs_are_informational():
+    base = fixture_run(entries=[
+        {**fixture_entry(), "status": "failed", "error_msg": "was broken",
+         "shape_buckets": [[65536], [65536]]}])
+    cand = fixture_run(entries=[fixture_entry(),
+                                fixture_entry(op="div", frac_out=12)])
+    r = diff_runs(base, cand)
+    assert r.ok
+    assert sorted(f.kind for f in r.findings) == ["config-fixed",
+                                                  "config-new"]
+
+
+def test_unknown_error_fields_and_missing_stats_tolerated():
+    base = fixture_run(entries=[fixture_entry()])
+    cand = copy.deepcopy(base)
+    cand["grid"][0]["error"]["some_new_stat"] = 1e9   # unknown: ignored
+    del cand["grid"][0]["error"]["wce"]               # missing: ignored
+    assert diff_runs(base, cand).ok
+
+
+# ------------------------------------------------------------------ CLI ---
+def _write(tmp_path, name, doc):
+    p = tmp_path / name
+    p.write_text(json.dumps(doc))
+    return str(p)
+
+
+def test_cli_single_run_baseline_passes(tmp_path):
+    """The committed-trajectory invariant: one grid run -> nothing to
+    diff -> exit 0 (a fresh clone must never fail CI)."""
+    b = _write(tmp_path, "b.json",
+               {"schema": SCHEMA_V2, "runs": [fixture_run()]})
+    assert compare.main(["--baseline", b]) == 0
+    # ... and so does a missing baseline
+    assert compare.main(["--baseline", str(tmp_path / "none.json")]) == 0
+
+
+def test_cli_two_clean_runs_pass_and_regression_fails(tmp_path):
+    doc = {"schema": SCHEMA_V2,
+           "runs": [fixture_run(), copy.deepcopy(fixture_run())]}
+    b = _write(tmp_path, "b.json", doc)
+    assert compare.main(["--baseline", b]) == 0
+
+    bad = copy.deepcopy(fixture_run())
+    bad["grid"][0]["error"]["are_pct"] += 0.5        # exhaustive ARE% worse
+    doc["runs"].append(bad)
+    b = _write(tmp_path, "b2.json", doc)
+    assert compare.main(["--baseline", b]) == 1
+
+
+def test_cli_candidate_file_gated_against_baseline(tmp_path, capsys):
+    b = _write(tmp_path, "base.json",
+               {"schema": SCHEMA_V2, "runs": [fixture_run()]})
+    good = _write(tmp_path, "good.json",
+                  {"schema": SCHEMA_V2, "runs": [fixture_run()]})
+    assert compare.main(["--baseline", b, "--candidate", good]) == 0
+
+    slow = copy.deepcopy(fixture_run())
+    slow["grid"][0]["throughput"]["best_us"] *= 1.10  # >5% ref drop
+    s = _write(tmp_path, "slow.json", {"schema": SCHEMA_V2, "runs": [slow]})
+    capsys.readouterr()
+    assert compare.main(["--baseline", b, "--candidate", s]) == 1
+    out = capsys.readouterr().out
+    assert "throughput-regression" in out and "elemwise/mul/8b" in out
+
+
+def test_cli_v1_baseline_vs_v2_candidate(tmp_path):
+    """Old committed v1 trajectories keep gating new v2 runs."""
+    b = _write(tmp_path, "v1.json",
+               {"schema": SCHEMA_V1,
+                "runs": [{"grid": [fixture_v1_entry()]}]})
+    good = _write(tmp_path, "good.json", {
+        "schema": SCHEMA_V2,
+        "runs": [fixture_run(entries=[fixture_entry()])]})
+    assert compare.main(["--baseline", b, "--candidate", good]) == 0
+    worse = {"schema": SCHEMA_V2, "runs": [fixture_run(entries=[
+        fixture_entry(error={"nmed": 0.5})])]}
+    w = _write(tmp_path, "worse.json", worse)
+    assert compare.main(["--baseline", b, "--candidate", w]) == 1
+
+
+def test_cli_unreadable_inputs_exit_2(tmp_path):
+    bad = tmp_path / "bad.json"
+    bad.write_text("{nope")
+    assert compare.main(["--baseline", str(bad)]) == 2
+    b = _write(tmp_path, "ok.json",
+               {"schema": SCHEMA_V2, "runs": [fixture_run()]})
+    assert compare.main(["--baseline", b, "--candidate",
+                         str(tmp_path / "absent.json")]) == 2
+
+
+def test_cli_self_test_passes():
+    assert compare.main(["--self-test"]) == 0
+
+
+def test_cli_does_not_import_jax(tmp_path):
+    """The gate must verdict on a box whose accelerator stack is broken
+    (that is one of the failure modes it judges): running compare.py may
+    not pull jax in."""
+    import subprocess
+
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    script = os.path.join(repo, "benchmarks", "compare.py")
+    probe = (
+        "import runpy, sys\n"
+        f"sys.argv = ['compare.py', '--self-test']\n"
+        "code = 0\n"
+        "try:\n"
+        f"    runpy.run_path({script!r}, run_name='__main__')\n"
+        "except SystemExit as e:\n"
+        "    code = e.code\n"
+        "assert code == 0, code\n"
+        "assert 'jax' not in sys.modules, 'gate CLI must not need jax'\n")
+    env = {k: v for k, v in os.environ.items() if k != "PYTHONPATH"}
+    r = subprocess.run([sys.executable, "-c", probe], env=env,
+                       capture_output=True, text=True)
+    assert r.returncode == 0, r.stderr
+
+
+# ------------------------------------------------------- run_grid keying --
+def test_run_grid_failure_record_keys_like_healthy_run(monkeypatch):
+    """End-to-end through run_grid: the record a *failing* config leaves
+    behind must land on the exact gate key its healthy twin produces, so
+    the gate reports config-failed rather than missing+new."""
+    from benchmarks import run as run_mod
+
+    def fake_runner(cfg, quick):
+        geo = run_mod._cfg_geometry(cfg, quick)
+        return {
+            "n": 1, "seed": 0, "exhaustive": False, "frac_out": 0,
+            "error": {"are_pct": 1.0, "nmed": 0.01, "pre_pct": 2.0},
+            "throughput": {"best_us": 1.0, "mean_us": 1.0,
+                           "shape_buckets": geo["shape_buckets"]},
+        }
+
+    def boom(cfg, quick):
+        raise RuntimeError("simulated kernel failure")
+
+    healthy_records, failed_records = [], []
+    monkeypatch.setattr(run_mod, "_GRID_RUNNERS",
+                        {k: fake_runner for k in run_mod._GRID_RUNNERS})
+    assert run_mod.run_grid(lambda m: None, True, healthy_records) == 0
+    monkeypatch.setattr(run_mod, "_GRID_RUNNERS",
+                        {k: boom for k in run_mod._GRID_RUNNERS})
+    n_fail = run_mod.run_grid(lambda m: None, True, failed_records)
+    assert n_fail == len(failed_records) == len(healthy_records)
+    assert all(r["status"] == "failed" for r in failed_records)
+    assert ([grid_key(r) for r in failed_records]
+            == [grid_key(r) for r in healthy_records])
+    report = diff_runs({"grid": healthy_records}, {"grid": failed_records})
+    assert len(report.failures) == len(healthy_records)
+    assert {f.kind for f in report.failures} == {"config-failed"}
+
+
+# ----------------------------------------------------- append_trajectory --
+def test_append_migrates_v1_file_in_place(tmp_path):
+    p = tmp_path / "BENCH.json"
+    p.write_text(json.dumps(
+        {"schema": SCHEMA_V1, "runs": [{"created_unix": 1,
+                                        "grid": [fixture_v1_entry()]}]}))
+    append_trajectory(str(p), {"created_unix": 2, "grid": []})
+    doc = json.loads(p.read_text())
+    assert doc["schema"] == SCHEMA_V2
+    assert len(doc["runs"]) == 2                       # history kept
+    assert doc["runs"][0]["grid"][0]["kernel"] == "elemwise"
+    assert doc["runs"][0]["grid"][0]["status"] == "ok"
+
+
+def test_append_rescues_corrupt_file_instead_of_discarding(tmp_path, capsys):
+    p = tmp_path / "BENCH.json"
+    p.write_text('{"schema": "simdive-bench/v1", "runs": [truncated')
+    append_trajectory(str(p), {"created_unix": 42, "grid": []})
+    # the unreadable history was renamed aside, byte-identical ...
+    aside = tmp_path / "BENCH.json.corrupt-42"
+    assert aside.exists()
+    assert "truncated" in aside.read_text()
+    assert "kept it at" in capsys.readouterr().err
+    # ... and the fresh document starts clean
+    doc = json.loads(p.read_text())
+    assert doc["schema"] == SCHEMA_V2 and len(doc["runs"]) == 1
+
+
+def test_append_accumulates_runs(tmp_path):
+    p = tmp_path / "BENCH.json"
+    append_trajectory(str(p), {"created_unix": 1, "grid": []})
+    append_trajectory(str(p), {"created_unix": 2, "grid": []})
+    doc = json.loads(p.read_text())
+    assert doc["schema"] == SCHEMA_V2
+    assert [r["created_unix"] for r in doc["runs"]] == [1, 2]
