@@ -68,6 +68,7 @@ SCHEMA_V1 = _traj.SCHEMA_V1
 Thresholds = _traj.Thresholds
 TrajectoryError = _traj.TrajectoryError
 diff_runs = _traj.diff_runs
+index_grid = _traj.index_grid
 latest_grid_run = _traj.latest_grid_run
 load_trajectory = _traj.load_trajectory
 migrate_doc = _traj.migrate_doc
@@ -222,6 +223,57 @@ def _self_test() -> int:
     return 1 if failed else 0
 
 
+# ------------------------------------------------------------- speedup --
+def speedup_report(baseline_run: dict, candidate_run: dict, *,
+                   baseline_label: str = "baseline",
+                   candidate_label: str = "candidate") -> str:
+    """Per-key ``best_us`` ratio summary, rendered as a markdown table.
+
+    Informational (never gates): the PR-description / CI-step-summary
+    companion of the regression gate. Interpreter-backend keys are listed
+    but marked — their wall-clock is a correctness artifact, not a speed
+    claim. speedup = baseline / candidate (>1 means the candidate is
+    faster).
+    """
+    base_ix = index_grid(baseline_run or {})
+    cand_ix = index_grid(candidate_run or {})
+    lines = [
+        f"### best_us speedup: {candidate_label} vs {baseline_label}",
+        "",
+        "| config | baseline us | candidate us | speedup |",
+        "|---|---:|---:|---:|",
+    ]
+    ratios = []
+    for key in sorted(set(base_ix) & set(cand_ix), key=repr):
+        base, cand = base_ix[key], cand_ix[key]
+        if base.get("status") != "ok" or cand.get("status") != "ok":
+            continue
+        b = (base.get("throughput") or {}).get("best_us")
+        c = (cand.get("throughput") or {}).get("best_us")
+        if not isinstance(b, (int, float)) or not isinstance(c, (int, float)) \
+                or b <= 0 or c <= 0:
+            continue
+        kernel, op, width, cb, ib, backend, buckets = key
+        shape = "x".join("·".join(str(d) for d in bk) for bk in buckets)
+        cfg = f"{kernel}/{op}/{width}b/cb{cb}/{backend}"
+        if shape:
+            cfg += f"/{shape}"
+        note = " (interp)" if backend == "pallas-interpret" else ""
+        ratio = b / c
+        if not note:
+            ratios.append(ratio)
+        lines.append(f"| {cfg}{note} | {b:.0f} | {c:.0f} | {ratio:.2f}x |")
+    if ratios:
+        import math
+        geo = math.exp(sum(math.log(r) for r in ratios) / len(ratios))
+        lines += ["",
+                  f"geometric-mean speedup over {len(ratios)} "
+                  f"non-interpreter key(s): **{geo:.2f}x**"]
+    else:
+        lines += ["", "no comparable keys"]
+    return "\n".join(lines)
+
+
 # ------------------------------------------------------------------ CLI --
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(
@@ -247,6 +299,9 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--self-test", action="store_true",
                     help="no files: verify the gate trips on built-in "
                          "fixtures (tier-1 CI)")
+    ap.add_argument("--speedup", action="store_true",
+                    help="summary mode: print per-key best_us ratios vs "
+                         "the baseline (markdown; informational, exit 0)")
     args = ap.parse_args(argv)
 
     if args.self_test:
@@ -282,6 +337,12 @@ def main(argv: list[str] | None = None) -> int:
     if baseline is None:
         print("trajectory gate: no baseline grid run to diff against; "
               "nothing to gate (pass)")
+        return 0
+
+    if args.speedup:
+        print(speedup_report(baseline, cand,
+                             baseline_label=os.path.basename(args.baseline),
+                             candidate_label=cand_label))
         return 0
 
     report = diff_runs(baseline, cand, th,

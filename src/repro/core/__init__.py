@@ -17,6 +17,12 @@ def enable_x64() -> None:
     _jax.config.update("jax_enable_x64", True)
 
 
+from .fastpath import (  # noqa: E402
+    faithful_enabled,
+    faithful_mode,
+    fastpath_enabled,
+    set_faithful,
+)
 from .mitchell import (  # noqa: E402
     SUPPORTED_WIDTHS,
     frac_bits,
@@ -47,6 +53,7 @@ from .approx import (  # noqa: E402
 
 __all__ = [
     "enable_x64",
+    "faithful_enabled", "faithful_mode", "fastpath_enabled", "set_faithful",
     "SUPPORTED_WIDTHS", "frac_bits", "leading_one", "mitchell_div",
     "mitchell_log", "mitchell_mul", "work_dtype",
     "build_table", "region_index", "table_for",

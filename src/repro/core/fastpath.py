@@ -1,0 +1,77 @@
+"""Fast-path vs hardware-faithful stage selection (one flag, one place).
+
+Every arithmetic hot path in the repo exists in two bit-identical forms:
+
+  * the **hardware-faithful** stage — the masked-shift LOD cascade, the
+    barrel-shifter anti-log where-ladder, the one-hot MXU table lookup —
+    written the way the FPGA datapath computes it. These are the test
+    oracle and the only forms used inside Pallas TPU kernel bodies.
+  * the **fast path** — ``clz``-based LOD, float32-exact anti-log
+    scaling, gather-based table lookups — provably bit-identical (and
+    exhaustively tested so in ``tests/test_fastpath.py``) but built from
+    primitives that are cheap on the host/VPU rather than on FPGA LUTs.
+
+``SIMDIVE_FAITHFUL=1`` in the environment (read at import) forces the
+faithful stages end-to-end; the fast paths are an optimization, never a
+fork of the semantics. Tests flip the flag in-process via
+:func:`faithful_mode`, which also clears jax's compilation caches — the
+flag is resolved at *trace* time, so stale jitted executables would
+otherwise keep serving the previous mode.
+"""
+from __future__ import annotations
+
+import os
+from contextlib import contextmanager
+
+__all__ = [
+    "faithful_enabled",
+    "fastpath_enabled",
+    "set_faithful",
+    "faithful_mode",
+]
+
+_FAITHFUL = os.environ.get("SIMDIVE_FAITHFUL", "0").lower() not in (
+    "", "0", "off", "false", "no")
+
+
+def faithful_enabled() -> bool:
+    """True when the hardware-faithful stages are forced end-to-end."""
+    return _FAITHFUL
+
+
+def fastpath_enabled() -> bool:
+    """True when the bit-exact fast paths may replace faithful stages."""
+    return not _FAITHFUL
+
+
+def set_faithful(on: bool) -> None:
+    """Flip the mode in-process. Clears jax compilation caches: the flag
+    is read at trace time, so cached executables of the other mode must
+    not keep serving."""
+    global _FAITHFUL
+    if bool(on) == _FAITHFUL:
+        return
+    _FAITHFUL = bool(on)
+    import jax
+
+    jax.clear_caches()
+    try:
+        # compiled executables are gone: previously-warmed timing
+        # signatures would otherwise skip re-warming and leak compile
+        # time into their first sample
+        from repro.metrics.timing import reset_warm_tracking
+
+        reset_warm_tracking()
+    except ImportError:  # metrics layer optional at this level
+        pass
+
+
+@contextmanager
+def faithful_mode(on: bool = True):
+    """Context manager around :func:`set_faithful` (tests)."""
+    prev = _FAITHFUL
+    set_faithful(on)
+    try:
+        yield
+    finally:
+        set_faithful(prev)

@@ -28,11 +28,15 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from .fastpath import fastpath_enabled
+
 __all__ = [
     "SUPPORTED_WIDTHS",
     "frac_bits",
     "work_dtype",
     "leading_one",
+    "leading_one_cascade",
+    "leading_one_clz",
     "mitchell_log",
     "mitchell_antilog_mul",
     "mitchell_antilog_div",
@@ -65,12 +69,12 @@ def _signed(dtype):
     return jnp.int32 if dtype == jnp.uint32 else jnp.int64
 
 
-def leading_one(a: jax.Array, width: int) -> jax.Array:
-    """Position of the leading one bit of ``a`` (floor(log2 a)); 0 for a == 0.
+def leading_one_cascade(a: jax.Array, width: int) -> jax.Array:
+    """Hardware-faithful LOD: branch-free masked shift-accumulate cascade.
 
-    Branch-free shift-accumulate — this is the *reference* LOD; the segmented
-    4-bit LOD of the paper lives in :mod:`repro.core.lod` and is tested to be
-    equivalent to this.
+    This is the *reference* form (the software rendition of a priority
+    LOD tree, ~3 VPU ops per cascade step); the segmented 4-bit LOD of
+    the paper lives in :mod:`repro.core.lod` and is tested equivalent.
     """
     dt = a.dtype
     a = a.astype(jnp.uint32) if width <= 16 else a
@@ -86,21 +90,102 @@ def leading_one(a: jax.Array, width: int) -> jax.Array:
     return k.astype(dt)
 
 
-def mitchell_log(a: jax.Array, width: int) -> jax.Array:
+def leading_one_clz(a: jax.Array, width: int) -> jax.Array:
+    """Fast-path LOD: one ``count-leading-zeros`` primitive.
+
+    ``k = (nbits-1) - clz(a)`` for a > 0; the ``min`` clamps the a == 0
+    case (clz == nbits) to k == 0, matching the cascade. Bit-identical to
+    :func:`leading_one_cascade` over the full lane domain
+    (exhaustively tested in tests/test_fastpath.py).
+    """
+    dt = a.dtype
+    wdt = jnp.uint32 if width <= 16 else a.dtype
+    v = a.astype(wdt) if width <= 16 else a
+    nbits = 8 * jnp.dtype(v.dtype).itemsize
+    clz = jax.lax.clz(v)
+    top = jnp.asarray(nbits - 1, v.dtype)
+    return (top - jnp.minimum(clz, top)).astype(dt)
+
+
+def leading_one(a: jax.Array, width: int,
+                fast: bool | None = None) -> jax.Array:
+    """Position of the leading one bit of ``a`` (floor(log2 a)); 0 for a == 0.
+
+    ``fast=None`` resolves from the global fast-path flag
+    (:mod:`repro.core.fastpath`); ``fast=False`` forces the
+    hardware-faithful cascade (Pallas kernel bodies do this — ``clz`` is
+    not in the Mosaic-safe op set the kernels restrict themselves to).
+    """
+    if fast is None:
+        fast = fastpath_enabled()
+    if fast:
+        return leading_one_clz(a, width)
+    return leading_one_cascade(a, width)
+
+
+def mitchell_log(a: jax.Array, width: int,
+                 fast: bool | None = None) -> jax.Array:
     """Fixed-point approximate log2: ``L = (k << F) | ((a ^ 2^k) << (F - k))``.
 
     Input must already be cast to :func:`work_dtype`(width).
     """
     F = frac_bits(width)
     dt = a.dtype
-    k = leading_one(a, width)
+    k = leading_one(a, width, fast=fast)
     one = jnp.asarray(1, dt)
     frac = a ^ (one << k)                      # strip the leading one
     x_fp = frac << (jnp.asarray(F, dt) - k)    # left-align into F bits
     return (k << jnp.asarray(F, dt)) | x_fp
 
 
-def _antilog_floor(ls: jax.Array, width: int, round_out: bool = False) -> jax.Array:
+def _pow2_f32(e: jax.Array) -> jax.Array:
+    """Exact float32 power of two 2^e from an int32 exponent field.
+
+    Built by packing ``e + 127`` straight into the f32 exponent bits —
+    3 integer ops + a bitcast, no transcendental. Valid for
+    e in [-126, 127]; callers clamp.
+    """
+    bits = (e.astype(jnp.int32) + jnp.int32(127)) << jnp.int32(23)
+    return jax.lax.bitcast_convert_type(bits, jnp.float32)
+
+
+def _antilog_floor_fast(ls: jax.Array, width: int,
+                        round_out: bool = False) -> jax.Array:
+    """Float32-exact fast path of :func:`_antilog_floor` (width <= 16).
+
+    ``floor((2^F + Xs) * 2^(I-F))`` computed as one float multiply by an
+    exact power of two + truncating convert. Exact because the mantissa
+    has F+1 <= 17 significant bits (< 2^24, the f32 integer-exact range)
+    and the scale is a power of two; the half-LSB rounding carry becomes
+    ``+ 0.5`` before the floor (same value, proven exhaustively in
+    tests/test_fastpath.py). Saturation is unchanged from the faithful
+    path; the clamp of I below only protects the f32 exponent field on
+    lanes the saturation ``where`` discards anyway.
+    """
+    F = frac_bits(width)
+    dt = ls.dtype
+    fF = jnp.asarray(F, dt)
+    I = ls >> fF
+    Xs = ls & ((jnp.asarray(1, dt) << fF) - jnp.asarray(1, dt))
+    mant = ((jnp.asarray(1, dt) << fF) + Xs).astype(jnp.float32)
+    Ic = jnp.minimum(I, jnp.asarray(2 * width, dt)).astype(jnp.int32)
+    val = mant * _pow2_f32(Ic - jnp.int32(F))
+    if round_out:
+        # faithful path adds 1 << (shr-1) to the mantissa when I < F:
+        # exactly + 0.5 at the truncated position
+        val = val + jnp.where(I < fF, jnp.float32(0.5), jnp.float32(0))
+    out = val.astype(dt)                       # truncating convert = floor
+    over = I >= jnp.asarray(2 * width, dt)
+    if 2 * width == 8 * jnp.dtype(dt).itemsize:
+        max_out = ~jnp.asarray(0, dt)
+    else:
+        max_out = (jnp.asarray(1, dt) << jnp.asarray(2 * width, dt)) \
+            - jnp.asarray(1, dt)
+    return jnp.where(over, max_out, out)
+
+
+def _antilog_floor(ls: jax.Array, width: int, round_out: bool = False,
+                   fast: bool | None = None) -> jax.Array:
     """Anti-log: ``(2^F + Xs) << I >> F`` without overflow.
 
     ``ls`` is the (unsigned) summed log value. Handles I >= F by shifting the
@@ -108,7 +193,15 @@ def _antilog_floor(ls: jax.Array, width: int, round_out: bool = False) -> jax.Ar
     barrel-shifter behaviour of the datapath. ``round_out`` adds the half-LSB
     rounding bit at the truncated position (one extra carry-in in hardware);
     plain Mitchell keeps floor semantics.
+
+    ``fast=None`` resolves the bit-exact float32 fast path from the global
+    flag for widths <= 16; ``fast=False`` forces the shift ladder (kernel
+    bodies, width 32, and the faithful mode).
     """
+    if fast is None:
+        fast = fastpath_enabled()
+    if fast and width <= 16:
+        return _antilog_floor_fast(ls, width, round_out=round_out)
     F = frac_bits(width)
     dt = ls.dtype
     fF = jnp.asarray(F, dt)
@@ -137,7 +230,8 @@ def _antilog_floor(ls: jax.Array, width: int, round_out: bool = False) -> jax.Ar
 
 def mitchell_antilog_mul(l1: jax.Array, l2: jax.Array, width: int,
                          corr: jax.Array | None = None,
-                         round_out: bool = False) -> jax.Array:
+                         round_out: bool = False,
+                         fast: bool | None = None) -> jax.Array:
     """Product anti-log of two log values (+ optional signed correction)."""
     dt = l1.dtype
     ls = l1 + l2
@@ -148,13 +242,42 @@ def mitchell_antilog_mul(l1: jax.Array, l2: jax.Array, width: int,
             ls.astype(_signed(dt)) + corr.astype(_signed(dt)),
             0, None,
         ).astype(dt)
-    return _antilog_floor(ls, width, round_out=round_out)
+    return _antilog_floor(ls, width, round_out=round_out, fast=fast)
+
+
+def _antilog_div_fast(ls: jax.Array, width: int, frac_out: int,
+                      round_out: bool) -> jax.Array:
+    """Float32-exact fast path of the quotient anti-log (width <= 16).
+
+    ``floor((2^F + Xs) * 2^(I + frac_out - F))`` as one float multiply by
+    an exact power of two + truncating convert; the rounding carry is
+    ``+ 0.5`` before the floor. Exact because the mantissa has F+1 <= 17
+    significant bits and, with the caller-checked ``frac_out`` bound, the
+    result stays below 2^32 (the faithful uint32 path never wraps there
+    either — sh <= frac_out + 1 for in-range log values).
+    """
+    F = frac_bits(width)
+    sdt = ls.dtype                              # signed work dtype
+    dt = jnp.uint32
+    I = ls >> F
+    Xs = ls & ((1 << F) - 1)
+    mant = (Xs + (1 << F)).astype(jnp.float32)  # 1.Xs, always positive
+    sh = (I + jnp.asarray(frac_out - F, sdt)).astype(jnp.int32)
+    # exponent clamp only protects the f32 field: below -31 the faithful
+    # path's 31-bit shift clip already floors the value to 0, and the
+    # (+0.5 if round_out) term keeps flooring to 0 until sh == -17 at the
+    # earliest, so clamped lanes are bit-identical by range.
+    val = mant * _pow2_f32(jnp.clip(sh, -64, 64))
+    if round_out:
+        val = val + jnp.where(sh < 0, jnp.float32(0.5), jnp.float32(0))
+    return val.astype(dt)                       # truncating convert = floor
 
 
 def mitchell_antilog_div(l1: jax.Array, l2: jax.Array, width: int,
                          corr: jax.Array | None = None,
                          frac_out: int = 0,
-                         round_out: bool = False) -> jax.Array:
+                         round_out: bool = False,
+                         fast: bool | None = None) -> jax.Array:
     """Quotient anti-log. Signed subtraction realizes Eq. (6)'s borrow case.
 
     The hardware quotient bus keeps fractional bits (the paper evaluates the
@@ -163,6 +286,10 @@ def mitchell_antilog_div(l1: jax.Array, l2: jax.Array, width: int,
     division. Two's-complement arithmetic gives the positive remainder /
     floored integer part for free, which is exactly Eq. (6)'s borrow case
     (x1 - x2 < 0 with the exponent decremented).
+
+    ``fast=None`` resolves the float32 fast path from the global flag; it
+    engages only when the result provably fits the 32-bit bus
+    (``width + frac_out <= 31``), else the shift ladder runs.
     """
     F = frac_bits(width)
     dt = l1.dtype
@@ -170,6 +297,10 @@ def mitchell_antilog_div(l1: jax.Array, l2: jax.Array, width: int,
     ls = l1.astype(sdt) - l2.astype(sdt)
     if corr is not None:
         ls = ls + corr.astype(sdt)
+    if fast is None:
+        fast = fastpath_enabled()
+    if fast and width <= 16 and width + frac_out <= 31:
+        return _antilog_div_fast(ls, width, frac_out, round_out).astype(dt)
     # signed floor / positive remainder: I = ls >> F (arithmetic), Xs >= 0
     I = ls >> F
     Xs = ls & ((1 << F) - 1)

@@ -27,9 +27,13 @@ bit-exact reference oracle. The underlying integer primitives come from
 """
 from __future__ import annotations
 
+from functools import lru_cache
+
+import jax
 import jax.numpy as jnp
 
 from repro.core.error_lut import region_index, table_for
+from repro.core.fastpath import fastpath_enabled
 from repro.core.mitchell import (
     frac_bits,
     mitchell_antilog_div,
@@ -41,6 +45,7 @@ from repro.core.mitchell import (
 __all__ = [
     "fraction_mask",
     "lod_log",
+    "log8_table",
     "corr_lookup",
     "region_corr",
     "split_tables",
@@ -63,26 +68,77 @@ def fraction_mask(width: int, dtype=jnp.uint32):
     return (jnp.asarray(1, dtype) << jnp.asarray(F, dtype)) - jnp.asarray(1, dtype)
 
 
-def lod_log(a: jnp.ndarray, width: int) -> jnp.ndarray:
+@lru_cache(maxsize=None)
+def _log8_host():
+    import numpy as np
+
+    # host-side faithful LOD + log over the whole 8-bit lane domain; the
+    # fast paths must never feed their own oracle table
+    a = np.arange(256, dtype=np.int64)
+    k = np.zeros(256, dtype=np.int64)
+    for step in (4, 2, 1):
+        m = (a >> k) >= (1 << step)
+        k[m] += step
+    F = frac_bits(8)
+    return ((k << F) | ((a ^ (1 << k)) << (F - k))).astype(np.uint32)
+
+
+def log8_table() -> jnp.ndarray:
+    """256-entry LUT of the full width-8 log value ``L = (k << F) | x_fp``."""
+    return jnp.asarray(_log8_host())
+
+
+def lod_log(a: jnp.ndarray, width: int, *,
+            in_kernel: bool = False, lut: bool = False) -> jnp.ndarray:
     """Stage 1: LOD + log conversion, ``L = (k << F) | x_fp``.
 
     Input must already be in the lane work dtype (uint32 for widths <= 16).
+
+    Fast path (``in_kernel=False`` and fast paths enabled): the ``clz``
+    LOD — one primitive instead of the 5-step masked shift cascade, and it
+    stays inside XLA's fused elementwise loop. ``lut=True`` selects the
+    256-entry width-8 LUT gather instead (the whole stage as one gather);
+    it is bit-identical and kept as an available form, but measured
+    *slower* composed on CPU XLA — the gather breaks elementwise fusion,
+    which costs more than the cascade it saves (see kernels/README.md).
+    Kernel bodies pass ``in_kernel=True`` and keep the Mosaic-safe
+    masked-shift cascade (gathers/clz are host-cheap, not TPU-kernel-safe).
     """
-    return mitchell_log(a, width)
+    if in_kernel or not fastpath_enabled():
+        return mitchell_log(a, width, fast=False)
+    if lut and width == 8:
+        return log8_table()[a].astype(a.dtype)
+    return mitchell_log(a, width, fast=True)
 
 
 # ------------------------------------------------------------ correction --
-def corr_lookup(idx: jnp.ndarray, tab: jnp.ndarray, width: int) -> jnp.ndarray:
+def _static_zero_table(tab, in_kernel: bool) -> bool:
+    """True when the coefficient table is a host-known all-zero constant
+    (coeff_bits = 0, plain Mitchell) and we are outside a kernel body with
+    fast paths on — the one predicate behind every skip-the-correction
+    fast path (adding a zero coefficient is bit-invisible downstream)."""
+    return (not in_kernel and fastpath_enabled()
+            and not isinstance(tab, jax.core.Tracer) and not tab.any())
+
+
+def corr_lookup(idx: jnp.ndarray, tab: jnp.ndarray, width: int, *,
+                in_kernel: bool = False) -> jnp.ndarray:
     """Gather ``tab[idx]`` (tab: (T,) int32, idx: any shape int32) -> int32.
 
-    A dynamic gather is awkward on the TPU VPU, so for widths <= 16 the
-    gather is expressed as a one-hot dot product — 64 MACs/element that land
-    on the MXU. Exact because |coeff| < 2^14 << 2^24 (f32 integer-exact
-    range); the width-32 path keeps a plain gather (Mosaic supports small
-    VMEM table gathers) and is exercised in interpret mode.
+    A dynamic gather is awkward on the TPU VPU, so inside kernel bodies
+    (``in_kernel=True``) the widths <= 16 lookup is expressed as a one-hot
+    dot product — 64 MACs/element that land on the MXU. Exact because
+    |coeff| < 2^14 << 2^24 (f32 integer-exact range). Outside kernels (the
+    ref/CPU oracles) a plain gather is both exact and far cheaper, so the
+    fast path uses it; the width-32 path always gathers (Mosaic supports
+    small VMEM table gathers) and is exercised in interpret mode.
     """
     T = tab.shape[0]
-    if width <= 16:
+    if _static_zero_table(tab, in_kernel):
+        # the gather of a constant zero table is not XLA-foldable the way
+        # the one-hot product is, so fold it here
+        return jnp.zeros(idx.shape, jnp.int32)
+    if width <= 16 and (in_kernel or not fastpath_enabled()):
         onehot = (idx[..., None] == jnp.arange(T, dtype=jnp.int32)).astype(
             jnp.float32
         )
@@ -96,15 +152,19 @@ def corr_lookup(idx: jnp.ndarray, tab: jnp.ndarray, width: int) -> jnp.ndarray:
 
 def region_corr(la: jnp.ndarray, lb: jnp.ndarray, tab: jnp.ndarray,
                 width: int, index_bits: int = 3,
-                gate: jnp.ndarray | None = None) -> jnp.ndarray:
+                gate: jnp.ndarray | None = None, *,
+                in_kernel: bool = False) -> jnp.ndarray:
     """Stage 2: region index from both log fractions + coefficient lookup.
 
     ``gate`` (optional bool array): zero-detection — a False lane gets a
     zero coefficient, mirroring the FPGA's zero-flag bypass of the LUT.
     """
+    if _static_zero_table(tab, in_kernel):
+        # all-zero table: skip the region index too (see corr_lookup)
+        return jnp.zeros(jnp.broadcast_shapes(la.shape, lb.shape), jnp.int32)
     m = fraction_mask(width, la.dtype)
     idx = region_index(la & m, lb & m, width, index_bits)
-    corr = corr_lookup(idx, tab, width)
+    corr = corr_lookup(idx, tab, width, in_kernel=in_kernel)
     if gate is not None:
         corr = jnp.where(gate, corr, jnp.zeros_like(corr))
     return corr
@@ -132,12 +192,14 @@ def op_table(op: str, width: int, coeff_bits: int,
 # -------------------------------------------------------------- anti-log --
 def antilog_mul(la: jnp.ndarray, lb: jnp.ndarray, width: int,
                 corr: jnp.ndarray | None = None, round_out: bool = False,
-                zero: jnp.ndarray | None = None) -> jnp.ndarray:
+                zero: jnp.ndarray | None = None, *,
+                in_kernel: bool = False) -> jnp.ndarray:
     """Stage 3a: ternary add + product anti-log, with zero-flag bypass.
 
     ``zero`` marks lanes where either operand is 0 (x * 0 = 0).
     """
-    p = mitchell_antilog_mul(la, lb, width, corr=corr, round_out=round_out)
+    p = mitchell_antilog_mul(la, lb, width, corr=corr, round_out=round_out,
+                             fast=False if in_kernel else None)
     if zero is not None:
         p = jnp.where(zero, jnp.zeros_like(p), p)
     return p
@@ -147,14 +209,16 @@ def antilog_div(la: jnp.ndarray, lb: jnp.ndarray, width: int,
                 corr: jnp.ndarray | None = None, frac_out: int = 0,
                 round_out: bool = False,
                 num_zero: jnp.ndarray | None = None,
-                den_zero: jnp.ndarray | None = None) -> jnp.ndarray:
+                den_zero: jnp.ndarray | None = None, *,
+                in_kernel: bool = False) -> jnp.ndarray:
     """Stage 3b: ternary subtract + quotient anti-log, with zero flags.
 
     x / 0 saturates to the all-ones bus value (divider-IP overflow-flag
     convention); 0 / x = 0 — applied in that order so 0 / 0 = 0.
     """
     q = mitchell_antilog_div(la, lb, width, corr=corr, frac_out=frac_out,
-                             round_out=round_out)
+                             round_out=round_out,
+                             fast=False if in_kernel else None)
     if den_zero is not None:
         q = jnp.where(den_zero, ~jnp.zeros_like(q), q)
     if num_zero is not None:
@@ -217,7 +281,8 @@ def lane_repack(lanes: list[jnp.ndarray], owidth: int) -> jnp.ndarray:
 def lane_op(a: jnp.ndarray, b: jnp.ndarray, tab: jnp.ndarray, *, width: int,
             index_bits: int = 3, op: str = "mul", frac_out: int = 0,
             mode: jnp.ndarray | None = None,
-            round_out: bool = False) -> jnp.ndarray:
+            round_out: bool = False,
+            in_kernel: bool = False) -> jnp.ndarray:
     """One full SIMDive SISD unit (Fig. 2b): the canonical stage composition.
 
     ``op``: 'mul' | 'div' | 'mixed'. For 'mixed', ``tab`` is the
@@ -226,29 +291,56 @@ def lane_op(a: jnp.ndarray, b: jnp.ndarray, tab: jnp.ndarray, *, width: int,
     front-end exactly like the hardware shares everything but the adder's
     2's-complement input. Results come back in the lane work dtype;
     zero semantics: x*0 = 0, x/0 = max, 0/x = 0.
+
+    ``in_kernel=True`` (Pallas kernel bodies) pins every stage to its
+    Mosaic-safe faithful form; the default composes the bit-exact fast
+    paths when enabled (see :mod:`repro.core.fastpath`).
     """
+    if op not in ("mul", "div", "mixed"):
+        raise ValueError(f"op must be 'mul' | 'div' | 'mixed', got {op!r}")
     dt = work_dtype(width)
     a = a.astype(dt)
     b = b.astype(dt)
-    la = lod_log(a, width)
-    lb = lod_log(b, width)
+    la = lod_log(a, width, in_kernel=in_kernel)
+    lb = lod_log(b, width, in_kernel=in_kernel)
     nz = (a != 0) & (b != 0)
-    tab_m, tab_d = split_tables(tab, index_bits, op)
+    if _static_zero_table(tab, in_kernel):
+        # drop the whole correction stage — corr=None is bit-identical to
+        # adding a zero coefficient, and skips the ternary add's signed
+        # widen/clip as well as the lookup
+        cm = cd = None
+    elif op == "mixed" and not in_kernel and fastpath_enabled():
+        # selector fast path: the region index is op-independent, and the
+        # unselected half's result is discarded by the final `where` — so
+        # offset the index into the concatenated [mul | div] table by the
+        # mode bit and pay for ONE correction lookup per element instead
+        # of computing the unused half's correction too.
+        m = fraction_mask(width, la.dtype)
+        idx = region_index(la & m, lb & m, width, index_bits)
+        T = 1 << (2 * index_bits)
+        idx = idx + jnp.where(mode != 0, jnp.int32(0), jnp.int32(T))
+        c = corr_lookup(idx, tab, width, in_kernel=in_kernel)
+        c = jnp.where(nz, c, jnp.zeros_like(c))
+        cm = cd = c
+    else:
+        tab_m, tab_d = split_tables(tab, index_bits, op)
+        if op in ("mul", "mixed"):
+            cm = region_corr(la, lb, tab_m, width, index_bits, gate=nz,
+                             in_kernel=in_kernel)
+        if op in ("div", "mixed"):
+            cd = region_corr(la, lb, tab_d, width, index_bits, gate=nz,
+                             in_kernel=in_kernel)
     if op in ("mul", "mixed"):
-        cm = region_corr(la, lb, tab_m, width, index_bits, gate=nz)
         p = antilog_mul(la, lb, width, corr=cm, round_out=round_out,
-                        zero=~nz)
+                        zero=~nz, in_kernel=in_kernel)
     if op in ("div", "mixed"):
-        cd = region_corr(la, lb, tab_d, width, index_bits, gate=nz)
         q = antilog_div(la, lb, width, corr=cd, frac_out=frac_out,
                         round_out=round_out, num_zero=a == 0,
-                        den_zero=b == 0)
+                        den_zero=b == 0, in_kernel=in_kernel)
     if op == "mul":
         return p
     if op == "div":
         return q
-    if op != "mixed":
-        raise ValueError(f"op must be 'mul' | 'div' | 'mixed', got {op!r}")
     return jnp.where(mode != 0, p, q)
 
 

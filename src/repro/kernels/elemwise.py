@@ -36,7 +36,7 @@ def _kernel(a_ref, b_ref, tab_ref, mode_ref, o_ref, *, spec: SimdiveSpec,
     out = dp.lane_op(
         a_ref[...], b_ref[...], tab_ref[...], width=spec.width,
         index_bits=spec.index_bits, op=op, frac_out=frac_out, mode=mode,
-        round_out=spec.round_output,
+        round_out=spec.round_output, in_kernel=True,
     )
     o_ref[...] = out.astype(o_ref.dtype)
 

@@ -3,29 +3,38 @@
 C[m,n] = sum_k  sign * SIMDive(|X[m,k]|, |W[k,n]|)
 
 Grid (M/bm, N/bn, K/bk) with the K axis innermost ("arbitrary" semantics):
-each step loads an (bm, bk) X-tile and (bk, bn) W-tile into VMEM, walks the
-bk slice with a fori_loop producing rank-1 outer "products" in the log
-domain (one vector add + anti-log shift per element — no MXU multiply), and
-accumulates int32 partials straight into the output tile. Signs are split
+each step loads an (bm, bk) X-tile and (bk, bn) W-tile into VMEM and walks
+the bk slice in ``k_unroll``-wide chunks — each fori_loop step materializes
+a (bm, k_unroll, bn) rank-``k_unroll`` partial in VMEM (one vector add +
+anti-log shift per element — no MXU multiply) and reduces it into the int32
+output tile. ``k_unroll = 1`` is the original serial rank-1 sweep; wider
+chunks trade VMEM for far fewer loop iterations and better VPU occupancy
+(RAPID's pipelining argument, arXiv:2206.13970 — the datapath stays, only
+the schedule changes). ``k_unroll`` is an autotuned axis: the registry's
+block candidates carry it as a 4th component (see ops.py). Signs are split
 and rejoined outside the log path via the shared
 :mod:`repro.kernels.datapath` sign stages, standard for sign-magnitude log
 arithmetic; the log front-end runs *once* per tile, outside the K loop —
-only the correction + anti-log stages ride the rank-1 sweep.
+only the correction + anti-log stages ride the chunked sweep.
 
-VMEM budget per step: bm*bk + bk*bn input words + bm*bn accumulator —
-(128, 128, 128) int32 = 3 * 64 KiB, far under the ~16 MiB/core budget; the
-MXU-aligned 128-multiples keep layouts native.
+VMEM budget per step: bm*bk + bk*bn input words + bm*bn accumulator +
+bm*k_unroll*bn chunk partials — (128, 128, 128) int32 with k_unroll = 16 is
+3 * 64 KiB + 1 MiB, far under the ~16 MiB/core budget; the MXU-aligned
+128-multiples keep layouts native.
 
 Exactness contract: for width 8 the int32 accumulation is exact (products
 < 2^16, K < 2^15) and the kernel must match ref.py bit-for-bit; width 16
 accumulates in int32 too and is exact for K*max_product < 2^31 (callers
-scale). This kernel exists because the *emulation* of the paper's arithmetic
-must run at usable speed on TPU for accuracy studies; the deployment path
-for weights is packed int8 + MXU (see DESIGN.md §2).
+scale). Any ``k_unroll`` produces bit-identical sums — int32 addition is
+associative (wrap-around included), so the chunked reduction is a pure
+schedule change. This kernel exists because the *emulation* of the paper's
+arithmetic must run at usable speed on TPU for accuracy studies; the
+deployment path for weights is packed int8 + MXU (see DESIGN.md §2).
 """
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
@@ -34,35 +43,43 @@ from jax.experimental import pallas as pl
 from repro.core.simdive import SimdiveSpec
 from . import datapath as dp
 
-__all__ = ["logmatmul_pallas"]
+__all__ = ["logmatmul_pallas", "DEFAULT_K_UNROLL", "K_UNROLL_CANDIDATES"]
 
 DEFAULT_BLOCKS = (128, 128, 128)  # (bm, bn, bk)
+DEFAULT_K_UNROLL = 8
+#: the autotune axis joined to the block candidates in ops.py
+K_UNROLL_CANDIDATES = (1, 4, 8, 16)
 
 
-def _kernel(x_ref, w_ref, tab_ref, o_ref, *, spec: SimdiveSpec, bk: int):
+def _kernel(x_ref, w_ref, tab_ref, o_ref, *, spec: SimdiveSpec, bk: int,
+            k_unroll: int):
     width = spec.width
     tab = tab_ref[...]
     xm, sx = dp.sign_split(x_ref[...], width)       # (bm, bk) magnitudes
     wm, sw = dp.sign_split(w_ref[...], width)       # (bk, bn)
-    lx = dp.lod_log(xm, width)
-    lw = dp.lod_log(wm, width)
+    lx = dp.lod_log(xm, width, in_kernel=True)
+    lw = dp.lod_log(wm, width, in_kernel=True)
     zx = xm == 0
     zw = wm == 0
+    u = k_unroll
 
     def body(j, acc):
-        la = jax.lax.dynamic_slice_in_dim(lx, j, 1, axis=1)      # (bm, 1)
-        lb = jax.lax.dynamic_slice_in_dim(lw, j, 1, axis=0)      # (1, bn)
-        corr = dp.region_corr(la, lb, tab, width, spec.index_bits)
-        zj = (jax.lax.dynamic_slice_in_dim(zx, j, 1, axis=1)
-              | jax.lax.dynamic_slice_in_dim(zw, j, 1, axis=0))
+        k0 = j * u
+        la = jax.lax.dynamic_slice_in_dim(lx, k0, u, axis=1)[:, :, None]
+        lb = jax.lax.dynamic_slice_in_dim(lw, k0, u, axis=0)[None, :, :]
+        corr = dp.region_corr(la, lb, tab, width, spec.index_bits,
+                              in_kernel=True)
+        zj = (jax.lax.dynamic_slice_in_dim(zx, k0, u, axis=1)[:, :, None]
+              | jax.lax.dynamic_slice_in_dim(zw, k0, u, axis=0)[None, :, :])
         p = dp.antilog_mul(la, lb, width, corr=corr,
-                           round_out=spec.round_output, zero=zj)
-        s = (jax.lax.dynamic_slice_in_dim(sx, j, 1, axis=1)
-             * jax.lax.dynamic_slice_in_dim(sw, j, 1, axis=0))
-        return acc + dp.sign_join(p, s)
+                           round_out=spec.round_output, zero=zj,
+                           in_kernel=True)        # (bm, u, bn)
+        s = (jax.lax.dynamic_slice_in_dim(sx, k0, u, axis=1)[:, :, None]
+             * jax.lax.dynamic_slice_in_dim(sw, k0, u, axis=0)[None, :, :])
+        return acc + jnp.sum(dp.sign_join(p, s), axis=1, dtype=jnp.int32)
 
     partial_sum = jax.lax.fori_loop(
-        0, bk, body, jnp.zeros(o_ref.shape, jnp.int32)
+        0, bk // u, body, jnp.zeros(o_ref.shape, jnp.int32)
     )
 
     @pl.when(pl.program_id(2) == 0)
@@ -73,23 +90,27 @@ def _kernel(x_ref, w_ref, tab_ref, o_ref, *, spec: SimdiveSpec, bk: int):
 
 
 @functools.partial(
-    jax.jit, static_argnames=("spec", "blocks", "interpret")
+    jax.jit, static_argnames=("spec", "blocks", "k_unroll", "interpret")
 )
 def logmatmul_pallas(x, w, spec: SimdiveSpec, blocks=DEFAULT_BLOCKS,
+                     k_unroll: int = DEFAULT_K_UNROLL,
                      interpret: bool = True):
     """(M,K) @ (K,N) with SIMDive scalar products; int32 result (no scales).
 
     ``x``, ``w`` are *signed* int32 with magnitudes < 2^width (quantization
     and scale bookkeeping live in ops.py / repro.core.approx).
+    ``k_unroll`` chunks the in-tile K sweep; it is snapped down to a
+    divisor of the (possibly shape-clamped) bk so every chunk is full.
     """
     assert x.ndim == 2 and w.ndim == 2 and x.shape[1] == w.shape[0]
     M, K = x.shape
     N = w.shape[1]
     bm, bn, bk = (min(blocks[0], M), min(blocks[1], N), min(blocks[2], K))
     assert M % bm == 0 and N % bn == 0 and K % bk == 0
+    u = math.gcd(max(int(k_unroll), 1), bk)
     grid = (M // bm, N // bn, K // bk)
     tab = dp.op_table("mul", spec.width, spec.coeff_bits, spec.index_bits)
-    kern = functools.partial(_kernel, spec=spec, bk=bk)
+    kern = functools.partial(_kernel, spec=spec, bk=bk, k_unroll=u)
     return pl.pallas_call(
         kern,
         grid=grid,

@@ -16,10 +16,15 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.fastpath import fastpath_enabled
 from repro.core.simdive import SimdiveSpec, simdive_mul
 from . import ref as _ref
 from .elemwise import DEFAULT_BLOCK as ELEMWISE_BLOCK, elemwise_pallas
-from .logmatmul import DEFAULT_BLOCKS as MATMUL_BLOCKS, logmatmul_pallas
+from .logmatmul import (
+    DEFAULT_BLOCKS as MATMUL_BLOCKS,
+    DEFAULT_K_UNROLL,
+    logmatmul_pallas,
+)
 from .packed_simd import DEFAULT_BLOCK as PACKED_BLOCK, packed_pallas
 from .registry import get_op, register_op
 
@@ -91,16 +96,25 @@ def _matmul_int_ref(x, w, *, spec):
     return out.reshape(*lead, w.shape[1])
 
 
+def _split_matmul_block(block):
+    """A matmul block is (bm, bn, bk) or (bm, bn, bk, k_unroll): the 4th
+    component is the autotuned in-tile K chunk width (see logmatmul.py)."""
+    if len(block) == 4:
+        return tuple(block[:3]), int(block[3])
+    return tuple(block), DEFAULT_K_UNROLL
+
+
 def _matmul_int_pallas(x, w, *, spec, block, interpret):
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
     M, K = x2.shape
     N = w.shape[1]
-    bm, bn, bk = min(block[0], M), min(block[1], N), min(block[2], K)
+    (bm_, bn_, bk_), k_unroll = _split_matmul_block(block)
+    bm, bn, bk = min(bm_, M), min(bn_, N), min(bk_, K)
     xp = _pad2d(x2, bm, bk)
     wp = _pad2d(w, bk, bn)
     out = logmatmul_pallas(xp, wp, spec, blocks=(bm, bn, bk),
-                           interpret=interpret)
+                           k_unroll=k_unroll, interpret=interpret)
     return out[:M, :N].reshape(*lead, N)
 
 
@@ -108,7 +122,15 @@ def _matmul_int_pallas(x, w, *, spec, block, interpret):
 def _matmul_emul_ref(qx, sx, qw, sw, *, spec, k_chunk=128):
     """Integer core of the model-facing emulated matmul: (M,K)x(K,N) with
     SIMDive scalar products, K-chunked so the (M, Kc, N) product tensor
-    stays small; int64 accumulation (bit-exact seed semantics)."""
+    stays small; int64 accumulation (bit-exact seed semantics).
+
+    Fast path (enabled, width <= 15): the sign is joined into the int32
+    product — exact, since |product| < 2^(2*width) <= 2^30 — and the chunk
+    is contracted straight to int64 via einsum's accumulator dtype, so no
+    (M, Kc, N) *int64* tensor is ever materialized (the int32 one fuses
+    with the reduction). Identical sums bit-for-bit: every addend is the
+    same integer either way.
+    """
     M, K = qx.shape
     N = qw.shape[1]
     pad = (-K) % k_chunk
@@ -122,12 +144,19 @@ def _matmul_emul_ref(qx, sx, qw, sw, *, spec, k_chunk=128):
     sxc = sx.reshape(M, nc, k_chunk).transpose(1, 0, 2)
     qwc = qw.reshape(nc, k_chunk, N)
     swc = sw.reshape(nc, k_chunk, N)
+    fast = fastpath_enabled() and 2 * spec.width <= 31
 
     def body(acc, inp):
         qxk, sxk, qwk, swk = inp
         p = simdive_mul(qxk[:, :, None], qwk[None, :, :], spec)  # (M,Kc,N)
         s = sxk[:, :, None] * swk[None, :, :]
-        acc = acc + jnp.sum(p.astype(jnp.int64) * s.astype(jnp.int64), axis=1)
+        if fast:
+            sp = p.astype(jnp.int32) * s
+            acc = acc + jnp.einsum("mkn->mn", sp,
+                                   preferred_element_type=jnp.int64)
+        else:
+            acc = acc + jnp.sum(p.astype(jnp.int64) * s.astype(jnp.int64),
+                                axis=1)
         return acc, None
 
     acc0 = jnp.zeros((M, N), jnp.int64)
@@ -169,19 +198,29 @@ register_op(
     default_block=PACKED_BLOCK,
     block_candidates=((64, 128), (128, 256), (256, 256)),
 )
+# matmul blocks carry the k_unroll autotune axis as a 4th component
+# (K_UNROLL_CANDIDATES in logmatmul.py); 3-tuples stay accepted and mean
+# the default unroll.
+_MATMUL_CANDIDATES = (
+    (128, 128, 128, 1),
+    (128, 128, 128, 4),
+    (128, 128, 128, 8),
+    (128, 128, 128, 16),
+    (64, 128, 256, 8),
+)
 register_op(
     "matmul_int",
     ref=_matmul_int_ref,
     pallas=_matmul_int_pallas,
-    default_block=MATMUL_BLOCKS,
-    block_candidates=((128, 128, 128), (64, 128, 256)),
+    default_block=MATMUL_BLOCKS + (DEFAULT_K_UNROLL,),
+    block_candidates=_MATMUL_CANDIDATES,
 )
 register_op(
     "matmul_emul",
     ref=_matmul_emul_ref,
     pallas=_matmul_emul_pallas,
-    default_block=MATMUL_BLOCKS,
-    block_candidates=((128, 128, 128), (64, 128, 256)),
+    default_block=MATMUL_BLOCKS + (DEFAULT_K_UNROLL,),
+    block_candidates=_MATMUL_CANDIDATES,
 )
 register_op("sqrt", ref=_sqrt_ref)   # Pallas impl: future PR, plugs in here
 

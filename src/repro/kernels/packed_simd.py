@@ -47,7 +47,7 @@ def _kernel(a_ref, b_ref, tab_ref, mode_ref, o_ref, *, spec: SimdiveSpec,
     outs = [
         dp.lane_op(a, b, tab, width=width, index_bits=spec.index_bits,
                    op=op, frac_out=frac_out, mode=m,
-                   round_out=spec.round_output)
+                   round_out=spec.round_output, in_kernel=True)
         for a, b, m in zip(a_lanes, b_lanes, m_lanes)
     ]
     o_ref[...] = dp.lane_repack(outs, 2 * width)

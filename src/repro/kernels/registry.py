@@ -41,6 +41,8 @@ __all__ = [
     "shape_bucket",
     "autotune_cache",
     "clear_autotune_cache",
+    "export_autotune_cache",
+    "preload_autotune_cache",
 ]
 
 #: backends accepted by :func:`get_op`; 'auto'/'pallas' resolve per-host.
@@ -123,12 +125,87 @@ def shape_bucket(shape: tuple) -> tuple:
 
 
 def autotune_cache() -> dict:
-    """The live (op, width, shape-bucket, backend) -> block cache."""
+    """The live (op, width, shape-buckets, backend, kwargs-sig) -> block
+    cache."""
     return _AUTOTUNE_CACHE
 
 
 def clear_autotune_cache() -> None:
     _AUTOTUNE_CACHE.clear()
+
+
+def _kwargs_sig(kw: dict) -> tuple:
+    """Stable, hashable, JSON-round-trippable signature of the per-call
+    kwargs that can steer tuning (``op=``, ``frac_out=``, ...).
+
+    Without this in the cache key, ``elemwise`` ``op='mul'``/``'div'``/
+    ``'mixed'`` (and different ``frac_out``) would share one cached block
+    choice. Array-valued kwargs (``mode=``) contribute their pow-2 shape
+    bucket — their *values* cannot change which block is fastest.
+    """
+    sig = []
+    for k in sorted(kw):
+        v = kw[k]
+        if isinstance(v, (bool, int, float, str, type(None))):
+            sig.append((k, v))
+        elif hasattr(v, "shape"):
+            sig.append((k, "array", tuple(shape_bucket(v.shape))))
+        else:
+            sig.append((k, repr(v)))
+    return tuple(sig)
+
+
+def export_autotune_cache() -> list:
+    """The live cache as JSON-ready records (the BENCH run ``autotune``
+    field): ``[{"key": [...], "block": [...]}, ...]``. Keys are nested
+    lists mirroring the tuple structure; :func:`preload_autotune_cache`
+    re-tuples them, so export -> json -> preload round-trips exactly."""
+    def jsonable(x):
+        if isinstance(x, tuple):
+            return [jsonable(i) for i in x]
+        return x
+
+    return [{"key": jsonable(k), "block": list(v)}
+            for k, v in sorted(_AUTOTUNE_CACHE.items(), key=lambda kv: repr(kv[0]))]
+
+
+def preload_autotune_cache(records: list) -> int:
+    """Seed the cache from :func:`export_autotune_cache` output (e.g. the
+    committed BENCH baseline's ``autotune`` field — ``run.py
+    --reuse-autotune``). Returns how many entries were loaded; malformed
+    records are skipped, never fatal (the cache is an optimization).
+
+    Each block is validated against the named op's *current* candidate
+    set (candidates + registered default): a block retired from the
+    candidate list — e.g. one that turned out slow or miscompiles — is
+    dropped here instead of being re-seeded forever, and records for
+    unregistered ops are ignored.
+    """
+    def tupleize(x):
+        if isinstance(x, list):
+            return tuple(tupleize(i) for i in x)
+        return x
+
+    _ensure_builtin_ops()
+    loaded = 0
+    for rec in records or []:
+        try:
+            key = tupleize(rec["key"])
+            block = tuple(int(d) for d in rec["block"])
+        except (KeyError, TypeError, ValueError):
+            continue
+        entry = _REGISTRY.get(key[0]) if isinstance(key, tuple) and key \
+            else None
+        if entry is None:
+            continue
+        allowed = set(entry.block_candidates)
+        if entry.default_block is not None:
+            allowed.add(entry.default_block)
+        if block not in allowed:
+            continue
+        _AUTOTUNE_CACHE[key] = block
+        loaded += 1
+    return loaded
 
 
 def _autotune_mode() -> str:
@@ -152,14 +229,16 @@ def _time_once(fn: Callable, *args, **kw) -> float:
 
 
 def _pick_block(entry: OpImpl, spec, backend: str, arrays, kw) -> tuple:
-    """Cached per-(op, width, shape-bucket) block choice, autotuned once.
+    """Cached per-(op, width, shape-buckets, kwargs-sig) block choice,
+    autotuned once.
 
     Timing only happens for compiled TPU runs ('force' overrides):
     interpreter wall-clock says nothing about TPU block quality and costs
     several full op executions.
     """
     key = (entry.name, spec.width,
-           tuple(shape_bucket(a.shape) for a in arrays), backend)
+           tuple(shape_bucket(a.shape) for a in arrays), backend,
+           _kwargs_sig(kw))
     cached = _AUTOTUNE_CACHE.get(key)
     if cached is not None:
         return cached

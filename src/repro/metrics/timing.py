@@ -2,21 +2,30 @@
 
 One timing discipline for every benchmark: warm the callable (compile +
 autotune) with ``jax.block_until_ready`` on its full output pytree, then
-time ``iters`` synchronous repetitions and report mean/best. Results carry
-the operands' pow-2 shape buckets (the same bucketing the kernel registry's
-autotune cache uses), so trajectory entries from different runs compare
-like against like even when exact shapes drift.
+time ``iters`` synchronous repetitions and report mean/best. Warmup is
+tracked per (callable, exact operand shapes/dtypes + keyword set): on
+cold caches (CI ``--quick`` runs) the first sight of a signature always
+warms before the timed block — compile time can never leak into the
+first sample — and a signature already warmed this process skips the
+redundant warmup call instead of paying a full extra execution. Results
+carry the operands' pow-2 shape buckets (the same bucketing the kernel
+registry's autotune cache uses), so trajectory entries from different runs
+compare like against like even when exact shapes drift.
 """
 from __future__ import annotations
 
 import time
+import weakref
 from dataclasses import dataclass
 
 import jax
 
 from repro.kernels.registry import shape_bucket
 
-__all__ = ["TimingStats", "time_callable"]
+__all__ = ["TimingStats", "time_callable", "reset_warm_tracking"]
+
+# fn -> set of call signatures (_warm_key) already warmed this process
+_WARMED: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
 
 
 @dataclass(frozen=True)
@@ -52,6 +61,50 @@ class TimingStats:
         }
 
 
+def _warmed_keys(fn) -> set | None:
+    """The already-warmed signature set for ``fn``, or None if ``fn``
+    cannot be weakly referenced (then every call warms — the safe
+    default)."""
+    try:
+        seen = _WARMED.get(fn)
+        if seen is None:
+            seen = set()
+            _WARMED[fn] = seen
+        return seen
+    except TypeError:
+        return None
+
+
+def reset_warm_tracking() -> None:
+    """Forget every warmed signature. Call after anything that drops
+    compiled executables behind the harness's back (e.g.
+    ``jax.clear_caches()`` / ``repro.core.fastpath.set_faithful``) so the
+    next timing of a previously-seen signature re-warms."""
+    _WARMED.clear()
+
+
+def _sig(v):
+    if hasattr(v, "shape"):
+        return ("array", tuple(v.shape), str(getattr(v, "dtype", "")))
+    if isinstance(v, (bool, int, float, str, bytes, type(None))):
+        return v
+    return repr(v)
+
+
+def _warm_key(args, kw) -> tuple:
+    """Exact call signature for warm tracking: every positional and
+    keyword argument by value (arrays by shape + dtype).
+
+    Deliberately *finer* than the pow-2 reporting buckets: a different
+    exact shape (or dtype, or keyword value — think ``op='mul'`` vs
+    ``op='div'``) in the same bucket makes jit retrace, so it must
+    re-warm or compile time would leak into the timed samples."""
+    return (
+        tuple(_sig(a) for a in args),
+        tuple((k, _sig(kw[k])) for k in sorted(kw)),
+    )
+
+
 def time_callable(fn, *args, iters: int = 5, warmup: int = 1,
                   items: int | None = None, **kw) -> TimingStats:
     """Time ``fn(*args, **kw)`` end-to-end, device-synchronized.
@@ -61,15 +114,33 @@ def time_callable(fn, *args, iters: int = 5, warmup: int = 1,
     meaningful. Interpreter-mode wall-clock is still *reported* by this
     harness — trajectory consumers filter on the backend field instead of
     this layer guessing which numbers matter.
+
+    Raises :class:`ValueError` when the measured best wall-clock is not
+    strictly positive — a zero can only mean the call was constant-folded
+    away or the clock is too coarse, and either way the number would
+    poison the trajectory baseline it gets committed into.
     """
     buckets = tuple(shape_bucket(a.shape) for a in args if hasattr(a, "shape"))
-    for _ in range(max(warmup, 1)):
-        jax.block_until_ready(fn(*args, **kw))
+    seen = _warmed_keys(fn)
+    key = _warm_key(args, kw)
+    warmed = 0
+    if seen is None or key not in seen:
+        for _ in range(max(warmup, 1)):
+            jax.block_until_ready(fn(*args, **kw))
+            warmed += 1
+        if seen is not None:
+            seen.add(key)
     times = []
     for _ in range(max(iters, 1)):
         t0 = time.perf_counter()
         jax.block_until_ready(fn(*args, **kw))
         times.append(time.perf_counter() - t0)
-    return TimingStats(mean_s=sum(times) / len(times), best_s=min(times),
-                       iters=len(times), warmup=max(warmup, 1),
+    best = min(times)
+    if best <= 0:
+        raise ValueError(
+            f"non-positive best wall-clock ({best!r}s) timing {fn!r} on "
+            f"buckets {buckets}: the measurement is meaningless (folded "
+            "call or too-coarse clock) and must not enter the trajectory")
+    return TimingStats(mean_s=sum(times) / len(times), best_s=best,
+                       iters=len(times), warmup=warmed,
                        shape_buckets=buckets, items=items)

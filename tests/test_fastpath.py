@@ -1,0 +1,232 @@
+"""Fast-path vs hardware-faithful parity: the faithful stages are the
+in-repo oracle for every fast path (ISSUE 4 tentpole contract).
+
+Every test here asserts *bit* equality — the fast paths are throughput
+optimizations of the exact same semantics, never approximations of them.
+Width 8 is exhaustive (the whole lane / log-sum domain); widths 16/32 are
+seeded dense samples against the same faithful oracles.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import SimdiveSpec, pack, segmented_leading_one
+from repro.core.fastpath import (
+    faithful_enabled,
+    faithful_mode,
+    fastpath_enabled,
+)
+from repro.core.mitchell import (
+    _antilog_floor,
+    leading_one_cascade,
+    leading_one_clz,
+    mitchell_antilog_div,
+    mitchell_log,
+)
+from repro.kernels import datapath as dp, get_op
+
+RNG = np.random.default_rng(23)
+
+
+# ------------------------------------------------------------------ LOD --
+def test_lod_width8_exhaustive_three_ways():
+    """clz LOD == shift cascade == segmented 4-bit LOD over all 2^8 values."""
+    a = jnp.asarray(np.arange(256, dtype=np.uint32))
+    casc = np.asarray(leading_one_cascade(a, 8))
+    clz = np.asarray(leading_one_clz(a, 8))
+    seg = np.asarray(segmented_leading_one(a, 8))
+    assert np.array_equal(casc, clz)
+    assert np.array_equal(casc, seg)
+
+
+def test_lod_width16_exhaustive():
+    a = jnp.asarray(np.arange(1 << 16, dtype=np.uint32))
+    assert np.array_equal(np.asarray(leading_one_cascade(a, 16)),
+                          np.asarray(leading_one_clz(a, 16)))
+
+
+def test_lod_width32_sampled():
+    a = RNG.integers(0, 1 << 32, 200_000, dtype=np.uint64)
+    a = np.concatenate([a, [0, 1, (1 << 32) - 1]]).astype(np.uint64)
+    aj = jnp.asarray(a)
+    assert np.array_equal(np.asarray(leading_one_cascade(aj, 32)),
+                          np.asarray(leading_one_clz(aj, 32)))
+
+
+# -------------------------------------------------------------- anti-log --
+@pytest.mark.parametrize("round_out", [False, True])
+def test_antilog_mul_width8_all_log_sums(round_out):
+    """Float-exact anti-log == shift anti-log over all 2^16 summed-log
+    values (covers the whole in-range domain plus the saturation region)."""
+    ls = jnp.asarray(np.arange(1 << 16, dtype=np.uint32))
+    fast = np.asarray(_antilog_floor(ls, 8, round_out=round_out, fast=True))
+    faith = np.asarray(_antilog_floor(ls, 8, round_out=round_out, fast=False))
+    assert np.array_equal(fast, faith)
+
+
+@pytest.mark.parametrize("frac_out", [0, 8, 12])
+@pytest.mark.parametrize("round_out", [False, True])
+def test_antilog_div_width8_dense(frac_out, round_out):
+    """Quotient anti-log parity over a dense (l1, l2, corr) cross of the
+    width-8 log domain, both rounding modes, all used frac_out values."""
+    l1 = np.arange(0, 8 << 7, 3, dtype=np.uint32)
+    l2 = np.arange(0, 8 << 7, 7, dtype=np.uint32)
+    L1, L2 = np.meshgrid(l1, l2, indexing="ij")
+    corr = RNG.integers(-(1 << 5), 1 << 5, L1.shape, dtype=np.int32)
+    args = (jnp.asarray(L1), jnp.asarray(L2))
+    kw = dict(corr=jnp.asarray(corr), frac_out=frac_out, round_out=round_out)
+    fast = np.asarray(mitchell_antilog_div(*args, 8, fast=True, **kw))
+    faith = np.asarray(mitchell_antilog_div(*args, 8, fast=False, **kw))
+    assert np.array_equal(fast, faith)
+
+
+@pytest.mark.parametrize("width", [16])
+def test_antilog_width16_sampled(width):
+    n = 200_000
+    top = width << (width - 1)
+    l1 = jnp.asarray(RNG.integers(0, top, n, dtype=np.uint32))
+    l2 = jnp.asarray(RNG.integers(0, top, n, dtype=np.uint32))
+    corr = jnp.asarray(
+        RNG.integers(-(1 << (width - 3)), 1 << (width - 3), n,
+                     dtype=np.int32))
+    ls = jnp.asarray(RNG.integers(0, 2 * top, n, dtype=np.uint32))
+    for ro in (False, True):
+        assert np.array_equal(
+            np.asarray(_antilog_floor(ls, width, round_out=ro, fast=True)),
+            np.asarray(_antilog_floor(ls, width, round_out=ro, fast=False)))
+        # frac_out=15 is the approx.py softmax configuration
+        for fo in (0, 12, 15):
+            f = mitchell_antilog_div(l1, l2, width, corr=corr, frac_out=fo,
+                                     round_out=ro, fast=True)
+            s = mitchell_antilog_div(l1, l2, width, corr=corr, frac_out=fo,
+                                     round_out=ro, fast=False)
+            assert np.array_equal(np.asarray(f), np.asarray(s)), (ro, fo)
+
+
+# ----------------------------------------------------------- LUT / stage --
+def test_log8_lut_matches_mitchell_log_exhaustive():
+    """The 256-entry LUT front-end == the faithful log stage, including the
+    a == 0 garbage entry (bypassed downstream by the zero flags)."""
+    a = jnp.asarray(np.arange(256, dtype=np.uint32))
+    faith = np.asarray(mitchell_log(a, 8, fast=False))
+    assert np.array_equal(np.asarray(dp.log8_table()), faith)
+    assert np.array_equal(np.asarray(dp.lod_log(a, 8, lut=True)), faith)
+    assert np.array_equal(np.asarray(dp.lod_log(a, 8)), faith)
+    assert np.array_equal(np.asarray(dp.lod_log(a, 8, in_kernel=True)),
+                          faith)
+
+
+# ----------------------------------------------------- end-to-end parity --
+def _grid8():
+    a = np.arange(256, dtype=np.uint32)
+    A, B = np.meshgrid(a, a, indexing="ij")
+    return jnp.asarray(A.ravel()), jnp.asarray(B.ravel())
+
+
+@pytest.mark.parametrize("coeff_bits", [0, 6])
+@pytest.mark.parametrize("op", ["mul", "div", "mixed"])
+def test_elemwise_fast_vs_faithful_exhaustive8(op, coeff_bits):
+    """Whole-op parity over every 8-bit pair: the SIMDIVE_FAITHFUL stages
+    and the default fast paths produce identical bits through get_op."""
+    spec = SimdiveSpec(width=8, coeff_bits=coeff_bits)
+    a, b = _grid8()
+    kw = {"op": op} if op == "mul" else {"op": op, "frac_out": 8}
+    if op == "mixed":
+        kw["mode"] = jnp.asarray(
+            RNG.integers(0, 2, a.shape, dtype=np.uint32))
+    with faithful_mode(False):
+        fast = np.asarray(get_op("elemwise", spec, "ref")(a, b, **kw))
+    with faithful_mode():
+        assert faithful_enabled()
+        faith = np.asarray(get_op("elemwise", spec, "ref")(a, b, **kw))
+    assert np.array_equal(fast, faith)
+
+
+def test_packed_fast_vs_faithful():
+    spec = SimdiveSpec(width=8, coeff_bits=6)
+    lanes = (16, 64)
+    a = jnp.asarray(RNG.integers(0, 256, lanes, dtype=np.uint32))
+    b = jnp.asarray(RNG.integers(1, 256, lanes, dtype=np.uint32))
+    aw, bw = pack(a, 8), pack(b, 8)
+    for kw in ({"op": "mul"}, {"op": "div", "frac_out": 8}):
+        with faithful_mode(False):
+            fast = np.asarray(get_op("packed", spec, "ref")(aw, bw, **kw))
+        with faithful_mode():
+            faith = np.asarray(get_op("packed", spec, "ref")(aw, bw, **kw))
+        assert np.array_equal(fast, faith), kw
+
+
+@pytest.mark.parametrize("width", [8, 16])
+def test_matmul_emul_fast_vs_faithful(width):
+    """The fused int32-join reduction == the seed int64 path bit-for-bit
+    (width 16 exercises the faithful fallback of the emul fast gate)."""
+    from repro.core.approx import quantize_sign_magnitude
+
+    spec = SimdiveSpec(width=width, coeff_bits=6)
+    x = jnp.asarray(RNG.normal(size=(13, 70)).astype(np.float32))
+    w = jnp.asarray(RNG.normal(size=(70, 9)).astype(np.float32))
+    qx, sx, _ = quantize_sign_magnitude(x, width)
+    qw, sw, _ = quantize_sign_magnitude(w, width, axis=0)
+    with faithful_mode(False):
+        fast = np.asarray(
+            get_op("matmul_emul", spec, "ref")(qx, sx, qw, sw, k_chunk=32))
+    with faithful_mode():
+        faith = np.asarray(
+            get_op("matmul_emul", spec, "ref")(qx, sx, qw, sw, k_chunk=32))
+    assert np.array_equal(fast, faith)
+
+
+def test_matmul_int_fast_vs_faithful_and_interpret():
+    """ref fast == ref faithful == pallas-interpret (which always runs the
+    in-kernel faithful stages), across k_unroll choices."""
+    spec = SimdiveSpec(width=8, coeff_bits=6)
+    x = jnp.asarray(RNG.integers(-255, 256, (10, 48), dtype=np.int32))
+    w = jnp.asarray(RNG.integers(-255, 256, (48, 12), dtype=np.int32))
+    with faithful_mode(False):
+        fast = np.asarray(get_op("matmul_int", spec, "ref")(x, w))
+    with faithful_mode():
+        faith = np.asarray(get_op("matmul_int", spec, "ref")(x, w))
+    assert np.array_equal(fast, faith)
+    for ku in (1, 8):
+        got = get_op("matmul_int", spec, "pallas-interpret",
+                     block=(8, 8, 16, ku))(x, w)
+        assert np.array_equal(np.asarray(got), fast), ku
+
+
+def test_width16_sampled_fast_vs_faithful_elemwise():
+    spec = SimdiveSpec(width=16, coeff_bits=6)
+    n = 100_000
+    a = jnp.asarray(RNG.integers(0, 1 << 16, n, dtype=np.uint32))
+    b = jnp.asarray(RNG.integers(1, 1 << 16, n, dtype=np.uint32))
+    for kw in ({"op": "mul"}, {"op": "div", "frac_out": 12}):
+        with faithful_mode(False):
+            fast = np.asarray(get_op("elemwise", spec, "ref")(a, b, **kw))
+        with faithful_mode():
+            faith = np.asarray(get_op("elemwise", spec, "ref")(a, b, **kw))
+        assert np.array_equal(fast, faith), kw
+
+
+def test_width32_sampled_fast_vs_faithful():
+    """Width 32 keeps the shift anti-log (no f32 fast form) but the clz
+    LOD still engages — sampled parity through simdive_mul."""
+    from repro.core.simdive import simdive_mul
+
+    spec = SimdiveSpec(width=32, coeff_bits=6)
+    n = 20_000
+    a = jnp.asarray(RNG.integers(0, 1 << 32, n, dtype=np.uint64))
+    b = jnp.asarray(RNG.integers(1, 1 << 32, n, dtype=np.uint64))
+    with faithful_mode(False):
+        fast = np.asarray(simdive_mul(a, b, spec))
+    with faithful_mode():
+        faith = np.asarray(simdive_mul(a, b, spec))
+    assert np.array_equal(fast, faith)
+
+
+def test_faithful_mode_context_restores():
+    ambient = faithful_enabled()
+    with faithful_mode():
+        assert faithful_enabled()
+        with faithful_mode(False):
+            assert fastpath_enabled()
+        assert faithful_enabled()
+    assert faithful_enabled() == ambient

@@ -170,3 +170,39 @@ def test_time_callable_stats_and_buckets():
 def test_time_callable_without_items():
     t = time_callable(lambda: jnp.zeros(4), iters=1)
     assert t.items is None and t.items_per_s is None
+
+
+def test_time_callable_warms_once_per_fn_and_signature():
+    """Warmup (compile absorption) runs on first sight of a (fn, exact
+    shapes/dtypes) signature — before any timed sample — and is skipped on
+    re-timing the same signature, so repeated measurements don't pay a
+    redundant full execution."""
+    calls = []
+
+    def f(x):
+        calls.append(1)
+        return jnp.asarray(x) * 2
+
+    a = jnp.zeros((7, 60))
+    t1 = time_callable(f, a, iters=2, warmup=1)
+    assert t1.warmup == 1 and len(calls) == 3     # 1 warmup + 2 timed
+    t2 = time_callable(f, a, iters=2, warmup=1)
+    assert t2.warmup == 0 and len(calls) == 5     # same signature: no re-warm
+    # a different exact shape — even in the same pow-2 bucket — means jit
+    # recompiles, so it must re-warm (compile time must not leak into the
+    # timed block)
+    b = jnp.zeros((7, 59))
+    assert t1.shape_buckets == ((8, 64),)
+    t3 = time_callable(f, b, iters=1, warmup=1)
+    assert t3.shape_buckets == ((8, 64),) and t3.warmup == 1
+    assert len(calls) == 7
+
+
+def test_time_callable_rejects_non_positive_best(monkeypatch):
+    """A folded-away / zero-clock measurement must never enter the
+    trajectory (best_us > 0 is asserted, not hoped)."""
+    import repro.metrics.timing as timing_mod
+
+    monkeypatch.setattr(timing_mod.time, "perf_counter", lambda: 1.0)
+    with pytest.raises(ValueError, match="non-positive"):
+        time_callable(lambda: jnp.zeros(2), iters=1)

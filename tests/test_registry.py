@@ -184,7 +184,7 @@ def test_autotune_cache_stable_for_repeated_shapes():
         op = get_op("elemwise", spec, "pallas-interpret")   # block=None
         first = op(a, b, op="mul")
         key = ("elemwise", 8, (shape_bucket((8, 64)),) * 2,
-               "pallas-interpret")
+               "pallas-interpret", (("op", "mul"),))
         assert key in autotune_cache()
         chosen = autotune_cache()[key]
         # repeated shape: same cached choice, no re-tuning, same bits
@@ -215,7 +215,7 @@ def test_autotune_timing_loop_forced(monkeypatch):
     try:
         out = get_op("elemwise", spec, "pallas-interpret")(a, b, op="mul")
         key = ("elemwise", 8, (shape_bucket((8, 32)),) * 2,
-               "pallas-interpret")
+               "pallas-interpret", (("op", "mul"),))
         entry = registry._REGISTRY["elemwise"]
         assert len(timed) == len(entry.block_candidates)   # loop really ran
         assert autotune_cache()[key] in entry.block_candidates
@@ -226,6 +226,83 @@ def test_autotune_timing_loop_forced(monkeypatch):
         assert len(timed) == len(entry.block_candidates)
     finally:
         clear_autotune_cache()
+
+
+def test_autotune_key_separates_call_kwargs():
+    """Regression: the cache key must fold in the tuning-relevant kwargs —
+    op='mul'/'div'/'mixed' (and different frac_out) previously shared one
+    cached block/k_unroll choice."""
+    spec = SimdiveSpec(width=8, coeff_bits=6)
+    a = _uints((8, 64), 8)
+    b = _uints((8, 64), 8, lo=1)
+    mode = _uints((8, 64), 1)
+    clear_autotune_cache()
+    try:
+        op = get_op("elemwise", spec, "pallas-interpret")
+        op(a, b, op="mul")
+        op(a, b, op="div", frac_out=3)
+        op(a, b, op="div", frac_out=8)
+        op(a, b, op="mixed", mode=mode, frac_out=3)
+        keys = [k for k in autotune_cache() if k[0] == "elemwise"]
+        # four distinct call signatures -> four distinct cache entries
+        assert len(keys) == 4, keys
+        sigs = {k[4] for k in keys}
+        assert (("op", "mul"),) in sigs
+        assert (("frac_out", 3), ("op", "div")) in sigs
+        assert (("frac_out", 8), ("op", "div")) in sigs
+        # array-valued kwargs contribute their shape bucket, not identity
+        assert (("frac_out", 3), ("mode", "array", (8, 64)),
+                ("op", "mixed")) in sigs
+    finally:
+        clear_autotune_cache()
+
+
+def test_autotune_cache_export_preload_roundtrip():
+    """export -> json -> preload reproduces the exact cache keys (the BENCH
+    'autotune' field / run.py --reuse-autotune path)."""
+    import json
+
+    from repro.kernels.registry import (
+        export_autotune_cache,
+        preload_autotune_cache,
+    )
+
+    spec = SimdiveSpec(width=8, coeff_bits=6)
+    a = _uints((8, 64), 8)
+    b = _uints((8, 64), 8, lo=1)
+    clear_autotune_cache()
+    try:
+        get_op("elemwise", spec, "pallas-interpret")(a, b, op="mul")
+        before = dict(autotune_cache())
+        assert before
+        wire = json.loads(json.dumps(export_autotune_cache()))
+        clear_autotune_cache()
+        assert preload_autotune_cache(wire) == len(before)
+        assert autotune_cache() == before
+        # malformed records are skipped, never fatal
+        assert preload_autotune_cache([{"bogus": 1}, None]) == 0
+        # a block not in the op's current candidate set (e.g. retired) and
+        # records for unregistered ops are dropped, not re-seeded forever
+        k = next(iter(wire))["key"]
+        assert preload_autotune_cache([{"key": k, "block": [3, 5]}]) == 0
+        assert preload_autotune_cache(
+            [{"key": ["no_such_op"] + k[1:], "block": [256, 512]}]) == 0
+    finally:
+        clear_autotune_cache()
+
+
+def test_matmul_block_candidates_carry_k_unroll():
+    """The k_unroll axis joined the matmul autotune space: 4-component
+    candidates dispatch correctly and stay bit-equal to ref."""
+    spec = SimdiveSpec(width=8, coeff_bits=6)
+    x = jnp.asarray(RNG.integers(-255, 256, (9, 33), dtype=np.int32))
+    w = jnp.asarray(RNG.integers(-255, 256, (33, 20), dtype=np.int32))
+    want = get_op("matmul_int", spec, "ref")(x, w)
+    entry = registry._REGISTRY["matmul_int"]
+    assert any(len(c) == 4 for c in entry.block_candidates)
+    for blk in ((8, 8, 16), (8, 8, 16, 1), (8, 8, 16, 4), (8, 8, 16, 16)):
+        got = get_op("matmul_int", spec, "pallas-interpret", block=blk)(x, w)
+        assert np.array_equal(np.asarray(got), np.asarray(want)), blk
 
 
 def test_explicit_block_bypasses_autotune():
