@@ -410,31 +410,77 @@ def run_suites(report, wanted, quick: bool):
 
 # -------------------------------------------------------------- autotune --
 def reuse_autotune(path: str) -> tuple[int, str]:
-    """Preload the registry autotune cache from the committed baseline.
+    """Preload the registry autotune cache from recorded winners.
 
-    Takes the most recent run record carrying an ``autotune`` field (the
-    block/k_unroll winners in effect for that run) and seeds the live
-    cache, so a rerun on the same machine skips the measure loop. ``path``
-    (the ``--bench-out`` trajectory) is tried first; when it has no
-    usable history — e.g. a fresh scratch output file — the committed
-    repo baseline is the fallback, so a local
-    ``run.py --reuse-autotune --bench-out new.json`` still reuses the
-    committed winners exactly like CI's copy-then-run flow. Returns
-    ``(entries loaded, source path)``; any problem loads nothing — the
-    cache is an optimization, never a correctness input.
+    Merges ``autotune`` records *per key* across the trajectory's run
+    history, newest run first (the latest winner for a key always takes
+    precedence, but a key only recorded by an older run still loads —
+    a newer run with a missing or corrupt ``autotune`` field no longer
+    silently discards every older winner). ``path`` (the ``--bench-out``
+    trajectory) is merged first; the committed repo baseline fills in
+    keys it lacks, so a local ``run.py --reuse-autotune --bench-out
+    new.json`` still reuses the committed winners exactly like CI's
+    copy-then-run flow.
+
+    Every anomaly is *loud* (stderr): an unreadable trajectory, a run
+    whose ``autotune`` field is not a list, malformed records inside one,
+    and winners the registry rejected (retired blocks / unknown ops).
+    Loading remains best-effort — the cache is an optimization, never a
+    correctness input — but a silent no-op is itself a perf bug, which is
+    why this warns instead of just falling through. Returns
+    ``(entries loaded, source description)``.
     """
+    def warn(msg):
+        print(f"# !!! reuse-autotune: {msg}", file=sys.stderr)
+
     committed = os.path.join(_REPO_ROOT, "BENCH_simdive.json")
+    merged: dict[str, dict] = {}       # json key -> newest record seen
+    sources = []
     for src in dict.fromkeys([path, committed]):   # de-duped, order kept
         try:
             with open(src) as f:
                 doc = migrate_doc(json.load(f))
-        except Exception:  # noqa: BLE001 — missing/corrupt: try fallback
+        except FileNotFoundError:
+            continue                   # scratch --bench-out: expected
+        except Exception as e:  # noqa: BLE001 — corrupt: warn, fall back
+            warn(f"{src} is not a readable trajectory "
+                 f"({type(e).__name__}: {e}); trying the next source")
             continue
-        for run in reversed(doc.get("runs", [])):
+        found = 0
+        for ri in range(len(doc.get("runs", [])) - 1, -1, -1):
+            run = doc["runs"][ri]
             recs = run.get("autotune")
-            if recs:
-                return preload_autotune_cache(recs), src
-    return 0, path
+            if recs is None:
+                continue
+            if not isinstance(recs, list):
+                warn(f"{os.path.basename(src)} run[{ri}] has a corrupt "
+                     f"autotune field ({type(recs).__name__}, expected "
+                     "list); skipping that run, older runs still load")
+                continue
+            malformed = 0
+            for rec in recs:
+                try:
+                    key = json.dumps(rec["key"], sort_keys=True)
+                except (TypeError, KeyError):
+                    malformed += 1
+                    continue
+                merged.setdefault(key, rec)   # newest-first: first wins
+                found += 1
+            if malformed:
+                warn(f"{os.path.basename(src)} run[{ri}]: {malformed} "
+                     "malformed autotune record(s) dropped")
+        if found:
+            sources.append(os.path.basename(src))
+    loaded = preload_autotune_cache(list(merged.values()))
+    rejected = len(merged) - loaded
+    if rejected:
+        warn(f"{rejected} recorded winner(s) rejected by the registry "
+             "(retired block candidates or unregistered ops); they will "
+             "be re-tuned")
+    if not loaded:
+        warn("no usable autotune records found anywhere; every block "
+             "choice will be re-tuned this run")
+    return loaded, "+".join(sources) if sources else path
 
 
 # ------------------------------------------------------------- trajectory --
@@ -479,9 +525,23 @@ def main() -> None:
                     default=os.path.join(_REPO_ROOT, "BENCH_simdive.json"))
     ap.add_argument("--reuse-autotune", action="store_true",
                     help="preload the kernel-registry autotune cache from "
-                         "the committed baseline's recorded winners "
-                         "(the latest run with an 'autotune' field)")
+                         "recorded winners (merged per key across the "
+                         "trajectory history, newest first)")
+    ap.add_argument("--policy", default=None, metavar="PATH",
+                    help="a repro.tuning policy JSON (benchmarks/tune.py "
+                         "policy --save ...): validated, echoed, and "
+                         "recorded verbatim in this run's BENCH record so "
+                         "the deployed accuracy settings are auditable "
+                         "next to the measurements")
     args = ap.parse_args()
+    policy_record = None
+    if args.policy:
+        from repro.tuning import TuningPolicy
+        # a bad policy file must fail the run up front, not after the
+        # sweep: loading validates schema + entry shape
+        policy = TuningPolicy.load(args.policy)
+        policy_record = {"path": os.path.basename(args.policy),
+                         **policy.as_dict()}
     wanted = set(args.only.split(",")) if args.only else None
     valid = {name for name, _, _, _ in SUITES} | {"grid"}
     if wanted is not None and not wanted <= valid:
@@ -499,6 +559,9 @@ def main() -> None:
         lines.append(str(msg))
 
     t_start = time.time()
+    if policy_record is not None:
+        report(f"# policy: {policy_record['path']} "
+               f"({len(policy_record['entries'])} entries)")
     if args.reuse_autotune:
         n, src = reuse_autotune(args.bench_out)
         report(f"# reuse-autotune: preloaded {n} cached block choice(s) "
@@ -536,6 +599,9 @@ def main() -> None:
         # every block against the op's current candidate set, so retired
         # choices age out instead of riding the trajectory forever.
         "autotune": export_autotune_cache(),
+        # the tuning policy in effect for this deployment/run, verbatim
+        # (schema-tolerant extra field; None when no --policy was given)
+        "policy": policy_record,
         "suites": suites,
     })
     print(f"# wrote {args.out} and {args.bench_out}; failures={failures}")

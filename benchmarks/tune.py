@@ -1,0 +1,269 @@
+"""The accuracy-budget autotuner, as a CLI.
+
+Front-end for :mod:`repro.tuning`: print accuracy/throughput frontiers,
+select budget-meeting configs, and build/save deployable policies —
+always joining measured wall-clock from a BENCH trajectory (the
+committed ``BENCH_simdive.json`` by default, or a fresh CI run via
+``--bench``).
+
+Usage:
+  python benchmarks/tune.py frontier --op mul --width 8
+      The (op, width) frontier table: analytic error stats (exhaustive at
+      width 8, exponent-pair stratified at 16/32) + joined best_us.
+      ``--pareto`` reduces to the non-dominated points.
+  python benchmarks/tune.py select --op mul --width 8 --budget 0.9
+      The cheapest config meeting the budget (ARE% by default); exits 3
+      with the nearest-achievable stat when infeasible.
+  python benchmarks/tune.py policy --ops mul,div --budget 0.9 \\
+      --save results/policy.json
+      One selection per op, assembled into a simdive-policy/v1 JSON that
+      ``ApproxConfig(policy=...)`` / ``run.py --policy`` consume.
+  python benchmarks/tune.py --self-test
+      No sweeps, no timing: exercise selection, policy round-trip and the
+      infeasible-budget path on a fixture BENCH run + injected error
+      stats, plus one real exhaustive width-8 spot-check. Tier-1 CI runs
+      this on every push.
+
+Exit codes: 0 ok · 1 self-test failure · 2 bad inputs · 3 infeasible
+budget.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if __package__ in (None, ""):
+    sys.path.insert(0, _REPO_ROOT)
+    sys.path.insert(0, os.path.join(_REPO_ROOT, "src"))
+
+from repro.tuning import (  # noqa: E402
+    BudgetError,
+    TuningPolicy,
+    build_frontier,
+    build_policy,
+    frontier_table,
+    measure_error,
+    pareto,
+    select_config,
+)
+
+DEFAULT_BENCH = os.path.join(_REPO_ROOT, "BENCH_simdive.json")
+
+
+# ------------------------------------------------------------ fixtures --
+def fixture_error_fn(op, width, coeff_bits, index_bits):
+    """Injected error stats: ARE halves per 2 coeff bits — monotone, so
+    selection outcomes are fully predictable.
+
+    Shared with tests/test_tuning.py (the compare.py precedent: the
+    CLI's --self-test and the tier-1 unit tests must agree on what a
+    plausible fixture looks like).
+    """
+    are = 4.0 / (1 << (coeff_bits // 2)) * (1.0 if op == "mul" else 0.9)
+    return (("are_pct", are), ("n", 100)), "fixture"
+
+
+def fixture_bench_run(**best_us_by_cb):
+    """A minimal grid-bearing run: width-8 mul `ref` entries timed per
+    ``cb<N>=best_us`` keyword (default: cb4 deliberately the fastest).
+    Shared with tests/test_tuning.py."""
+    best_us_by_cb = best_us_by_cb or {"cb0": 300.0, "cb4": 150.0,
+                                      "cb6": 200.0}
+    return {"grid": [
+        {"kernel": "elemwise", "op": "mul", "width": 8,
+         "coeff_bits": int(cb.lstrip("cb")), "index_bits": 3,
+         "backend": "ref", "status": "ok",
+         "throughput": {"best_us": best, "items": 1000,
+                        "shape_buckets": [[1024], [1024]]}}
+        for cb, best in best_us_by_cb.items()]}
+
+
+# ------------------------------------------------------------ self-test --
+def _self_test() -> int:
+    checks = []
+
+    def check(name, ok, detail=""):
+        checks.append((name, bool(ok), detail))
+
+    kw = dict(bench=fixture_bench_run(), error_fn=fixture_error_fn)
+
+    # timing join: only the fixture-timed configs carry best_us
+    pts = build_frontier("mul", width=8, coeff_sweep=(0, 4, 6, 8), **kw)
+    timed = {p.coeff_bits: p.best_us for p in pts}
+    check("bench-join", timed == {0: 300.0, 4: 150.0, 6: 200.0, 8: None},
+          repr(timed))
+
+    # fastest-under-budget: cb4 (ARE 1.0 <= 2.0) beats cb6 on best_us
+    e = select_config("mul", width=8, error_budget=2.0,
+                      coeff_sweep=(0, 4, 6, 8), **kw)
+    check("select-fastest", e.coeff_bits == 4, e.label())
+    # cheapest preference ignores timing
+    e = select_config("mul", width=8, error_budget=2.0, prefer="cheapest",
+                      coeff_sweep=(0, 4, 6, 8), **kw)
+    check("select-cheapest", e.coeff_bits == 4, e.label())
+    # untimed points still selectable when they alone meet the budget
+    e = select_config("mul", width=8, error_budget=0.3,
+                      coeff_sweep=(0, 4, 6, 8), **kw)
+    check("select-untimed-fallback",
+          e.coeff_bits == 8 and "best_us" not in dict(e.stats), e.label())
+
+    # determinism: identical calls, identical (hashable) results
+    a = select_config("mul", width=8, error_budget=2.0, **kw)
+    b = select_config("mul", width=8, error_budget=2.0, **kw)
+    check("deterministic", a == b and hash(a) == hash(b))
+
+    # infeasible budget names the nearest achievable stat
+    try:
+        select_config("mul", width=8, error_budget=0.01,
+                      coeff_sweep=(0, 4, 6, 8), **kw)
+        check("infeasible-raises", False, "no exception")
+    except BudgetError as exc:
+        check("infeasible-raises", "nearest achievable" in str(exc)
+              and "0.25" in str(exc), str(exc))
+
+    # pareto: equal-error-but-slower and strictly-dominated points drop
+    front = pareto(pts)
+    check("pareto", [p.coeff_bits for p in front] == [8, 6, 4],
+          repr([(p.coeff_bits, p.stat('are_pct'), p.us_per_item)
+                for p in front]))
+
+    # policy JSON round-trip is identity (object and document level)
+    pol = build_policy(("mul", "div"), error_budget=2.0, width=8, **kw)
+    rt = TuningPolicy.from_json(pol.to_json())
+    check("policy-roundtrip", rt == pol and rt.to_json() == pol.to_json())
+    check("policy-lookup",
+          pol.lookup("mul") is not None and pol.lookup("mul").op == "mul"
+          and pol.lookup("nope") is None)
+
+    # one real (non-fixture) spot check: exhaustive width-8 stats are
+    # monotone in coeff_bits and the paper-band selection lands
+    real = select_config("mul", width=8, error_budget=0.9,
+                         coeff_sweep=(0, 6), bench=None)
+    are0 = dict(measure_error("mul", 8, 0)[0])["are_pct"]
+    are6 = dict(real.stats)["are_pct"]
+    check("real-exhaustive-select",
+          real.coeff_bits == 6 and are6 < 0.9 < are0,
+          f"cb0 ARE {are0:.3f}% cb6 ARE {are6:.3f}%")
+
+    failed = [c for c in checks if not c[1]]
+    for name, ok, detail in checks:
+        print(f"self-test {'ok  ' if ok else 'FAIL'} {name}")
+        if not ok and detail:
+            print("  " + str(detail))
+    print(f"self-test: {len(checks) - len(failed)}/{len(checks)} passed")
+    return 1 if failed else 0
+
+
+# ------------------------------------------------------------------ CLI --
+def _add_common(ap):
+    ap.add_argument("--bench", default=DEFAULT_BENCH,
+                    help="BENCH trajectory to join best_us from "
+                         "(default: the committed baseline); 'none' skips "
+                         "the join")
+    ap.add_argument("--metric", default="are_pct",
+                    help="error stat to budget/rank on (default are_pct)")
+    ap.add_argument("--index-bits", type=int, default=3)
+    ap.add_argument("--backend", default="ref")
+
+
+def _bench_arg(args):
+    return None if args.bench == "none" else args.bench
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--self-test", action="store_true",
+                    help="fixture-only checks, no sweeps (tier-1 CI)")
+    sub = ap.add_subparsers(dest="cmd")
+
+    f = sub.add_parser("frontier", help="print an (op, width) frontier")
+    f.add_argument("--op", required=True, choices=("mul", "div"))
+    f.add_argument("--width", type=int, required=True, choices=(8, 16, 32))
+    f.add_argument("--pareto", action="store_true",
+                   help="only the non-dominated points")
+    f.add_argument("--json", default=None, metavar="PATH",
+                   help="also dump the points as JSON")
+    _add_common(f)
+
+    s = sub.add_parser("select", help="cheapest config meeting a budget")
+    s.add_argument("--op", required=True, choices=("mul", "div"))
+    s.add_argument("--budget", type=float, required=True)
+    s.add_argument("--width", type=int, default=None, choices=(8, 16, 32))
+    s.add_argument("--prefer", default="fastest",
+                   choices=("fastest", "cheapest"))
+    _add_common(s)
+
+    p = sub.add_parser("policy", help="build + save a per-op policy")
+    p.add_argument("--ops", default="mul,div",
+                   help="comma-separated logical ops (default mul,div)")
+    p.add_argument("--budget", type=float, required=True)
+    p.add_argument("--width", type=int, default=None, choices=(8, 16, 32))
+    p.add_argument("--prefer", default="fastest",
+                   choices=("fastest", "cheapest"))
+    p.add_argument("--save", default=None, metavar="PATH",
+                   help="write the policy JSON here")
+    _add_common(p)
+
+    args = ap.parse_args(argv)
+    if args.self_test:
+        return _self_test()
+    if args.cmd is None:
+        ap.print_help()
+        return 2
+    if getattr(args, "width", None) == 32:
+        import jax
+        jax.config.update("jax_enable_x64", True)   # 32-bit lane: uint64 bus
+
+    try:
+        if args.cmd == "frontier":
+            pts = build_frontier(args.op, width=args.width,
+                                 index_bits=args.index_bits,
+                                 backend=args.backend,
+                                 bench=_bench_arg(args))
+            if args.pareto:
+                pts = pareto(pts, args.metric)
+            print(frontier_table(pts, args.metric))
+            if args.json:
+                with open(args.json, "w") as fh:
+                    json.dump([{**dict(p.error), "op": p.op,
+                                "width": p.width,
+                                "coeff_bits": p.coeff_bits,
+                                "index_bits": p.index_bits,
+                                "backend": p.backend,
+                                "best_us": p.best_us, "items": p.items,
+                                "error_source": p.error_source}
+                               for p in pts], fh, indent=1)
+                print(f"# wrote {args.json}")
+        elif args.cmd == "select":
+            entry = select_config(args.op, error_budget=args.budget,
+                                  metric=args.metric, width=args.width,
+                                  prefer=args.prefer,
+                                  index_bits=args.index_bits,
+                                  backend=args.backend,
+                                  bench=_bench_arg(args))
+            print(entry.label())
+            print(json.dumps(entry.as_dict(), indent=1, sort_keys=True))
+        elif args.cmd == "policy":
+            pol = build_policy(tuple(args.ops.split(",")),
+                               error_budget=args.budget,
+                               metric=args.metric, width=args.width,
+                               prefer=args.prefer, bench=_bench_arg(args),
+                               meta={"bench": os.path.basename(args.bench)}
+                               if args.bench != "none" else None)
+            print(pol.render())
+            if args.save:
+                d = os.path.dirname(os.path.abspath(args.save))
+                os.makedirs(d, exist_ok=True)
+                pol.save(args.save)
+                print(f"# wrote {args.save}")
+    except BudgetError as e:
+        print(f"infeasible budget: {e}", file=sys.stderr)
+        return 3
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -3,15 +3,35 @@ to 8-bit fixed point, and run inference through the *bit-exact* SIMDive
 integer matmul — classification accuracy should match the accurate 8-bit
 path to within a few tenths of a percent.
 
+Then the part the paper only gestures at ("tunable accuracy"): hand the
+autotuner an accuracy budget and let it *choose* the knobs. Layer
+sensitivities are profiled one at a time through the registry dispatch in
+``core/approx.py``, a global budget is assigned greedily
+cheapest-first, and the resulting per-layer ``TuningPolicy`` drives
+inference via ``ApproxConfig(policy=..., layer=...)`` — typically mixing
+different (width, coeff_bits) configs across layers while staying above
+the accuracy floor.
+
 (MNIST itself is not available offline; a synthetic 10-class 28x28 problem
 of the same geometry stands in — the claim under test is dataset-agnostic.)
 
 Run:  PYTHONPATH=src python examples/ann_mnist.py [--hidden 100 100]
+                                                  [--budget-pp 0.5]
 """
 import argparse
+import os
+import sys
+
+# the benchmarks tree lives at the repo root, not on the installed path
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import jax
+
+# the 16-bit candidate lane accumulates in int64 (like the FPGA's wide
+# bus); without x64 those accumulators silently truncate to int32
+jax.config.update("jax_enable_x64", True)
 
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.table4_ann import (
     make_dataset,
@@ -21,6 +41,14 @@ from benchmarks.table4_ann import (
 from repro.metrics import classification_accuracy as accuracy
 from repro.core import SimdiveSpec
 from repro.kernels import get_op
+from repro.tuning import (
+    ann_policy_metric,
+    ann_run_metric,
+    assignment_policy,
+    default_candidates,
+    greedy_assign_verified,
+    profile_ann,
+)
 
 
 def main():
@@ -29,6 +57,11 @@ def main():
     ap.add_argument("--steps", type=int, default=400)
     ap.add_argument("--coeff-bits", type=int, default=6,
                     help="the accuracy knob (0 = plain Mitchell)")
+    ap.add_argument("--budget-pp", type=float, default=0.3,
+                    help="global accuracy budget for the autotuner, in "
+                         "percentage points below the float baseline")
+    ap.add_argument("--save-policy", default=None, metavar="PATH",
+                    help="write the tuned per-layer policy JSON here")
     args = ap.parse_args()
 
     print("making synthetic 10-class 28x28 dataset ...")
@@ -55,6 +88,31 @@ def main():
           f"(coeff_bits={args.coeff_bits})")
     print(f"delta vs accurate 8-bit:     {abs(acc_simdive-acc_exact8):6.2f} pp "
           "(paper Table 4: ~0.01-0.05 pp)")
+
+    # -- budget-driven per-layer tuning (repro.tuning) -------------------
+    floor = acc_float - args.budget_pp
+    print(f"\nautotuning per-layer configs to an accuracy floor of "
+          f"{floor:.2f}% (float - {args.budget_pp:g} pp) ...")
+    profile = profile_ann(ws, xte, yte, candidates=default_candidates())
+    print(profile.render())
+    assignment, measured = greedy_assign_verified(
+        profile, args.budget_pp, ann_run_metric(ws, xte, yte))
+    policy = assignment_policy(
+        assignment, op="matmul",
+        meta={"budget_pp": args.budget_pp, "floor_pct": round(floor, 4)})
+    acc_policy = ann_policy_metric(ws, xte, yte, policy)
+    print("per-layer policy (greedy cheapest-first, verified end-to-end):")
+    for e in policy.entries:
+        print(f"  {e.label()}")
+    distinct = {(e.width, e.coeff_bits) for e in policy.entries}
+    print(f"policy-driven accuracy:      {acc_policy:6.2f}%  "
+          f"(floor {floor:.2f}%, {len(distinct)} distinct "
+          "(width, coeff_bits) layer config(s))")
+    assert acc_policy >= floor, "verified assignment must meet the floor"
+    print("floor met ✓")
+    if args.save_policy:
+        policy.save(args.save_policy)
+        print(f"wrote {args.save_policy}")
 
 
 if __name__ == "__main__":

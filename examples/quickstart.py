@@ -2,11 +2,14 @@
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 
-Shows the three layers of the library:
+Shows the four layers of the library:
   1. scalar ops  — plain Mitchell vs SIMDive-corrected mul/div errors,
   2. the accuracy knob — coeff_bits sweep (paper §3.3/§3.4),
   3. SIMD packing — four 8-bit lanes per uint32 word, mixed mul/div lanes
-     in one call (paper §3.2), and the Pallas TPU kernel (interpret mode).
+     in one call (paper §3.2), and the Pallas TPU kernel (interpret mode),
+  4. the knob as an API — hand repro.tuning an error budget and let it
+     pick the cheapest config off the measured accuracy/throughput
+     frontier (exhaustive error stats + the committed BENCH trajectory).
 """
 import numpy as np
 import jax.numpy as jnp
@@ -85,6 +88,22 @@ def main():
     ref = simdive_packed(wa, wb, spec, op="mul", backend="ref")
     assert (np.asarray(out) == np.asarray(ref)).all()
     print(" pallas packed-mul kernel == ref (bit-exact) ✓")
+
+    # -- 4. budget-driven selection: the knob turns itself --------------
+    from repro.tuning import select_config
+    print("\n== accuracy budget -> config (repro.tuning) ==")
+    for budget in (3.0, 0.9):
+        e = select_config("mul", width=8, error_budget=budget)
+        s = e.stats_dict()
+        us = (f", best_us {s['best_us']:.0f} (BENCH)"
+              if "best_us" in s else "")
+        print(f" mul ARE <= {budget}%: coeff_bits={e.coeff_bits} "
+              f"(measured ARE {s['are_pct']:.3f}%{us})")
+    # the selected entry IS a registry dispatch config
+    e = select_config("mul", width=8, error_budget=0.9)
+    sel = e.bind()(a, b, op="mul")
+    print(f" selected-config mul ARE on the 20k pairs: "
+          f"{100*rel_err(sel, ta*tb):.2f}%  (budget 0.9%)")
 
 
 if __name__ == "__main__":

@@ -29,6 +29,15 @@ wider lanes / deeper reductions.
   'exact'    — plain float ops (baseline),
   'mitchell' — uncorrected log arithmetic (paper's Mitchell baseline),
   'simdive'  — corrected + rounded (the paper's contribution).
+
+``ApproxConfig.policy`` / ``.layer`` plug the accuracy-budget autotuner
+in: a :class:`repro.tuning.TuningPolicy` (any hashable ``.lookup(op,
+layer)`` provider) resolves the concrete ``(width, coeff_bits,
+index_bits, backend)`` per logical op — 'matmul' for the linears, 'div'
+for softmax/rmsnorm denominators — at dispatch time via
+:meth:`ApproxConfig.resolve`, layer-scoped entries first. No policy (or
+no matching entry) falls back to the config's own knobs, so existing
+call sites are untouched.
 """
 from __future__ import annotations
 
@@ -65,6 +74,12 @@ class ApproxConfig:
     use_in_linear: bool = True
     use_in_softmax: bool = True
     use_in_norm: bool = False
+    # an optional repro.tuning.TuningPolicy (any hashable object with
+    # .lookup(op, layer) returning width/coeff_bits/index_bits/backend
+    # attributes): per-op dispatch configs resolved at call time, so a
+    # budget-selected policy drives every knob without model-code edits
+    policy: object | None = None
+    layer: str | None = None       # layer label for policy lookup
 
     @property
     def enabled(self) -> bool:
@@ -77,6 +92,25 @@ class ApproxConfig:
                                round_output=False)
         return SimdiveSpec(width=w, coeff_bits=self.coeff_bits,
                            index_bits=self.index_bits, round_output=True)
+
+    def resolve(self, op: str, width: int | None = None
+                ) -> tuple[SimdiveSpec, str]:
+        """(spec, backend) serving logical ``op`` on this config's layer.
+
+        A matching policy entry — layer-scoped first, then the op's
+        default — overrides the config's own knobs wholesale (width,
+        coeff_bits, index_bits, backend); without one (or without a
+        policy) the config's fields stand, exactly the pre-policy
+        behavior. ``width`` only steers the fallback (e.g. ``div_width``
+        for divider call sites).
+        """
+        entry = self.policy.lookup(op, self.layer) \
+            if self.policy is not None else None
+        if entry is None:
+            return self.spec(width), self.backend
+        spec = SimdiveSpec(width=entry.width, coeff_bits=entry.coeff_bits,
+                           index_bits=entry.index_bits)
+        return spec, (getattr(entry, "backend", None) or self.backend)
 
 
 EXACT = ApproxConfig()
@@ -107,9 +141,10 @@ def _approx_matmul_fwd_impl(x, w, cfg):
         return x @ w
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
-    qx, sx, scx = quantize_sign_magnitude(x2, cfg.width)
-    qw, sw, scw = quantize_sign_magnitude(w, cfg.width, axis=0)
-    mm = get_op("matmul_emul", cfg.spec(), backend=cfg.backend)
+    spec, backend = cfg.resolve("matmul")
+    qx, sx, scx = quantize_sign_magnitude(x2, spec.width)
+    qw, sw, scw = quantize_sign_magnitude(w, spec.width, axis=0)
+    mm = get_op("matmul_emul", spec, backend=backend)
     acc = mm(qx, sx, qw, sw, k_chunk=cfg.k_chunk)
     out = acc.astype(jnp.float32) * (scx * scw)
     return out.reshape(*lead, w.shape[1]).astype(x.dtype)
@@ -137,8 +172,8 @@ def _fixed_point_div(num: jax.Array, den: jax.Array, cfg: ApproxConfig):
     format); the scale cancels in the quotient. The default 16-bit lane
     runs in uint32 everywhere; a 32-bit lane needs jax x64 mode.
     """
-    spec = cfg.spec(cfg.div_width)
-    w = cfg.div_width
+    spec, backend = cfg.resolve("div", cfg.div_width)
+    w = spec.width
     if w > 16:
         SC = jnp.float32(2 ** 16)
         qn = jnp.clip(jnp.round(num * SC), 0, 2.0 ** 63).astype(jnp.uint64)
@@ -151,7 +186,7 @@ def _fixed_point_div(num: jax.Array, den: jax.Array, cfg: ApproxConfig):
         lim = jnp.float32(2 ** w - 1)
         qn = jnp.clip(jnp.round(num * SC), 0, lim).astype(jnp.uint32)
         qd = jnp.clip(jnp.round(den * SC), 1, lim).astype(jnp.uint32)
-    div = get_op("elemwise", spec, backend=cfg.backend)
+    div = get_op("elemwise", spec, backend=backend)
     q = div(qn, qd, op="div", frac_out=cfg.frac_out)
     return q.astype(jnp.float32) / jnp.float32(2 ** cfg.frac_out)
 
@@ -203,16 +238,16 @@ def _approx_rmsnorm_impl(x, gamma, eps, cfg):
         #   qm = m * 2^32           (uint64 lane)
         #   r  = sqrt(qm)           = sqrt(m) * 2^16
         #   q  = (2^31 / r) * 2^16  = rsqrt(m) * 2^31
-        spec = cfg.spec(cfg.div_width)
+        spec, backend = cfg.resolve("div", cfg.div_width)
         qm = jnp.maximum(jnp.round((ms + eps) * jnp.float32(2.0 ** 32)), 1.0)
         qm = qm.astype(jnp.uint64)
         # sqrt has no Pallas impl yet — 'auto' serves it from ref on any host
         sqrt_op = get_op(
             "sqrt", spec,
-            backend=cfg.backend if cfg.backend == "ref" else "auto")
+            backend=backend if backend == "ref" else "auto")
         r = jnp.maximum(sqrt_op(qm), 1)
         one = jnp.full_like(r, jnp.uint64(1) << jnp.uint64(31))
-        div = get_op("elemwise", spec, backend=cfg.backend)
+        div = get_op("elemwise", spec, backend=backend)
         q = div(one, r, op="div", frac_out=16)
         inv = q.astype(jnp.float32) * jnp.float32(2.0 ** -31)
     return (x.astype(jnp.float32) * inv * gamma.astype(jnp.float32)).astype(x.dtype)

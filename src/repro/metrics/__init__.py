@@ -11,8 +11,10 @@ between the table that reports it and the test that bounds it.
   psnr / ssim                image quality (Fig. 3/4)
   time_callable / TimingStats  warmup + block_until_ready wall-clock,
                                pow-2 shape-bucketed (registry bucketing)
-  grid8 / sample_uints / DIV_FRAC_OUT  shared operand sets + divider
-                               fixed-point convention for every sweep
+  grid8 / sample_uints / stratified_pairs / DIV_FRAC_OUT  shared operand
+                               sets (exhaustive, uniform, exponent-pair
+                               stratified) + divider fixed-point
+                               convention for every sweep
   trajectory                   BENCH_simdive.json schema + migration +
                                the regression gate (diff_runs); pure
                                stdlib, see benchmarks/compare.py
@@ -24,7 +26,13 @@ from .errors import (
     relative_error,
 )
 from .image import psnr, ssim
-from .operands import DIV_FRAC_OUT, PACKED_DIV_FRAC_OUT, grid8, sample_uints
+from .operands import (
+    DIV_FRAC_OUT,
+    PACKED_DIV_FRAC_OUT,
+    grid8,
+    sample_uints,
+    stratified_pairs,
+)
 from .timing import TimingStats, time_callable
 from .trajectory import (
     GateReport,
@@ -47,6 +55,7 @@ __all__ = [
     "PACKED_DIV_FRAC_OUT",
     "grid8",
     "sample_uints",
+    "stratified_pairs",
     "GateReport",
     "Thresholds",
     "TrajectoryError",

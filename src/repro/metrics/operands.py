@@ -16,7 +16,8 @@ from __future__ import annotations
 
 import numpy as np
 
-__all__ = ["DIV_FRAC_OUT", "PACKED_DIV_FRAC_OUT", "grid8", "sample_uints"]
+__all__ = ["DIV_FRAC_OUT", "PACKED_DIV_FRAC_OUT", "grid8", "sample_uints",
+           "stratified_pairs"]
 
 #: divider fixed-point output bits used by every error sweep
 DIV_FRAC_OUT = 12
@@ -61,3 +62,42 @@ def sample_uints(width: int, n: int, seed: int, *, lo: int = 1,
                      1 << (b_width or width), n,
                      dtype=np.uint64).astype(dt)
     return a, b
+
+
+def stratified_pairs(width: int, seed: int, *, per_stratum: int = 2,
+                     b_width: int | None = None):
+    """Exponent-pair-stratified operand pairs: every (k1, k2) LOD stratum
+    covered.
+
+    The datapath's behaviour is piecewise in the operands' leading-one
+    positions — the LOD outputs (k1, k2) select the correction region and
+    the anti-log shift — so uniform sampling at width 32 leaves most of
+    the 32x32 exponent-pair square untouched (uniform uints concentrate in
+    the top few octaves). This draws ``per_stratum`` pairs from *every*
+    (k1, k2) combination: operand ``a`` uniform in ``[2^k1, 2^(k1+1))``,
+    ``b`` uniform in ``[2^k2, 2^(k2+1))`` — so each LOD combination is
+    exercised at least once per sweep (ROADMAP's width-32
+    exhaustive-enough item). Zero operands are deliberately excluded (the
+    zero-flag bypass has its own exhaustive tests; a zero divisor would
+    poison relative statistics).
+
+    ``b_width`` narrows the second operand's strata to ``b_width``
+    leading-one positions (the paper's N/8 divider format). Returns two
+    equally-shaped 1-D arrays of ``width*b_strata*per_stratum`` operands,
+    uint32 up to width 16 and uint64 beyond.
+    """
+    if per_stratum < 1:
+        raise ValueError(f"per_stratum must be >= 1, got {per_stratum}")
+    rng = np.random.default_rng(seed)
+    dt = np.uint32 if width <= 16 else np.uint64
+    k1 = np.arange(width, dtype=np.uint64)
+    k2 = np.arange(b_width or width, dtype=np.uint64)
+    K1, K2 = np.meshgrid(k1, k2, indexing="ij")
+    K1 = np.repeat(K1.ravel(), per_stratum)
+    K2 = np.repeat(K2.ravel(), per_stratum)
+    # value in [2^k, 2^(k+1)): the leading one pinned at bit k, the low
+    # bits uniform (rng.random keeps this exact for k up to 52)
+    lo1, lo2 = (np.uint64(1) << K1), (np.uint64(1) << K2)
+    a = lo1 + (rng.random(K1.size) * lo1).astype(np.uint64)
+    b = lo2 + (rng.random(K2.size) * lo2).astype(np.uint64)
+    return a.astype(dt), b.astype(dt)

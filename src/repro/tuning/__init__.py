@@ -1,0 +1,76 @@
+"""repro.tuning — the accuracy-budget autotuner.
+
+Turns the paper's "tunable accuracy" into an API with three layers:
+
+  frontier.py     per-(op, width) accuracy/throughput frontier points:
+                  analytic error stats (exhaustive at width 8, exponent-
+                  pair stratified at 16/32) joined with measured best_us
+                  from the committed BENCH trajectory
+  select.py       select_config(op, error_budget=...) -> the cheapest
+                  budget-meeting registry dispatch config; TuningPolicy,
+                  the serializable per-(op, layer) config set a
+                  deployment ships with (ApproxConfig(policy=...))
+  sensitivity.py  per-layer end-metric profiling (ANN accuracy, imaging
+                  PSNR/SSIM) + greedy cheapest-first assignment under a
+                  global quality budget
+
+CLI: ``benchmarks/tune.py`` (frontiers, selection, policies;
+``--self-test`` runs fixture-only checks in tier-1 CI).
+"""
+from .frontier import (
+    FrontierPoint,
+    bench_timings,
+    build_frontier,
+    default_bench_path,
+    frontier_table,
+    measure_error,
+    pareto,
+)
+from .select import (
+    POLICY_SCHEMA,
+    BudgetError,
+    PolicyEntry,
+    TuningPolicy,
+    build_policy,
+    select_config,
+)
+from .sensitivity import (
+    SensitivityProfile,
+    ann_policy_metric,
+    ann_run_metric,
+    assignment_policy,
+    default_candidates,
+    greedy_assign,
+    greedy_assign_verified,
+    imaging_run_metric,
+    profile_ann,
+    profile_imaging,
+    profile_layers,
+)
+
+__all__ = [
+    "FrontierPoint",
+    "bench_timings",
+    "build_frontier",
+    "default_bench_path",
+    "frontier_table",
+    "measure_error",
+    "pareto",
+    "POLICY_SCHEMA",
+    "BudgetError",
+    "PolicyEntry",
+    "TuningPolicy",
+    "build_policy",
+    "select_config",
+    "SensitivityProfile",
+    "ann_policy_metric",
+    "ann_run_metric",
+    "assignment_policy",
+    "default_candidates",
+    "greedy_assign",
+    "greedy_assign_verified",
+    "imaging_run_metric",
+    "profile_ann",
+    "profile_imaging",
+    "profile_layers",
+]

@@ -1,0 +1,314 @@
+"""Accuracy/throughput frontiers: the facts the autotuner selects from.
+
+The paper's headline is *tunable* accuracy — Table 2's ARE shrinks
+monotonically in ``coeff_bits``, and the SIMD lanes trade precision for
+throughput — but a knob is only an API once something maps a target to a
+setting. This module builds that map's raw material: one
+:class:`FrontierPoint` per ``(kernel, op, width, coeff_bits, index_bits,
+backend)`` config, joining
+
+  * **analytic error stats** — computed here, through the same registry
+    ``get_op`` entry the benchmarks use: exhaustive over the full operand
+    square at width 8 (the datapath oracle sweep), exponent-pair
+    *stratified* samples at widths 16/32
+    (:func:`repro.metrics.stratified_pairs` — every (k1, k2) LOD
+    combination exercised, which uniform sampling never achieves at
+    width 32), and
+  * **measured throughput** — ``best_us`` from the committed
+    ``BENCH_simdive.json`` trajectory, looked up by the same
+    :func:`repro.metrics.trajectory.grid_key` identity the regression
+    gate diffs on. Timing is *joined*, never measured here: selection
+    must be deterministic given a frozen BENCH file.
+
+A config the trajectory has never timed still yields a frontier point —
+its ``best_us`` is ``None`` and selection falls back to the static cost
+order (fewer ``coeff_bits``, narrower lane). ``us_per_item`` (best_us /
+items) is the cross-width comparable statistic: different widths sweep
+different operand counts, so raw ``best_us`` only ranks points within one
+width.
+
+:func:`pareto` reduces a point set to its non-dominated
+accuracy/throughput subset — the frontier proper.
+"""
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass, replace
+
+import numpy as np
+
+__all__ = [
+    "DEFAULT_COEFF_SWEEP",
+    "FrontierPoint",
+    "default_bench_path",
+    "measure_error",
+    "bench_timings",
+    "build_frontier",
+    "pareto",
+    "frontier_table",
+]
+
+#: the trajectory grid's coeff_bits sweep — frontier points line up with
+#: committed BENCH keys so the timing join actually hits
+DEFAULT_COEFF_SWEEP = (0, 2, 4, 6, 8)
+
+#: widths the datapath supports; 32 needs jax x64 (uint64 intermediates)
+SUPPORTED_WIDTHS = (8, 16, 32)
+
+
+@dataclass(frozen=True)
+class FrontierPoint:
+    """One measured config: a concrete registry dispatch + its stats.
+
+    ``error`` is a sorted tuple of ``(stat, value)`` pairs (hashable;
+    see :meth:`error_dict`); ``error_source`` records how it was computed
+    ('exhaustive' or 'stratified'); ``best_us``/``items``/``us_per_item``
+    come from the BENCH join and are ``None`` when the trajectory has no
+    timing for the config.
+    """
+    kernel: str
+    op: str
+    width: int
+    coeff_bits: int
+    index_bits: int
+    backend: str
+    error: tuple
+    error_source: str
+    best_us: float | None = None
+    items: int | None = None
+
+    @property
+    def us_per_item(self) -> float | None:
+        if self.best_us is None or not self.items:
+            return None
+        return self.best_us / self.items
+
+    def error_dict(self) -> dict:
+        return dict(self.error)
+
+    def stat(self, metric: str) -> float | None:
+        return self.error_dict().get(metric)
+
+    def label(self) -> str:
+        return (f"{self.kernel}/{self.op}/{self.width}b/cb{self.coeff_bits}/"
+                f"ib{self.index_bits}/{self.backend}")
+
+
+def default_bench_path() -> str | None:
+    """The committed trajectory to join timings from, best effort.
+
+    ``SIMDIVE_BENCH`` env var, then ``BENCH_simdive.json`` in the current
+    directory, then the repo root relative to this source tree. ``None``
+    when nothing exists — frontiers still build, just without timings.
+    """
+    env = os.environ.get("SIMDIVE_BENCH")
+    if env:
+        return env
+    here = os.path.dirname(os.path.abspath(__file__))
+    candidates = [
+        os.path.join(os.getcwd(), "BENCH_simdive.json"),
+        os.path.normpath(os.path.join(here, "..", "..", "..",
+                                      "BENCH_simdive.json")),
+    ]
+    for c in candidates:
+        if os.path.exists(c):
+            return c
+    return None
+
+
+# ------------------------------------------------------------- errors ----
+# (op, width, coeff_bits, index_bits) -> error tuple; exhaustive/stratified
+# sweeps are deterministic, so per-process memoization is free accuracy
+_ERROR_CACHE: dict[tuple, tuple[tuple, str]] = {}
+
+#: seed shared with benchmarks/run.py's grid — same convention, same
+#: reproducibility contract
+FRONTIER_SEED = 0
+
+
+def _error_operands(op: str, width: int):
+    """Operand set + source tag for one error sweep."""
+    from repro.metrics import grid8, stratified_pairs
+
+    if width == 8:
+        a, b = grid8()
+        return a, b, "exhaustive"
+    a, b = stratified_pairs(
+        width, FRONTIER_SEED,
+        # every (k1, k2) LOD stratum at least once; bounded total size
+        per_stratum=max(1, 4096 // (width * (8 if op == "div" else width))),
+        b_width=8 if op == "div" else None)   # paper's N/8 divider format
+    return a, b, "stratified"
+
+
+def measure_error(op: str, width: int, coeff_bits: int,
+                  index_bits: int = 3) -> tuple[tuple, str]:
+    """Analytic error stats of one elemwise config, via the registry.
+
+    Returns ``(sorted (stat, value) pairs, source)`` where source is
+    'exhaustive' (width 8: the full operand square) or 'stratified'
+    (16/32: every exponent-pair stratum sampled). Memoized per process.
+    Divider quotients are quantized at the evaluation-wide
+    ``DIV_FRAC_OUT`` fixed-point format, exactly like the BENCH grid.
+    """
+    key = (op, width, coeff_bits, index_bits)
+    hit = _ERROR_CACHE.get(key)
+    if hit is not None:
+        return hit
+    import jax.numpy as jnp
+
+    from repro.core import SimdiveSpec
+    from repro.kernels import get_op
+    from repro.metrics import DIV_FRAC_OUT, error_stats
+
+    if width not in SUPPORTED_WIDTHS:
+        raise ValueError(f"width must be one of {SUPPORTED_WIDTHS}, "
+                         f"got {width}")
+    a_np, b_np, source = _error_operands(op, width)
+    a, b = jnp.asarray(a_np), jnp.asarray(b_np)
+    # same spec construction as benchmarks/run.py's grid: round_output
+    # stays at its default so these stats describe the same configs the
+    # trajectory timed
+    spec = SimdiveSpec(width=width, coeff_bits=coeff_bits,
+                       index_bits=index_bits)
+    bound = get_op("elemwise", spec, "ref")
+    if op == "mul":
+        out = np.asarray(bound(a, b, op="mul")).astype(np.float64)
+        true = a_np.astype(np.float64) * b_np.astype(np.float64)
+    elif op == "div":
+        out = np.asarray(bound(a, b, op="div", frac_out=DIV_FRAC_OUT)
+                         ).astype(np.float64) / 2.0 ** DIV_FRAC_OUT
+        true = a_np.astype(np.float64) / b_np.astype(np.float64)
+    else:
+        raise ValueError(f"measure_error handles 'mul'/'div', got {op!r}")
+    stats = tuple(sorted(error_stats(out, true).as_dict().items()))
+    _ERROR_CACHE[key] = (stats, source)
+    return stats, source
+
+
+# ------------------------------------------------------------- timings ---
+# path -> ((mtime_ns, size), timings): the trajectory is an append-only
+# history file that build_policy would otherwise re-parse once per
+# (op, width); the (mtime, size) stamp invalidates on any append
+_TIMINGS_CACHE: dict = {}
+
+
+def bench_timings(bench) -> dict:
+    """``(kernel, op, width, coeff_bits, index_bits, backend) ->
+    (best_us, items)`` from a BENCH trajectory.
+
+    ``bench`` is a path, a loaded trajectory document, or a single run
+    record; the latest grid-bearing run is indexed with the gate's own
+    :func:`~repro.metrics.trajectory.grid_key` and the shape-bucket
+    component is then folded away (a frontier cares *that* a config was
+    timed, not at which operand shape — the grid times each config at one
+    canonical shape). Failed entries and entries without a positive
+    ``best_us`` are skipped. Returns ``{}`` for ``bench=None`` or an
+    unreadable path: timing is an optional join, never a hard input.
+    """
+    from repro.metrics.trajectory import (
+        grid_key,
+        latest_grid_run,
+        load_trajectory,
+    )
+
+    if bench is None:
+        return {}
+    if isinstance(bench, str):
+        try:
+            st = os.stat(bench)
+            stamp = (st.st_mtime_ns, st.st_size)
+            hit = _TIMINGS_CACHE.get(bench)
+            if hit is not None and hit[0] == stamp:
+                return hit[1]
+            doc = load_trajectory(bench, missing_ok=False)
+        except Exception:  # noqa: BLE001 — optional join, degrade quietly
+            return {}
+        run = latest_grid_run(doc)
+    elif isinstance(bench, dict) and "runs" in bench:
+        run = latest_grid_run(bench)
+    else:
+        run = bench                      # a single run record
+    out: dict = {}
+    for entry in (run or {}).get("grid", []):
+        if entry.get("status") != "ok":
+            continue
+        tp = entry.get("throughput") or {}
+        best = tp.get("best_us", tp.get("mean_us"))
+        if not isinstance(best, (int, float)) or best <= 0:
+            continue
+        cfg = grid_key(entry)[:6]        # drop the shape-bucket component
+        prev = out.get(cfg)
+        if prev is None or best < prev[0]:
+            out[cfg] = (float(best), tp.get("items"))
+    if isinstance(bench, str):
+        _TIMINGS_CACHE[bench] = (stamp, out)
+    return out
+
+
+# ------------------------------------------------------------ frontier ---
+def build_frontier(op: str, *, width: int, coeff_sweep=DEFAULT_COEFF_SWEEP,
+                   index_bits: int = 3, backend: str = "ref",
+                   bench="auto", error_fn=None) -> tuple:
+    """All frontier points of one ``(op, width)`` accuracy/cost sweep.
+
+    ``bench`` joins measured ``best_us``: 'auto' resolves via
+    :func:`default_bench_path`, ``None`` skips the join, anything else is
+    passed to :func:`bench_timings`. ``error_fn(op, width, coeff_bits,
+    index_bits) -> (stats_pairs, source)`` overrides the analytic
+    measurement (fixture injection for the CLI self-test and unit tests —
+    production callers never pass it).
+    """
+    if bench == "auto":
+        bench = default_bench_path()
+    timings = bench_timings(bench)
+    err = error_fn or measure_error
+    points = []
+    for cb in coeff_sweep:
+        stats, source = err(op, width, cb, index_bits)
+        point = FrontierPoint(kernel="elemwise", op=op, width=width,
+                              coeff_bits=cb, index_bits=index_bits,
+                              backend=backend, error=tuple(stats),
+                              error_source=source)
+        timed = timings.get(("elemwise", op, width, cb, index_bits, backend))
+        if timed is not None:
+            point = replace(point, best_us=timed[0], items=timed[1])
+        points.append(point)
+    return tuple(points)
+
+
+def pareto(points, metric: str = "are_pct") -> tuple:
+    """The non-dominated subset: no other point is at least as accurate
+    *and* strictly cheaper (by ``us_per_item``, falling back to
+    ``coeff_bits`` as the static cost proxy when timings are absent)."""
+    def cost(p):
+        c = p.us_per_item
+        return (0, c) if c is not None else (1, p.coeff_bits)
+
+    kept = []
+    for p in points:
+        e = p.stat(metric)
+        if e is None:
+            continue
+        dominated = any(
+            q is not p and q.stat(metric) is not None
+            and q.stat(metric) <= e and cost(q) <= cost(p)
+            and (q.stat(metric) < e or cost(q) < cost(p))
+            for q in points)
+        if not dominated:
+            kept.append(p)
+    return tuple(sorted(kept, key=lambda p: (p.stat(metric), cost(p))))
+
+
+def frontier_table(points, metric: str = "are_pct") -> str:
+    """Human-readable frontier rendering (the ``tune.py frontier`` CLI)."""
+    lines = [f"{'config':38s} {metric:>10s} {'best_us':>10s} "
+             f"{'us/item':>10s}  source"]
+    for p in sorted(points, key=lambda p: (p.width, p.coeff_bits)):
+        e = p.stat(metric)
+        err = f"{e:.4f}" if e is not None else "-"   # unknown metric name
+        us = f"{p.best_us:.0f}" if p.best_us is not None else "-"
+        upi = f"{p.us_per_item:.2e}" if p.us_per_item is not None else "-"
+        lines.append(f"{p.label():38s} {err:>10s} {us:>10s} {upi:>10s}  "
+                     f"{p.error_source}")
+    return "\n".join(lines)

@@ -1,0 +1,266 @@
+"""Budget -> config: the selection layer of the accuracy autotuner.
+
+:func:`select_config` is the API the motivation asks for: hand it an
+error budget and it hands back the *cheapest* concrete registry dispatch
+config (a :class:`PolicyEntry` — width, coeff_bits, index_bits, backend)
+whose measured accuracy meets the budget, ranked by the BENCH
+trajectory's measured wall-clock where available and by static cost
+(fewer correction bits, narrower lane) where not. An infeasible budget
+raises :class:`BudgetError` naming the nearest achievable stat, so a
+caller learns *how far off* the ask was, not just that it failed.
+
+A chosen configuration ships with a deployment as a
+:class:`TuningPolicy` — a serializable set of per-(op, layer) entries
+(JSON schema ``simdive-policy/v1``) that ``ApproxConfig(policy=...)``
+resolves at dispatch time (see :mod:`repro.core.approx`) and
+``benchmarks/run.py --policy`` records into the BENCH trajectory, so a
+deployment's accuracy settings are auditable next to the measurements
+that justified them.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field, fields, replace
+
+from .frontier import (
+    DEFAULT_COEFF_SWEEP,
+    SUPPORTED_WIDTHS,
+    build_frontier,
+)
+
+__all__ = [
+    "POLICY_SCHEMA",
+    "BudgetError",
+    "PolicyEntry",
+    "TuningPolicy",
+    "select_config",
+    "build_policy",
+]
+
+POLICY_SCHEMA = "simdive-policy/v1"
+
+
+class BudgetError(ValueError):
+    """No config meets the requested error budget; the message carries
+    the nearest achievable stat and the config that achieves it."""
+
+
+@dataclass(frozen=True)
+class PolicyEntry:
+    """One concrete registry dispatch config, optionally layer-scoped.
+
+    This is both what :func:`select_config` returns and what a
+    :class:`TuningPolicy` is made of. ``stats`` is a sorted tuple of
+    ``(name, value)`` pairs documenting the evidence behind the choice
+    (frontier error stats + joined timing); it rides through JSON but
+    never affects dispatch. Hashable on purpose: ``ApproxConfig`` (a jit
+    static argument) embeds policies whole.
+    """
+    op: str                      # logical op served: 'mul'|'div'|'matmul'
+    width: int
+    coeff_bits: int
+    index_bits: int = 3
+    backend: str = "ref"
+    kernel: str = "elemwise"
+    layer: str | None = None     # None = the op's default entry
+    stats: tuple = ()
+
+    def spec(self):
+        """The :class:`~repro.core.simdive.SimdiveSpec` this entry pins
+        (default rounding — the same construction the BENCH grid times)."""
+        from repro.core import SimdiveSpec
+        return SimdiveSpec(width=self.width, coeff_bits=self.coeff_bits,
+                           index_bits=self.index_bits)
+
+    def bind(self, *, backend: str | None = None, kernel: str | None = None):
+        """A callable :class:`~repro.kernels.registry.BoundOp` for this
+        config — ``entry.bind()(a, b, op=entry.op, ...)``."""
+        from repro.kernels import get_op
+        return get_op(kernel or self.kernel, self.spec(),
+                      backend or self.backend)
+
+    def stats_dict(self) -> dict:
+        return dict(self.stats)
+
+    def as_dict(self) -> dict:
+        d = {f.name: getattr(self, f.name) for f in fields(self)}
+        d["stats"] = {k: v for k, v in self.stats}
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "PolicyEntry":
+        known = {f.name for f in fields(cls)}
+        kw = {k: v for k, v in d.items() if k in known}
+        kw["stats"] = tuple(sorted((d.get("stats") or {}).items()))
+        kw["width"] = int(kw["width"])
+        kw["coeff_bits"] = int(kw["coeff_bits"])
+        if "index_bits" in kw:
+            kw["index_bits"] = int(kw["index_bits"])
+        return cls(**kw)
+
+    def label(self) -> str:
+        scope = f"[{self.layer}]" if self.layer else ""
+        return (f"{self.op}{scope}: {self.kernel}/{self.width}b/"
+                f"cb{self.coeff_bits}/ib{self.index_bits}/{self.backend}")
+
+
+@dataclass(frozen=True)
+class TuningPolicy:
+    """A deployable set of per-(op, layer) dispatch configs.
+
+    ``lookup(op, layer)`` resolves layer-scoped entries first, then the
+    op's default (``layer=None``) entry, then ``None`` — the caller's own
+    config remains the fallback (see ``ApproxConfig.resolve``). ``meta``
+    is free-form provenance (budget, metric, source BENCH run), sorted
+    pairs so the policy stays hashable and JSON round-trips exactly.
+    """
+    entries: tuple = ()
+    meta: tuple = ()
+
+    def lookup(self, op: str, layer: str | None = None):
+        if layer is not None:
+            for e in self.entries:
+                if e.op == op and e.layer == layer:
+                    return e
+        for e in self.entries:
+            if e.op == op and e.layer is None:
+                return e
+        return None
+
+    def meta_dict(self) -> dict:
+        return dict(self.meta)
+
+    def with_entries(self, *entries) -> "TuningPolicy":
+        return replace(self, entries=self.entries + tuple(entries))
+
+    # ------------------------------------------------------ serialization
+    def as_dict(self) -> dict:
+        return {
+            "schema": POLICY_SCHEMA,
+            "meta": {k: v for k, v in self.meta},
+            "entries": [e.as_dict() for e in self.entries],
+        }
+
+    def to_json(self, indent: int | None = 1) -> str:
+        return json.dumps(self.as_dict(), indent=indent, sort_keys=True)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "TuningPolicy":
+        if not isinstance(d, dict) or d.get("schema") != POLICY_SCHEMA:
+            raise ValueError(
+                f"not a tuning policy (expected schema {POLICY_SCHEMA!r}, "
+                f"got {d.get('schema') if isinstance(d, dict) else type(d)})")
+        entries = tuple(PolicyEntry.from_dict(e)
+                        for e in d.get("entries", []))
+        meta = tuple(sorted((d.get("meta") or {}).items()))
+        return cls(entries=entries, meta=meta)
+
+    @classmethod
+    def from_json(cls, s: str) -> "TuningPolicy":
+        return cls.from_dict(json.loads(s))
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            f.write(self.to_json() + "\n")
+
+    @classmethod
+    def load(cls, path: str) -> "TuningPolicy":
+        with open(path) as f:
+            return cls.from_dict(json.load(f))
+
+    def render(self) -> str:
+        head = ", ".join(f"{k}={v}" for k, v in self.meta) or "no meta"
+        return "\n".join([f"TuningPolicy ({head})"]
+                         + [f"  {e.label()}" for e in self.entries])
+
+
+# ------------------------------------------------------------ selection --
+def _rank_key(point, prefer: str):
+    """Sort key among budget-meeting points. 'fastest' ranks by measured
+    us-per-item (untimed points last, then by static cost); 'cheapest'
+    ranks by static cost alone (fewest correction bits, narrowest lane)."""
+    static = (point.coeff_bits, point.width)
+    upi = point.us_per_item
+    if prefer == "cheapest":
+        return (static, upi if upi is not None else float("inf"))
+    if prefer == "fastest":
+        return ((0, upi) if upi is not None else (1, 0.0), static)
+    raise ValueError(f"prefer must be 'fastest' or 'cheapest', "
+                     f"got {prefer!r}")
+
+
+def select_config(op: str, *, error_budget: float, metric: str = "are_pct",
+                  width: int | None = None, prefer: str = "fastest",
+                  index_bits: int = 3, backend: str = "ref",
+                  coeff_sweep=DEFAULT_COEFF_SWEEP, bench="auto",
+                  layer: str | None = None, error_fn=None) -> PolicyEntry:
+    """The cheapest config of ``op`` meeting ``error_budget`` on ``metric``.
+
+    ``width=None`` considers every supported lane width the current jax
+    config can run (32 needs x64 mode); a concrete ``width`` restricts the
+    candidate set to that lane. Among budget-meeting frontier points,
+    ``prefer='fastest'`` picks the minimal measured wall-clock (``best_us``
+    joined from ``bench``; within one width that is exactly the minimal
+    ``best_us``, across widths the per-item rate) and ``prefer='cheapest'``
+    the fewest correction bits. Deterministic given a frozen BENCH file:
+    error stats are exhaustive/seeded-stratified, the join is a lookup.
+
+    Raises :class:`BudgetError` when nothing meets the budget, with the
+    nearest achievable stat and its config in the message.
+    """
+    widths = (width,) if width is not None else _available_widths()
+    points = []
+    for w in widths:
+        points.extend(build_frontier(op, width=w, coeff_sweep=coeff_sweep,
+                                     index_bits=index_bits, backend=backend,
+                                     bench=bench, error_fn=error_fn))
+    scored = [(p.stat(metric), p) for p in points
+              if p.stat(metric) is not None]
+    if not scored:
+        raise BudgetError(f"no frontier point of op {op!r} carries "
+                          f"metric {metric!r}")
+    feasible = [p for e, p in scored if e <= error_budget]
+    if not feasible:
+        nearest = min(scored, key=lambda ep: ep[0])
+        raise BudgetError(
+            f"no config of op {op!r} meets {metric} <= {error_budget:g}: "
+            f"nearest achievable is {metric}={nearest[0]:.6g} "
+            f"({nearest[1].label()}); widen the budget or the sweep "
+            f"(widths={list(widths)}, coeff_sweep={list(coeff_sweep)})")
+    best = min(feasible, key=lambda p: _rank_key(p, prefer))
+    stats = dict(best.error)
+    stats["error_source"] = best.error_source
+    if best.best_us is not None:
+        stats["best_us"] = best.best_us
+        if best.us_per_item is not None:
+            stats["us_per_item"] = best.us_per_item
+    return PolicyEntry(op=op, width=best.width, coeff_bits=best.coeff_bits,
+                       index_bits=best.index_bits, backend=best.backend,
+                       kernel=best.kernel, layer=layer,
+                       stats=tuple(sorted(stats.items())))
+
+
+def _available_widths() -> tuple:
+    """Widths runnable under the current jax config (32 needs x64)."""
+    import jax
+    if jax.config.read("jax_enable_x64"):
+        return SUPPORTED_WIDTHS
+    return tuple(w for w in SUPPORTED_WIDTHS if w <= 16)
+
+
+def build_policy(ops=("mul", "div"), *, error_budget: float,
+                 metric: str = "are_pct", width: int | None = None,
+                 prefer: str = "fastest", bench="auto",
+                 coeff_sweep=DEFAULT_COEFF_SWEEP,
+                 meta: dict | None = None, error_fn=None) -> TuningPolicy:
+    """One :func:`select_config` per op, assembled into a policy."""
+    entries = tuple(
+        select_config(op, error_budget=error_budget, metric=metric,
+                      width=width, prefer=prefer, bench=bench,
+                      coeff_sweep=coeff_sweep, error_fn=error_fn)
+        for op in ops)
+    m = {"metric": metric, "budget": error_budget, "prefer": prefer}
+    if isinstance(bench, str) and bench != "auto":
+        m["bench"] = bench
+    m.update(meta or {})
+    return TuningPolicy(entries=entries, meta=tuple(sorted(m.items())))

@@ -1,0 +1,397 @@
+"""Per-layer sensitivity profiling: a *global* quality budget, spent
+where it buys the least.
+
+A single error budget per op (``select_config``) over-provisions real
+workloads: a DNN's output layer tolerates far coarser arithmetic than its
+first feature extractor, and an imaging pipeline's normalization divider
+matters more than its blend multiplier. This module measures that —
+perturb one layer at a time through :mod:`repro.core.approx`'s registry
+dispatch, record the end-metric degradation (classification accuracy for
+the ANN path, PSNR/SSIM via :mod:`repro.metrics.image` for the imaging
+pipeline) — and then assigns per-layer configs greedily, cheapest-first:
+every layer starts at the cheapest candidate and the worst-degrading
+layer is upgraded until the summed predicted degradation fits the global
+budget. The result is a :class:`~repro.tuning.select.TuningPolicy` with
+one layer-scoped entry per layer, runnable via
+``ApproxConfig(policy=..., layer=...)`` with zero model-code changes.
+
+The machinery is generic: :func:`profile_layers` / :func:`greedy_assign`
+take any ``run_metric(assignment) -> float`` (higher is better). The ANN
+glue (:func:`profile_ann` / :func:`ann_policy_metric`) builds that
+closure from float weights using the same quantize + ``approx_matmul``
+path the models use; the imaging glue (:func:`profile_imaging`) wraps
+the Fig. 3/4 blend/Gaussian pipeline (lazily imported from
+``benchmarks`` — run it from the repo root).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+
+from .select import BudgetError, PolicyEntry, TuningPolicy
+
+__all__ = [
+    "SensitivityProfile",
+    "default_candidates",
+    "profile_layers",
+    "greedy_assign",
+    "greedy_assign_verified",
+    "assignment_policy",
+    "ann_run_metric",
+    "profile_ann",
+    "ann_policy_metric",
+    "imaging_run_metric",
+    "profile_imaging",
+]
+
+
+def default_candidates(op: str = "matmul") -> tuple:
+    """Cheapest-to-best default candidate ladder for ``op``.
+
+    Order is the greedy's upgrade path: static cost ascending (fewer
+    correction bits first, then the wider lane). Callers with a BENCH
+    trajectory can rank by measured wall-clock instead and pass their own
+    ladder.
+    """
+    return tuple(
+        PolicyEntry(op=op, width=w, coeff_bits=cb)
+        for w, cb in ((8, 0), (8, 2), (8, 4), (8, 6), (16, 6)))
+
+
+@dataclass(frozen=True)
+class SensitivityProfile:
+    """The measured per-layer degradation table.
+
+    ``baseline`` is the unperturbed end metric; ``table[layer][candidate]``
+    the metric with *only* that layer running that candidate. Degradation
+    is clamped at 0 — a layer that happens to score above baseline under
+    approximation (it happens: approximation is noise) predicts no loss,
+    not a gain the greedy would try to spend.
+    """
+    baseline: float
+    layers: tuple
+    candidates: tuple
+    table: tuple     # tuple of (layer, tuple of (candidate, metric))
+
+    def metric_at(self, layer: str, cand: PolicyEntry) -> float:
+        return dict(dict(self.table)[layer])[cand]
+
+    def degradation(self, layer: str, cand: PolicyEntry) -> float:
+        return max(0.0, self.baseline - self.metric_at(layer, cand))
+
+    def render(self) -> str:
+        lines = [f"sensitivity (baseline metric {self.baseline:.4g})"]
+        for layer in self.layers:
+            cells = ", ".join(
+                f"{c.width}b/cb{c.coeff_bits}: -{self.degradation(layer, c):.3g}"
+                for c in self.candidates)
+            lines.append(f"  {layer}: {cells}")
+        return "\n".join(lines)
+
+
+def profile_layers(run_metric, layers, candidates, *,
+                   baseline: float | None = None) -> SensitivityProfile:
+    """Measure every (layer, candidate) perturbation, one at a time.
+
+    ``run_metric(assignment)`` evaluates the end metric with
+    ``assignment`` mapping layer name -> :class:`PolicyEntry` (layers
+    absent from the mapping run exactly). ``baseline`` defaults to
+    ``run_metric({})``.
+    """
+    layers = tuple(layers)
+    candidates = tuple(candidates)
+    if baseline is None:
+        baseline = float(run_metric({}))
+    table = tuple(
+        (layer, tuple((cand, float(run_metric({layer: cand})))
+                      for cand in candidates))
+        for layer in layers)
+    return SensitivityProfile(baseline=baseline, layers=layers,
+                              candidates=candidates, table=table)
+
+
+def _ladders(profile: SensitivityProfile) -> dict:
+    """Per-layer upgrade ladders: the candidate order, pruned to strictly
+    decreasing measured degradation. Measured sensitivity is not always
+    monotone in static cost (approximation error is noise at the end
+    metric, and a candidate can be outright broken — e.g. a wide lane
+    without x64), and an "upgrade" that doesn't measurably help would
+    burn cost for nothing — so each ladder step is guaranteed to reduce
+    that layer's predicted degradation."""
+    ladder = {}
+    for layer in profile.layers:
+        steps = [profile.candidates[0]]
+        for cand in profile.candidates[1:]:
+            if profile.degradation(layer, cand) \
+                    < profile.degradation(layer, steps[-1]):
+                steps.append(cand)
+        ladder[layer] = steps
+    return ladder
+
+
+def greedy_assign(profile: SensitivityProfile, budget: float) -> dict:
+    """Cheapest-first assignment meeting a global degradation budget.
+
+    Every layer starts at the *first* (cheapest) candidate; while the
+    summed per-layer predicted degradation exceeds ``budget``, the layer
+    currently predicting the largest degradation is upgraded one step.
+    The prediction is first-order (per-layer degradations measured in
+    isolation, summed) — callers should verify the final assignment
+    end-to-end (:func:`ann_policy_metric` does). Raises
+    :class:`BudgetError` when even the best candidate everywhere predicts
+    more degradation than the budget, naming the nearest achievable sum.
+    """
+    if budget < 0:
+        raise ValueError(f"budget must be >= 0, got {budget}")
+    ladder = _ladders(profile)
+    level = {layer: 0 for layer in profile.layers}
+
+    def deg(layer):
+        return profile.degradation(layer, ladder[layer][level[layer]])
+
+    floor = sum(profile.degradation(l, ladder[l][-1])
+                for l in profile.layers)
+    if floor > budget:
+        raise BudgetError(
+            f"global degradation budget {budget:g} is infeasible: even the "
+            f"best candidate on every layer predicts {floor:.6g} total "
+            f"degradation (nearest achievable); raise the budget or widen "
+            f"the candidate ladder")
+    while sum(deg(l) for l in profile.layers) > budget:
+        upgradable = [l for l in profile.layers
+                      if level[l] + 1 < len(ladder[l])]
+        # floor check above guarantees progress is possible; pick the
+        # worst offender that can still move
+        worst = max(upgradable, key=deg)
+        level[worst] += 1
+    return {l: ladder[l][level[l]] for l in profile.layers}
+
+
+def greedy_assign_verified(profile: SensitivityProfile, budget: float,
+                           run_metric, *, trim: bool = True
+                           ) -> tuple[dict, float]:
+    """:func:`greedy_assign`, then *verify end-to-end* and upgrade until
+    the measured metric actually clears ``baseline - budget``.
+
+    The greedy's prediction is first-order (per-layer degradations
+    measured in isolation, summed); layer interactions can push the real
+    end metric below the floor the prediction cleared. This closes the
+    loop: re-run ``run_metric`` on the full assignment and, while it
+    falls short, upgrade the layer predicting the largest remaining
+    degradation — measurements, not predictions, decide when to stop.
+
+    ``trim`` then walks back down, least-sensitive layer first: any
+    single-step downgrade that still *measures* at or above the floor is
+    kept, so no layer holds correction bits the end metric provably does
+    not need (this is where per-layer assignments genuinely diverge —
+    a uniform config is what the trim refutes layer by layer).
+
+    Returns ``(assignment, measured end metric)``; raises
+    :class:`BudgetError` when even every layer at its best candidate
+    measures below the floor (message carries the measured best).
+
+    When the *prediction* already declares the budget infeasible, the
+    measurement still gets the last word: per-layer degradations are not
+    additive for every metric (PSNR against a bit-identical reference is
+    the canonical offender), so the loop starts from the all-best
+    assignment and lets ``run_metric`` decide — only a measured shortfall
+    at all-best raises.
+    """
+    floor = profile.baseline - budget
+    ladder = _ladders(profile)
+    try:
+        assignment = dict(greedy_assign(profile, budget))
+    except BudgetError:
+        assignment = {l: ladder[l][-1] for l in profile.layers}
+    while True:
+        measured = float(run_metric(assignment))
+        if measured >= floor:
+            break
+        upgradable = [
+            l for l in profile.layers
+            if ladder[l].index(assignment[l]) + 1 < len(ladder[l])]
+        if not upgradable:
+            raise BudgetError(
+                f"budget {budget:g} is infeasible end-to-end: every layer "
+                f"at its best candidate still measures {measured:.6g} "
+                f"(< floor {floor:.6g}); nearest achievable is "
+                f"{measured:.6g}")
+        worst = max(upgradable,
+                    key=lambda l: profile.degradation(l, assignment[l]))
+        assignment[worst] = ladder[worst][
+            ladder[worst].index(assignment[worst]) + 1]
+    if trim:
+        for layer in sorted(profile.layers,
+                            key=lambda l: profile.degradation(
+                                l, assignment[l])):
+            while ladder[layer].index(assignment[layer]) > 0:
+                trial = dict(assignment)
+                trial[layer] = ladder[layer][
+                    ladder[layer].index(assignment[layer]) - 1]
+                trial_measured = float(run_metric(trial))
+                if trial_measured >= floor:
+                    assignment, measured = trial, trial_measured
+                else:
+                    break
+    return assignment, measured
+
+
+def assignment_policy(assignment: dict, *, op: str,
+                      meta: dict | None = None) -> TuningPolicy:
+    """A per-layer assignment as a deployable :class:`TuningPolicy`."""
+    entries = tuple(replace(cand, op=op, layer=layer)
+                    for layer, cand in sorted(assignment.items()))
+    return TuningPolicy(entries=entries,
+                        meta=tuple(sorted((meta or {}).items())))
+
+
+# ---------------------------------------------------------------- ANN ----
+def _ann_layer_names(ws) -> tuple:
+    return tuple(f"fc{i}" for i in range(len(ws)))
+
+
+def _ann_forward(ws, x, cfg_for_layer):
+    """Float-weight MLP forward with per-layer ApproxConfig dispatch."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.approx import approx_matmul
+
+    act = jnp.asarray(x)
+    for i, w in enumerate(ws):
+        act = approx_matmul(act, jnp.asarray(w), cfg_for_layer(i))
+        if i < len(ws) - 1:
+            act = jax.nn.relu(act)
+    return act
+
+
+def ann_run_metric(ws, x, y):
+    """``run_metric(assignment) -> accuracy %`` closure over one float MLP
+    (a ``train_float``-style weight list): layers named in the assignment
+    run the real quantize + SIMDive emulated matmul of
+    :func:`repro.core.approx.approx_matmul`, the rest stay exact float."""
+    from repro.core.approx import EXACT, ApproxConfig
+    from repro.metrics import classification_accuracy
+
+    names = _ann_layer_names(ws)
+
+    def run_metric(assignment):
+        def cfg_for_layer(i):
+            cand = assignment.get(names[i])
+            if cand is None:
+                return EXACT
+            return ApproxConfig(mode="simdive", width=cand.width,
+                                coeff_bits=cand.coeff_bits,
+                                index_bits=cand.index_bits,
+                                backend=cand.backend)
+        return classification_accuracy(_ann_forward(ws, x, cfg_for_layer), y)
+
+    return run_metric
+
+
+def profile_ann(ws, x, y, *, candidates=None,
+                baseline: float | None = None) -> SensitivityProfile:
+    """Sensitivity of one float MLP to per-layer approximate matmuls,
+    end metric = test accuracy (%), one perturbed layer at a time."""
+    candidates = tuple(candidates) if candidates is not None \
+        else default_candidates("matmul")
+    return profile_layers(ann_run_metric(ws, x, y), _ann_layer_names(ws),
+                          candidates, baseline=baseline)
+
+
+def ann_policy_metric(ws, x, y, policy: TuningPolicy, *,
+                      op: str = "matmul") -> float:
+    """End-to-end accuracy (%) of the MLP under ``policy`` — the
+    verification run of a greedy assignment. Dispatch goes through
+    ``ApproxConfig(policy=..., layer=...)``: each layer resolves its own
+    entry, proving the policy path the deployment will use."""
+    from repro.core.approx import EXACT, ApproxConfig
+    from repro.metrics import classification_accuracy
+
+    names = _ann_layer_names(ws)
+
+    def cfg_for_layer(i):
+        if policy.lookup(op, names[i]) is None:
+            return EXACT
+        return ApproxConfig(mode="simdive", policy=policy, layer=names[i])
+
+    return classification_accuracy(_ann_forward(ws, x, cfg_for_layer), y)
+
+
+# ------------------------------------------------------------ imaging ----
+#: the imaging pipeline's approximable stages and the op each one runs
+IMAGING_STAGES = (("blend-mul", "mul"), ("gauss-mul", "mul"),
+                  ("gauss-div", "div"))
+
+
+def imaging_run_metric(*, metric: str = "psnr", seed: int = 3):
+    """``run_metric(assignment) -> PSNR dB | SSIM x100`` closure over the
+    Fig. 3/4 blend + Gaussian pipeline, measured against the
+    accurate-arithmetic pipeline output via :mod:`repro.metrics.image`.
+
+    Stage names are :data:`IMAGING_STAGES`; stages absent from the
+    assignment run accurate. Imports the pipeline from
+    ``benchmarks.fig34_imaging`` lazily — run from the repo root (the
+    benchmarks tree is not an installed package).
+    """
+    import jax.numpy as jnp
+    import numpy as np
+
+    from benchmarks.fig34_imaging import FO, blend, gaussian, synth_image
+    from repro.metrics import psnr, ssim
+
+    if metric not in ("psnr", "ssim"):
+        raise ValueError(f"metric must be 'psnr' or 'ssim', got {metric!r}")
+    img1, img2 = synth_image(seed), synth_image(seed + 1)
+    acc_mul = lambda a, b: a.astype(jnp.uint32) * b            # noqa: E731
+    acc_div = lambda a, b: ((a.astype(jnp.uint64) << FO)       # noqa: E731
+                            // b.astype(jnp.uint64)).astype(jnp.uint32)
+
+    def stage_op(cand, op):
+        bound = cand.bind()
+        if op == "mul":
+            return lambda a, b: bound(a, b, op="mul")
+        return lambda a, b: bound(a, b, op="div", frac_out=FO)
+
+    ref_out = gaussian(np.asarray(blend(img1, img2, acc_mul), np.uint32),
+                       acc_mul, acc_div)
+
+    def run_metric(assignment):
+        ops = {name: (stage_op(assignment[name], op)
+                      if name in assignment
+                      else (acc_mul if op == "mul" else acc_div))
+               for name, op in IMAGING_STAGES}
+        blended = np.asarray(
+            blend(img1, img2, ops["blend-mul"]), np.uint32)
+        out = gaussian(blended, ops["gauss-mul"], ops["gauss-div"])
+        if metric == "psnr":
+            return psnr(ref_out, out)
+        return 100.0 * ssim(ref_out, out)
+
+    return run_metric
+
+
+def profile_imaging(*, candidates=None, metric: str = "psnr",
+                    seed: int = 3) -> SensitivityProfile:
+    """Sensitivity of the Fig. 3/4 pipeline stages, end metric = PSNR (dB)
+    or SSIM (x100, so budgets share the 'points' scale) against the
+    accurate-arithmetic pipeline (:func:`imaging_run_metric`).
+
+    Stages: the blend multiplier, the Gaussian window multiplier and the
+    Gaussian normalization divider (the paper's division use-case).
+
+    Baseline convention: the reference is the accurate pipeline's own
+    output, so the unperturbed baseline is the identity — 99 dB (the
+    :func:`repro.metrics.psnr` sentinel) or SSIM 100. State budgets
+    against that cap (``budget = 99 - floor_db``), and prefer
+    :func:`greedy_assign_verified` with :func:`imaging_run_metric`:
+    per-stage PSNR degradations against an identity reference are *not*
+    additive, so only the measured loop places assignments tightly. The
+    profile also exposes infeasible stage configs outright — e.g. an
+    8-bit divider lane cannot hold the Gaussian accumulator (values up
+    to 255·273), a ~77 dB degradation pruned off the upgrade ladder
+    automatically.
+    """
+    candidates = tuple(candidates) if candidates is not None \
+        else tuple(replace(c, op="mul") for c in default_candidates("mul"))
+    return profile_layers(imaging_run_metric(metric=metric, seed=seed),
+                          [s for s, _ in IMAGING_STAGES], candidates)

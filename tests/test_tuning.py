@@ -1,0 +1,278 @@
+"""Tier-1 tests for repro.tuning: frontiers, selection, policies,
+sensitivity, and the run.py --reuse-autotune per-key fall-through.
+
+Heavy lifting stays in fixtures: error stats are injected via
+``error_fn`` and timings come from in-memory fixture runs, so these run
+in seconds. One real exhaustive width-8 selection anchors the fixtures
+to the actual datapath (the acceptance criterion's
+``select_config(op='mul', width=8, error_budget=0.9)`` case).
+"""
+import json
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import SimdiveSpec
+from repro.core.approx import ApproxConfig, approx_matmul
+from repro.kernels import get_op
+from repro.metrics import stratified_pairs
+from repro.tuning import (
+    BudgetError,
+    PolicyEntry,
+    TuningPolicy,
+    assignment_policy,
+    build_frontier,
+    build_policy,
+    greedy_assign,
+    greedy_assign_verified,
+    pareto,
+    profile_layers,
+    select_config,
+)
+
+
+# fixtures shared with the CLI's --self-test (the compare.py precedent:
+# the self-test and the tier-1 unit tests must agree on what a plausible
+# fixture looks like — one definition, two runners)
+from benchmarks.tune import fixture_bench_run, fixture_error_fn  # noqa: E402
+
+FIXTURE_KW = dict(bench=fixture_bench_run(cb0=300.0, cb4=150.0, cb6=200.0),
+                  error_fn=fixture_error_fn, coeff_sweep=(0, 4, 6, 8))
+
+
+# ------------------------------------------------------------- frontier --
+def test_frontier_joins_bench_timings():
+    pts = build_frontier("mul", width=8, **FIXTURE_KW)
+    assert {p.coeff_bits: p.best_us for p in pts} == \
+        {0: 300.0, 4: 150.0, 6: 200.0, 8: None}
+    assert all(p.error_source == "fixture" for p in pts)
+
+
+def test_pareto_drops_dominated_points():
+    pts = build_frontier("mul", width=8, **FIXTURE_KW)
+    # cb0 is dominated by cb4 (less error AND cheaper); the rest survive
+    assert [p.coeff_bits for p in pareto(pts)] == [8, 6, 4]
+
+
+# ------------------------------------------------------------ selection --
+def test_select_fastest_under_budget():
+    e = select_config("mul", width=8, error_budget=2.0, **FIXTURE_KW)
+    assert (e.width, e.coeff_bits) == (8, 4)       # ARE 1.0, fastest 150us
+    assert e.stats_dict()["best_us"] == 150.0
+
+
+def test_select_deterministic_given_frozen_bench(tmp_path):
+    """Identical calls against a frozen BENCH *file* return identical,
+    hashable configs — selection is a pure function of its inputs."""
+    doc = {"schema": "simdive-bench/v2",
+           "runs": [dict(fixture_bench_run(cb0=300.0, cb4=150.0, cb6=200.0),
+                         created_unix=0)]}
+    path = tmp_path / "bench.json"
+    path.write_text(json.dumps(doc))
+    kw = dict(bench=str(path), error_fn=fixture_error_fn,
+              coeff_sweep=(0, 4, 6, 8))
+    a = select_config("mul", width=8, error_budget=2.0, **kw)
+    b = select_config("mul", width=8, error_budget=2.0, **kw)
+    assert a == b and hash(a) == hash(b)
+    assert a.stats_dict()["best_us"] == 150.0      # the file's timing
+
+
+def test_infeasible_budget_names_nearest_achievable():
+    with pytest.raises(BudgetError) as ei:
+        select_config("mul", width=8, error_budget=0.01, **FIXTURE_KW)
+    msg = str(ei.value)
+    assert "nearest achievable" in msg
+    assert "0.25" in msg                           # cb8's fixture ARE
+    assert "cb8" in msg                            # and its config
+
+
+def test_select_real_exhaustive_width8_meets_budget():
+    """The acceptance case, on the real datapath: the returned config's
+    exhaustively-measured ARE% meets the 0.9 budget, and it is minimal
+    best_us among budget-meeting points of the committed trajectory
+    (cb 0 fails the budget; among the rest the joined best_us decides)."""
+    e = select_config("mul", width=8, error_budget=0.9,
+                      coeff_sweep=(0, 6))
+    assert e.coeff_bits == 6
+    stats = e.stats_dict()
+    assert stats["are_pct"] <= 0.9
+    assert stats["error_source"] == "exhaustive"
+    # and the selected entry is a working registry dispatch config
+    a = jnp.asarray(np.arange(1, 200, dtype=np.uint32))
+    got = e.bind()(a, a, op="mul")
+    want = get_op("elemwise", SimdiveSpec(width=8, coeff_bits=6), "ref")(
+        a, a, op="mul")
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+# -------------------------------------------------------------- policy ---
+def _policy():
+    return build_policy(("mul", "div"), error_budget=2.0, width=8,
+                        **FIXTURE_KW)
+
+
+def test_policy_json_roundtrip_is_identity(tmp_path):
+    pol = _policy()
+    assert TuningPolicy.from_json(pol.to_json()) == pol
+    # document level too: dict -> policy -> dict is stable
+    assert TuningPolicy.from_dict(pol.as_dict()).as_dict() == pol.as_dict()
+    path = tmp_path / "policy.json"
+    pol.save(str(path))
+    assert TuningPolicy.load(str(path)) == pol
+
+
+def test_policy_lookup_layer_scoping():
+    base = PolicyEntry(op="matmul", width=8, coeff_bits=6)
+    scoped = PolicyEntry(op="matmul", width=16, coeff_bits=4, layer="fc1")
+    pol = TuningPolicy(entries=(base, scoped))
+    assert pol.lookup("matmul") is base
+    assert pol.lookup("matmul", "fc0") is base     # falls back to default
+    assert pol.lookup("matmul", "fc1") is scoped
+    assert pol.lookup("div") is None
+
+
+def test_policy_rejects_wrong_schema():
+    with pytest.raises(ValueError):
+        TuningPolicy.from_dict({"schema": "not-a-policy", "entries": []})
+
+
+def test_approxconfig_resolves_policy_entries():
+    """ApproxConfig(policy=...) dispatches the entry's knobs through the
+    registry; no matching entry falls back to the config's own fields."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(4, 16)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(16, 3)).astype(np.float32))
+    pol = TuningPolicy(entries=(
+        PolicyEntry(op="matmul", width=8, coeff_bits=2, layer="fc0"),))
+    via_policy = approx_matmul(
+        x, w, ApproxConfig(mode="simdive", policy=pol, layer="fc0"))
+    direct = approx_matmul(
+        x, w, ApproxConfig(mode="simdive", width=8, coeff_bits=2))
+    assert np.array_equal(np.asarray(via_policy), np.asarray(direct))
+    # layer without an entry: the config's own (default cb6) knobs stand
+    fallback = approx_matmul(
+        x, w, ApproxConfig(mode="simdive", policy=pol, layer="other"))
+    own = approx_matmul(x, w, ApproxConfig(mode="simdive"))
+    assert np.array_equal(np.asarray(fallback), np.asarray(own))
+
+
+# --------------------------------------------------------- sensitivity ---
+def _synthetic_profile():
+    """Hand-built degradations: la is sensitive (needs cb6), lb is not."""
+    cands = tuple(PolicyEntry(op="matmul", width=8, coeff_bits=cb)
+                  for cb in (0, 2, 6))
+    metrics = {("la", 0): 90.0, ("la", 2): 94.0, ("la", 6): 99.5,
+               ("lb", 0): 99.4, ("lb", 2): 99.5, ("lb", 6): 99.6}
+
+    def run_metric(assignment):
+        out = 100.0
+        for layer, cand in assignment.items():
+            out -= 100.0 - metrics[(layer, cand.coeff_bits)]
+        return out
+
+    return profile_layers(run_metric, ("la", "lb"), cands), run_metric
+
+
+def test_greedy_assign_spends_where_it_hurts():
+    prof, _ = _synthetic_profile()
+    a = greedy_assign(prof, budget=1.5)
+    assert a["la"].coeff_bits == 6                 # the sensitive layer
+    assert a["lb"].coeff_bits == 0                 # the tolerant one
+    with pytest.raises(BudgetError, match="nearest achievable"):
+        greedy_assign(prof, budget=0.05)
+
+
+def test_greedy_assign_verified_meets_measured_floor():
+    prof, run = _synthetic_profile()
+    a, measured = greedy_assign_verified(prof, 1.5, run)
+    assert measured >= prof.baseline - 1.5
+    assert {l: c.coeff_bits for l, c in a.items()} == {"la": 6, "lb": 0}
+    pol = assignment_policy(a, op="matmul", meta={"budget": 1.5})
+    assert {e.layer for e in pol.entries} == {"la", "lb"}
+    assert TuningPolicy.from_json(pol.to_json()) == pol
+
+
+# ----------------------------------------------------------- stratified --
+def test_stratified_pairs_cover_every_lod_stratum():
+    for width, b_width in ((16, None), (32, 8)):
+        a, b = stratified_pairs(width, seed=3, per_stratum=1,
+                                b_width=b_width)
+        k1 = np.floor(np.log2(a.astype(np.float64))).astype(int)
+        k2 = np.floor(np.log2(b.astype(np.float64))).astype(int)
+        want = width * (b_width or width)
+        assert len(set(zip(k1.tolist(), k2.tolist()))) == want
+        assert a.size == want
+        assert int(a.min()) >= 1 and int(b.min()) >= 1
+        assert int(a.max()) < 2 ** width
+        assert int(b.max()) < 2 ** (b_width or width)
+
+
+# ------------------------------------------------- reuse-autotune fix ----
+def _autotune_records():
+    """Real, registry-valid autotune records (exported from a live cache)."""
+    from repro.kernels.registry import (
+        autotune_cache,
+        clear_autotune_cache,
+        export_autotune_cache,
+    )
+    clear_autotune_cache()
+    spec = SimdiveSpec(width=8, coeff_bits=6)
+    a = jnp.asarray(np.arange(1, 65, dtype=np.uint32))
+    get_op("elemwise", spec, "pallas-interpret")(a, a, op="mul")
+    get_op("packed", spec, "pallas-interpret")(
+        jnp.asarray(np.arange(1, 65, dtype=np.uint32).reshape(8, 8)),
+        jnp.asarray(np.arange(1, 65, dtype=np.uint32).reshape(8, 8)),
+        op="mul")
+    recs = export_autotune_cache()
+    assert len(recs) >= 2 and autotune_cache()
+    clear_autotune_cache()
+    return recs
+
+
+def test_reuse_autotune_merges_per_key_across_runs(tmp_path, capsys):
+    """A newest run with a corrupt autotune field must neither abort the
+    preload nor shadow older runs' winners — and it must warn loudly."""
+    import benchmarks.run as benchrun
+    from repro.kernels.registry import autotune_cache, clear_autotune_cache
+
+    recs = _autotune_records()
+    elem = [r for r in recs if r["key"][0] == "elemwise"]
+    packed = [r for r in recs if r["key"][0] != "elemwise"]
+    doc = {"schema": "simdive-bench/v2", "runs": [
+        {"created_unix": 1, "grid": [], "autotune": packed},
+        {"created_unix": 2, "grid": [], "autotune": elem},
+        # newest run: corrupt field (not a list) — must warn + fall through
+        {"created_unix": 3, "grid": [], "autotune": "corrupt"},
+    ]}
+    path = tmp_path / "bench.json"
+    path.write_text(json.dumps(doc))
+    clear_autotune_cache()
+    try:
+        loaded, src = benchrun.reuse_autotune(str(path))
+        # per-key fall-through: BOTH older runs' keys load despite the
+        # newest run being corrupt
+        assert loaded >= len(elem) + len(packed)
+        assert len(autotune_cache()) >= 2
+        err = capsys.readouterr().err
+        assert "corrupt autotune field" in err
+    finally:
+        clear_autotune_cache()
+
+
+def test_reuse_autotune_warns_when_nothing_loads(tmp_path, capsys,
+                                                 monkeypatch):
+    import benchmarks.run as benchrun
+    from repro.kernels.registry import clear_autotune_cache
+
+    # point the committed-baseline fallback into the empty tmp dir so
+    # neither source yields records
+    monkeypatch.setattr(benchrun, "_REPO_ROOT", str(tmp_path))
+    doc = {"schema": "simdive-bench/v2",
+           "runs": [{"created_unix": 1, "grid": []}]}
+    path = tmp_path / "bench_empty.json"
+    path.write_text(json.dumps(doc))
+    clear_autotune_cache()
+    loaded, _ = benchrun.reuse_autotune(str(path))
+    assert loaded == 0
+    assert "no usable autotune records" in capsys.readouterr().err
