@@ -16,9 +16,14 @@ Two outputs per run:
 
 A run record's ``grid`` section is the conformance-shaped sweep: one entry
 per (kernel, op, width, coeff_bits, backend) combination — ``elemwise``
-mul/div, ``packed`` (all four 8-bit lanes per word, mul/div/mixed mode)
-and ``matmul_int``/``matmul_emul`` (accumulate-level NMED vs the exact
-integer matmul across a small K sweep) — each carrying the full
+mul/div, ``packed`` (all four 8-bit lanes per word, mul/div/mixed mode),
+``matmul_int``/``matmul_emul`` (accumulate-level NMED vs the exact
+integer matmul across a small K sweep) and ``attention``
+(SIMDive-normalized flash attention vs the exact-softmax oracle over
+long-context shape buckets and the model configs' GQA head layouts,
+clamped for CPU cost; sampled rows, plus one interpret row pinning a
+pipelined block so the double-buffered schedule owns a BENCH key) — each
+carrying the full
 :mod:`repro.metrics` error profile (ARE%/MRED/NMED/PRE%/WCE/error-rate
 against the exact result) and a shape-bucketed throughput measurement;
 everything flows through the kernel-registry ``get_op`` entry point. The
@@ -141,6 +146,26 @@ def _grid_configs(quick: bool):
                backend="ref", k=128, **common)
     yield dict(kernel="matmul_int", op="matmul", width=8, coeff_bits=6,
                backend="pallas-interpret", k=32, **common)
+    # attention: SIMDive-normalized flash attention vs the exact-softmax
+    # oracle, over long-context Sq buckets and the model configs' GQA head
+    # layouts (clamped — see _attention_layout — so the CPU oracle stays
+    # bounded). Sq 8192 is full-run-only; all rows are sampled (the gate's
+    # 2% rtol class). The divider config is the attention default: width
+    # 16, 8 coefficient bits, quotients at 15 fractional bits.
+    for sq in ((512, 2048) if quick else (512, 2048, 8192)):
+        yield dict(kernel="attention", op="attention", width=16,
+                   coeff_bits=8, backend="ref", arch="qwen3-4b", sq=sq,
+                   **common)
+    # a sliding-window GQA layout (Mixtral) exercises the masked sweep;
+    # Sq 1024 keeps its gate key (shape-bucketed) distinct from the
+    # qwen3 rows — the window is not part of the key identity
+    yield dict(kernel="attention", op="attention", width=16, coeff_bits=8,
+               backend="ref", arch="mixtral-8x7b", sq=1024, **common)
+    # one interpret row with a pinned pipelined block: the double-buffered
+    # kv schedule gets a BENCH key of its own (parity + trend, not speed)
+    yield dict(kernel="attention", op="attention", width=16, coeff_bits=8,
+               backend="pallas-interpret", arch="qwen3-4b", sq=512,
+               block=(256, 256, 2), **common)
 
 
 def _cfg_geometry(cfg: dict, quick: bool) -> dict:
@@ -171,6 +196,10 @@ def _cfg_geometry(cfg: dict, quick: bool) -> dict:
         words = n // (rows * (32 // cfg["width"]))
         shapes = ((rows, words), (rows, words))
         g = {"n": n, "rows": rows}
+    elif cfg["kernel"] == "attention":
+        lay = _attention_layout(cfg["arch"], cfg["sq"])
+        shapes = ((lay["bh"], cfg["sq"], lay["dh"]),) * 3
+        g = {**lay, "sq": cfg["sq"]}
     else:                                  # matmul_int / matmul_emul
         m = 32 if interp else 64
         shapes = ((m, cfg["k"]), (cfg["k"], m))
@@ -179,12 +208,32 @@ def _cfg_geometry(cfg: dict, quick: bool) -> dict:
     return g
 
 
-def _measure(call, a, b, *, interp: bool, items: int):
+def _attention_layout(arch: str, sq: int) -> dict:
+    """The model config's GQA head layout, clamped for the CPU oracle.
+
+    Head *counts* are capped (2 kv heads x 2 query groups, d_head 32) —
+    the grid measures the divider's composition into attention, not the
+    model's full head fan-out, and the exact-softmax reference is
+    O(BH * Sq^2). The GQA *structure* (grouped kv, sliding window) is
+    preserved; a window wider than the row is clamped to Sq/2 so the
+    masked sweep is actually exercised."""
+    from repro.configs import get_config
+
+    cfg = get_config(arch)
+    kvh = max(1, min(cfg.n_kv_heads, 2))
+    groups = max(1, min(cfg.n_heads // max(cfg.n_kv_heads, 1), 2))
+    window = min(cfg.sliding_window, sq // 2) if cfg.sliding_window else 0
+    return {"bh": kvh * groups, "dh": min(cfg.d_head, 32),
+            "kv_heads": kvh, "q_groups": groups, "window": window}
+
+
+def _measure(call, *args, interp: bool, items: int):
     # 9 iters on the compiled paths: best-of-N is the gated statistic and
     # shared-runner noise needs a few more draws to converge; interpreter
     # wall-clock is a correctness artifact, one sample is plenty
     timed = jax.jit(call) if not interp else call
-    return time_callable(timed, a, b, iters=1 if interp else 9, items=items)
+    return time_callable(timed, *args, iters=1 if interp else 9,
+                         items=items)
 
 
 def _run_elemwise(cfg: dict, quick: bool) -> dict:
@@ -303,11 +352,46 @@ def _run_matmul(cfg: dict, quick: bool) -> dict:
     }
 
 
+def _run_attention(cfg: dict, quick: bool) -> dict:
+    """SIMDive-normalized attention vs the exact-softmax oracle."""
+    from repro.kernels.flash_attention import flash_attention_ref
+
+    spec = SimdiveSpec(width=cfg["width"], coeff_bits=cfg["coeff_bits"],
+                       index_bits=cfg["index_bits"])
+    interp = cfg["backend"] == "pallas-interpret"
+    geo = _cfg_geometry(cfg, quick)
+    bh, sq, dh, window = geo["bh"], geo["sq"], geo["dh"], geo["window"]
+    rng = np.random.default_rng(GRID_SEED + 3)
+    q, k, v = (jnp.asarray(rng.normal(size=(bh, sq, dh)).astype(np.float32))
+               for _ in range(3))
+    frac_out = 15                 # the attention divider's default format
+    bound = get_op("attention", spec, cfg["backend"],
+                   block=cfg.get("block"))
+    kw = dict(causal=True, window=window, approx_div=True,
+              frac_out=frac_out)
+    call = (lambda qq, kk, vv, _b=bound, _kw=kw: _b(qq, kk, vv, **_kw))
+    out = np.asarray(call(q, k, v)).astype(np.float64)
+    exact = np.asarray(flash_attention_ref(
+        q, k, v, causal=True, window=window, approx_div=False)
+    ).astype(np.float64)
+    err = error_stats(out, exact)
+    t = _measure(call, q, k, v, interp=interp, items=int(out.size))
+    return {
+        "n": int(out.size), "seed": GRID_SEED,
+        "exhaustive": False,       # sampled class: the gate's 2% rtol
+        "shape": {"bh": bh, "sq": sq, "dh": dh, "window": window,
+                  "arch": cfg["arch"]},
+        "frac_out": frac_out,
+        "error": err.as_dict(), "throughput": t.as_dict(),
+    }
+
+
 _GRID_RUNNERS = {
     "elemwise": _run_elemwise,
     "packed": _run_packed,
     "matmul_int": _run_matmul,
     "matmul_emul": _run_matmul,
+    "attention": _run_attention,
 }
 
 
@@ -316,10 +400,15 @@ def _cfg_label(cfg: dict) -> str:
              f"cb{cfg['coeff_bits']}/{cfg['backend']}")
     if "k" in cfg:
         label += f"/K{cfg['k']}"
+    if "sq" in cfg:
+        label += f"/{cfg['arch']}/Sq{cfg['sq']}"
+    if cfg.get("block") is not None and len(cfg["block"]) > 2:
+        label += f"/pipelined-d{cfg['block'][2]}"
     return label
 
 
-def run_grid(report, quick: bool, records: list[dict]) -> int:
+def run_grid(report, quick: bool, records: list[dict],
+             kernels: tuple | None = None) -> int:
     """Sweep every grid config, appending records into ``records``.
 
     One config failing must not lose the rest of the sweep (nor the
@@ -327,12 +416,15 @@ def run_grid(report, quick: bool, records: list[dict]) -> int:
     escaping exception keeps them): failures append a
     ``{"status": "failed", ...}`` record and the gate downstream treats
     them as regressions, distinct from configs that were never run.
-    Returns the number of failed configs.
+    ``kernels`` restricts the sweep to those grid kernels (``--only
+    attention``). Returns the number of failed configs.
     """
     failures = 0
     report("# === grid: (kernel, op, width, coeff_bits, backend) error + "
            "throughput trajectory")
     for cfg in _grid_configs(quick):
+        if kernels is not None and cfg["kernel"] not in kernels:
+            continue
         base = {
             "kernel": cfg["kernel"], "op": cfg["op"], "width": cfg["width"],
             "coeff_bits": cfg["coeff_bits"],
@@ -543,7 +635,9 @@ def main() -> None:
         policy_record = {"path": os.path.basename(args.policy),
                          **policy.as_dict()}
     wanted = set(args.only.split(",")) if args.only else None
-    valid = {name for name, _, _, _ in SUITES} | {"grid"}
+    # 'attention' is the grid restricted to the attention rows — handy
+    # when iterating on the kernel without re-sweeping every op
+    valid = {name for name, _, _, _ in SUITES} | {"grid", "attention"}
     if wanted is not None and not wanted <= valid:
         # a typo'd suite name must not append an empty trajectory record
         ap.error(f"unknown --only names {sorted(wanted - valid)}; "
@@ -568,9 +662,13 @@ def main() -> None:
                f"from {os.path.basename(src)}")
     grid_records: list[dict] = []
     grid_failures = 0
-    if wanted is None or "grid" in wanted:
+    if wanted is None or wanted & {"grid", "attention"}:
+        only_attn = (wanted is not None and "grid" not in wanted
+                     and "attention" in wanted)
         try:
-            grid_failures = run_grid(report, args.quick, grid_records)
+            grid_failures = run_grid(
+                report, args.quick, grid_records,
+                kernels=("attention",) if only_attn else None)
         except Exception as e:  # noqa: BLE001 — per-config capture is in
             # run_grid; this catches harness-level breakage, and the
             # records accumulated so far survive in grid_records
@@ -578,7 +676,8 @@ def main() -> None:
             report(f"# !!! grid harness FAILED: {type(e).__name__}: {e}")
             traceback.print_exc()
     suites, failures = run_suites(
-        report, None if wanted is None else wanted - {"grid"}, args.quick)
+        report, None if wanted is None else wanted - {"grid", "attention"},
+        args.quick)
     failures += grid_failures
 
     with open(args.out, "w") as f:

@@ -56,6 +56,7 @@ __all__ = [
     "approx_matmul",
     "approx_softmax",
     "approx_rmsnorm",
+    "attention_div",
 ]
 
 
@@ -111,6 +112,23 @@ class ApproxConfig:
         spec = SimdiveSpec(width=entry.width, coeff_bits=entry.coeff_bits,
                            index_bits=entry.index_bits)
         return spec, (getattr(entry, "backend", None) or self.backend)
+
+    def resolve_attention(self) -> tuple[SimdiveSpec, str, int]:
+        """(spec, backend, frac_out) serving the attention softmax divider.
+
+        Like :meth:`resolve` for the logical ``'attention'`` op, plus the
+        divider's fixed-point output bits: a policy entry carrying
+        ``frac_out`` overrides the config's ``frac_out`` knob, so a
+        ``simdive-policy/v1`` JSON pins the whole attention divider — width,
+        coeff_bits, index_bits, backend *and* frac_out — per layer.
+        """
+        spec, backend = self.resolve("attention", self.div_width)
+        entry = self.policy.lookup("attention", self.layer) \
+            if self.policy is not None else None
+        frac = self.frac_out
+        if entry is not None and getattr(entry, "frac_out", None):
+            frac = int(entry.frac_out)
+        return spec, backend, frac
 
 
 EXACT = ApproxConfig()
@@ -189,6 +207,37 @@ def _fixed_point_div(num: jax.Array, den: jax.Array, cfg: ApproxConfig):
     div = get_op("elemwise", spec, backend=backend)
     q = div(qn, qd, op="div", frac_out=cfg.frac_out)
     return q.astype(jnp.float32) / jnp.float32(2 ** cfg.frac_out)
+
+
+def attention_div(acc: jax.Array, l: jax.Array, cfg: ApproxConfig):
+    """Softmax normalization ``acc / l[..., None]`` on the SIMDive divider,
+    resolved as the logical ``'attention'`` op (policy-tunable per layer).
+
+    Same per-row shared-exponent quantization as the flash kernel's
+    in-kernel finalize (:func:`repro.kernels.flash_attention.softmax_div`):
+    ``top = max(rowmax|acc|, l)`` anchors each row's scale, so identical
+    rows produce identical divider inputs whether attention is served by
+    the jnp online-softmax path or the Pallas kernel — and the result is
+    independent of how the rows were chunked. ``acc`` is signed float
+    (..., dh); ``l`` is (...,) > 0. The default 16-bit lane runs in uint32
+    everywhere; a 32-bit lane needs jax x64 mode.
+    """
+    spec, backend, frac_out = cfg.resolve_attention()
+    w = spec.width
+    num = jnp.abs(acc)
+    den = jnp.maximum(l, 1e-30)[..., None]
+    top = jnp.maximum(jnp.max(num, axis=-1, keepdims=True), den)
+    ex = jnp.floor(jnp.log2(jnp.maximum(top, 1e-30)))
+    sc = jnp.exp2(jnp.float32(w - 2) - ex)
+    lim = jnp.float32(2 ** w - 1)
+    dt = jnp.uint64 if w > 16 else jnp.uint32
+    qn = jnp.clip(jnp.round(num * sc), 0, lim).astype(dt)
+    qd = jnp.clip(jnp.round(den * sc), 1, lim).astype(dt)
+    div = get_op("elemwise", spec, backend=backend)
+    quot = div(qn, jnp.broadcast_to(qd, qn.shape), op="div",
+               frac_out=frac_out)
+    out = quot.astype(jnp.float32) * jnp.float32(2.0 ** -frac_out)
+    return jnp.where(acc < 0, -out, out)
 
 
 @partial(jax.custom_vjp, nondiff_argnums=(1, 2))

@@ -6,7 +6,10 @@ Layering (see README.md for the full diagram):
                   datapath, written once, kernel-safe
   elemwise.py     fused elementwise mul/div/mixed kernel body
   packed_simd.py  sub-word packed lanes (4x8b / 2x16b per uint32 word)
-  logmatmul.py    tiled log-domain approximate matmul (K-innermost grid)
+  logmatmul.py    tiled log-domain approximate matmul (K-innermost grid
+                  or pipelined double-buffered DMA schedule)
+  flash_attention.py  online-softmax attention; the SIMDive divider runs
+                  the finalize, on the same datapath stages
   ref.py          bit-exact pure-jnp oracles (same stages, no pallas)
   registry.py     get_op()/register_op() — backend resolution + block
                   autotuning + the plug-in point for new ops
@@ -24,6 +27,7 @@ _EXPORTS = {
     "simdive_elemwise": ".ops",
     "simdive_packed": ".ops",
     "simdive_matmul_int": ".ops",
+    "simdive_attention": ".ops",
     "get_op": ".registry",
     "register_op": ".registry",
     "registered_ops": ".registry",

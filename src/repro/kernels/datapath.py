@@ -14,6 +14,7 @@ Stage map (FPGA block -> function):
     region index + coefficient LUT  region_corr        (corr_lookup inside)
     ternary add + anti-log, mul     antilog_mul
     ternary add + anti-log, div     antilog_div
+    fused correct + anti-log        log_mul / log_div  (one pass, RAPID)
     sign XOR network                sign_split / sign_join
     sub-word lane wiring            lane_expand / lane_repack
     whole SISD unit (Fig. 2b)       lane_op            (composes the above)
@@ -52,6 +53,8 @@ __all__ = [
     "op_table",
     "antilog_mul",
     "antilog_div",
+    "log_mul",
+    "log_div",
     "sign_split",
     "sign_join",
     "lane_expand",
@@ -226,6 +229,56 @@ def antilog_div(la: jnp.ndarray, lb: jnp.ndarray, width: int,
     return q
 
 
+# --------------------------------------------------------- fused log ops --
+def log_mul(la: jnp.ndarray, lb: jnp.ndarray, tab: jnp.ndarray, width: int,
+            index_bits: int = 3, round_out: bool = False,
+            zero: jnp.ndarray | None = None, *,
+            in_kernel: bool = False) -> jnp.ndarray:
+    """Fused stages 2+3a: region lookup + ternary add + anti-log, one pass.
+
+    The RAPID pipelining observation (arXiv:2206.13970): the correction
+    gather and the anti-log shift read the *same* log words, so issuing
+    them as one stage keeps the tile in registers/VMEM between them — the
+    coefficient tensor is consumed by the ternary add inside the same
+    expression instead of being materialized as a separate kernel stage.
+    Bit-identical to ``region_corr`` followed by ``antilog_mul``.
+    """
+    corr = region_corr(la, lb, tab, width, index_bits,
+                       gate=None if zero is None else ~zero,
+                       in_kernel=in_kernel)
+    if _static_zero_table(tab, in_kernel):
+        corr = None          # skip the ternary add's widen/clip entirely
+    return antilog_mul(la, lb, width, corr=corr, round_out=round_out,
+                       zero=zero, in_kernel=in_kernel)
+
+
+def log_div(la: jnp.ndarray, lb: jnp.ndarray, tab: jnp.ndarray, width: int,
+            index_bits: int = 3, frac_out: int = 0, round_out: bool = False,
+            num_zero: jnp.ndarray | None = None,
+            den_zero: jnp.ndarray | None = None, *,
+            in_kernel: bool = False) -> jnp.ndarray:
+    """Fused stages 2+3b: region lookup + ternary subtract + anti-log.
+
+    One-pass divider analogue of :func:`log_mul`; bit-identical to
+    ``region_corr`` followed by ``antilog_div``.
+    """
+    gate = None
+    if num_zero is not None or den_zero is not None:
+        nz = jnp.zeros(jnp.broadcast_shapes(la.shape, lb.shape), bool)
+        if num_zero is not None:
+            nz = nz | num_zero
+        if den_zero is not None:
+            nz = nz | den_zero
+        gate = ~nz
+    corr = region_corr(la, lb, tab, width, index_bits, gate=gate,
+                       in_kernel=in_kernel)
+    if _static_zero_table(tab, in_kernel):
+        corr = None
+    return antilog_div(la, lb, width, corr=corr, frac_out=frac_out,
+                       round_out=round_out, num_zero=num_zero,
+                       den_zero=den_zero, in_kernel=in_kernel)
+
+
 # ------------------------------------------------------------------ signs --
 def sign_split(x: jnp.ndarray, width: int):
     """Signed int -> (unsigned magnitude clamped to the lane, sign {-1,+1}).
@@ -304,6 +357,14 @@ def lane_op(a: jnp.ndarray, b: jnp.ndarray, tab: jnp.ndarray, *, width: int,
     la = lod_log(a, width, in_kernel=in_kernel)
     lb = lod_log(b, width, in_kernel=in_kernel)
     nz = (a != 0) & (b != 0)
+    if op == "mul":
+        # fused one-pass stage (gather folded into the anti-log add)
+        return log_mul(la, lb, tab, width, index_bits,
+                       round_out=round_out, zero=~nz, in_kernel=in_kernel)
+    if op == "div":
+        return log_div(la, lb, tab, width, index_bits, frac_out=frac_out,
+                       round_out=round_out, num_zero=a == 0,
+                       den_zero=b == 0, in_kernel=in_kernel)
     if _static_zero_table(tab, in_kernel):
         # drop the whole correction stage — corr=None is bit-identical to
         # adding a zero coefficient, and skips the ternary add's signed
@@ -324,23 +385,15 @@ def lane_op(a: jnp.ndarray, b: jnp.ndarray, tab: jnp.ndarray, *, width: int,
         cm = cd = c
     else:
         tab_m, tab_d = split_tables(tab, index_bits, op)
-        if op in ("mul", "mixed"):
-            cm = region_corr(la, lb, tab_m, width, index_bits, gate=nz,
-                             in_kernel=in_kernel)
-        if op in ("div", "mixed"):
-            cd = region_corr(la, lb, tab_d, width, index_bits, gate=nz,
-                             in_kernel=in_kernel)
-    if op in ("mul", "mixed"):
-        p = antilog_mul(la, lb, width, corr=cm, round_out=round_out,
-                        zero=~nz, in_kernel=in_kernel)
-    if op in ("div", "mixed"):
-        q = antilog_div(la, lb, width, corr=cd, frac_out=frac_out,
-                        round_out=round_out, num_zero=a == 0,
-                        den_zero=b == 0, in_kernel=in_kernel)
-    if op == "mul":
-        return p
-    if op == "div":
-        return q
+        cm = region_corr(la, lb, tab_m, width, index_bits, gate=nz,
+                         in_kernel=in_kernel)
+        cd = region_corr(la, lb, tab_d, width, index_bits, gate=nz,
+                         in_kernel=in_kernel)
+    p = antilog_mul(la, lb, width, corr=cm, round_out=round_out,
+                    zero=~nz, in_kernel=in_kernel)
+    q = antilog_div(la, lb, width, corr=cd, frac_out=frac_out,
+                    round_out=round_out, num_zero=a == 0,
+                    den_zero=b == 0, in_kernel=in_kernel)
     return jnp.where(mode != 0, p, q)
 
 

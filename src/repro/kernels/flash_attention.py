@@ -7,19 +7,31 @@ see EXPERIMENTS.md §Perf iteration 1). This kernel keeps the score tile in
 VMEM across the whole kv sweep: HBM traffic collapses to q/k/v reads + o
 writes.
 
-Grid: (batch*kv_heads, nq, nk), k innermost ("arbitrary"), with the online
-softmax running max/denominator and the output accumulator living in VMEM
-scratch across the nk steps.
-
 SIMDive tie-in (paper §3.2 divider): the final ``acc / l`` normalization
-optionally runs through a log-domain divider *inside the kernel* — a
-width-32 Mitchell datapath with F=24 fraction bits and the 64-region
-correction table, all in uint32 (the quotient here is <= 1, so no 64-bit
-product bus is needed). One subtraction + table add + shift replaces the
-float divide, exactly the paper's division-bearing-inner-loop story.
+optionally runs through the *shared* log-domain datapath stages
+(:mod:`repro.kernels.datapath`) inside the kernel — quantize the row to a
+per-row shared exponent, then LOD -> log -> region-corrected ternary add ->
+anti-log at ``frac_out`` fraction bits. One subtraction + table add + shift
+replaces the float divide, exactly the paper's division-bearing-inner-loop
+story. ``in_kernel=True`` pins the faithful Mosaic-safe stages; the host-side
+oracle (:func:`flash_attention_ref`) composes the same stages with the PR 4
+fast paths, bit-identical under ``SIMDIVE_FAITHFUL=1``.
 
-VMEM budget (defaults qc=kc=512, dh<=128): q/k/v tiles 3*512*128*2B
-+ scores 512*512*4B + acc 512*128*4B ~= 1.6 MiB — comfortably resident.
+Two schedules (RAPID, arXiv:2206.13970 — same datapath, new schedule):
+
+* ``pipeline_depth=0`` — grid (BH, nq, nk) with the k axis innermost
+  ("arbitrary"); Pallas streams k/v tiles via BlockSpecs and the online
+  max/denominator/accumulator live in VMEM scratch across the nk steps.
+* ``pipeline_depth=D>=1`` — grid (BH, nq); k/v stay in ANY/HBM space and the
+  kernel drives its own double-buffered DMA: D VMEM slots per operand, chunk
+  c+D-1's copy-in starts while chunk c computes. D=1 degenerates to a serial
+  copy-then-compute loop. Every depth is bit-identical to the depth-0 grid
+  schedule — same float ops in the same order, only the copies move.
+
+VMEM budget (defaults qc=kc=512, dh<=128): q tile 512*128*4B + D in-flight
+k/v tiles 2*D*512*128*4B + scores 512*512*4B + acc 512*128*4B ~= 1.6 MiB at
+D=1, +0.5 MiB per extra slot — comfortably resident (see kernels/README.md
+§Pipelining for the budget math).
 """
 from __future__ import annotations
 
@@ -31,59 +43,106 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.error_lut import build_table
-from .datapath import tpu_compiler_params
+from repro.core.mitchell import work_dtype
+from repro.core.simdive import SimdiveSpec
+from . import datapath as dp
+from .registry import resolve_backend
 
-__all__ = ["flash_attention_pallas", "kernel_div_u32"]
+__all__ = ["flash_attention_pallas", "flash_attention_ref", "softmax_div",
+           "DEFAULT_DIV_SPEC", "DEFAULT_FRAC_OUT"]
 
-F_DIV = 24  # fraction bits of the in-kernel divider (k<=31 needs 5+24<32)
-
-
-def _log2_fix(a_u32):
-    """Mitchell log at F_DIV fraction bits for uint32 inputs (branch-free)."""
-    a = a_u32
-    k = jnp.zeros_like(a)
-    v = a
-    for step in (16, 8, 4, 2, 1):
-        m = v >= jnp.uint32(1 << step)
-        k = jnp.where(m, k + jnp.uint32(step), k)
-        v = jnp.where(m, v >> jnp.uint32(step), v)
-    # left-align the fraction into F_DIV bits
-    sh_l = jnp.maximum(jnp.int32(F_DIV) - k.astype(jnp.int32), 0)
-    sh_r = jnp.maximum(k.astype(jnp.int32) - jnp.int32(F_DIV), 0)
-    frac = (a ^ (jnp.uint32(1) << k))
-    frac = (frac << sh_l.astype(jnp.uint32)) >> sh_r.astype(jnp.uint32)
-    return (k << jnp.uint32(F_DIV)) | frac
+#: divider config the attention op resolves to when no policy overrides it:
+#: width 16 + frac_out 15 keeps every anti-log shift < 32 and stays inside
+#: the f32-exact fast-path window (width + frac_out <= 31).
+DEFAULT_DIV_SPEC = SimdiveSpec(width=16, coeff_bits=8, index_bits=3)
+DEFAULT_FRAC_OUT = 15
 
 
-def kernel_div_u32(num, den, corr_tab, frac_out: int):
-    """SIMDive divider, width-32-in-uint32 (valid for quotients < 2^7).
+def _div_table(width: int, coeff_bits: int, index_bits: int):
+    """Divider correction table, built once per config (not per trace).
 
-    num, den: uint32 (>0 den); returns round(num/den * 2^frac_out) approx.
-    corr_tab: (64,) int32 region corrections at F_DIV scale.
+    ``build_table`` is host-cached numpy; converting here (rather than
+    caching the jnp array) keeps the value safe to request from inside a
+    jit trace — a cached tracer would leak across traces.
     """
-    ln = _log2_fix(num)
-    ld = _log2_fix(den)
-    mask = jnp.uint32((1 << F_DIV) - 1)
-    idx = (((ln & mask) >> jnp.uint32(F_DIV - 3)) << 3) | (
-        (ld & mask) >> jnp.uint32(F_DIV - 3))
-    corr = corr_tab[idx.astype(jnp.int32)]
-    ls = ln.astype(jnp.int32) - ld.astype(jnp.int32) + corr
-    I = ls >> F_DIV
-    Xs = (ls & jnp.int32((1 << F_DIV) - 1)).astype(jnp.uint32)
-    mant = Xs + jnp.uint32(1 << F_DIV)
-    sh = I + (frac_out - F_DIV)
-    pos = jnp.clip(sh, 0, 31).astype(jnp.uint32)
-    neg = jnp.clip(-sh, 0, 31).astype(jnp.uint32)
-    half = jnp.where(sh < 0,
-                     jnp.uint32(1) << (jnp.maximum(neg, 1) - 1).astype(jnp.uint32),
-                     jnp.uint32(0))
-    q = jnp.where(sh >= 0, mant << pos, (mant + half) >> neg)
-    return jnp.where(num == 0, jnp.zeros_like(q), q)
+    return jnp.asarray(build_table("div", width, coeff_bits, index_bits))
+
+
+def softmax_div(acc, l, tab, *, width: int, index_bits: int = 3,
+                frac_out: int = DEFAULT_FRAC_OUT, round_out: bool = True,
+                in_kernel: bool = False):
+    """Softmax normalization ``acc / l[..., None]`` on the SIMDive divider.
+
+    ``acc``: (..., dh) float32 signed accumulator rows; ``l``: (...,) > 0
+    denominators. Each row is quantized with a *per-row* shared exponent —
+    ``top = max(rowmax|acc|, l)`` anchors the scale so both operands use the
+    full ``width`` bits and the result is independent of how the rows were
+    blocked (autotuning q/kv chunks cannot move the numerics). The quotient
+    comes back at ``frac_out`` fraction bits and is folded back to float.
+
+    ``in_kernel=True`` pins the faithful Mosaic-safe stages (Pallas kernel
+    bodies); the default composes the PR 4 bit-exact fast paths when enabled.
+    """
+    num = jnp.abs(acc)
+    den = jnp.maximum(l, 1e-30)[..., None]
+    top = jnp.maximum(jnp.max(num, axis=-1, keepdims=True), den)
+    ex = jnp.floor(jnp.log2(jnp.maximum(top, jnp.float32(1e-30))))
+    sc = jnp.exp2(jnp.float32(width - 2) - ex)
+    lim = jnp.float32((1 << width) - 1)
+    dt = work_dtype(width)
+    qn = jnp.clip(jnp.round(num * sc), 0.0, lim).astype(dt)
+    qd = jnp.clip(jnp.round(den * sc), 1.0, lim).astype(dt)
+    quot = dp.lane_op(qn, jnp.broadcast_to(qd, qn.shape), tab, width=width,
+                      index_bits=index_bits, op="div", frac_out=frac_out,
+                      round_out=round_out, in_kernel=in_kernel)
+    out = quot.astype(jnp.float32) * jnp.float32(2.0 ** -frac_out)
+    return jnp.where(acc < 0, -out, out)
+
+
+def _online_step(q, k, v, m, l, acc, q0, k0, *, causal: bool, window: int,
+                 kv_len: int, scale: float):
+    """One (qc, kc) tile of the online softmax; pure function of the carry."""
+    qc, kc = q.shape[0], k.shape[0]
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale     # (qc, kc)
+    qpos = q0 + jax.lax.broadcasted_iota(jnp.int32, (qc, kc), 0)
+    kpos = k0 + jax.lax.broadcasted_iota(jnp.int32, (qc, kc), 1)
+    ok = kpos < kv_len
+    if causal:
+        ok &= kpos <= qpos
+    if window:
+        ok &= kpos > qpos - window
+    s = jnp.where(ok, s, -jnp.inf)
+
+    m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+    m_new = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+    p = jnp.exp(s - m_new[:, None])
+    c = jnp.exp(m - m_new)
+    l_new = l * c + jnp.sum(p, axis=-1)
+    acc_new = acc * c[:, None] + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    return m_new, l_new, acc_new
+
+
+def _finalize_tile(acc, l, tab, *, approx_div: bool, spec: SimdiveSpec,
+                   frac_out: int, out_dtype):
+    l = jnp.maximum(l, 1e-30)
+    if approx_div:
+        out = softmax_div(acc, l, tab, width=spec.width,
+                          index_bits=spec.index_bits, frac_out=frac_out,
+                          round_out=spec.round_output, in_kernel=True)
+    else:
+        out = acc / l[:, None]
+    return out.astype(out_dtype)
 
 
 def _kernel(q_ref, k_ref, v_ref, tab_ref, o_ref, m_sc, l_sc, acc_sc, *,
             nk: int, kc: int, causal: bool, window: int, scale: float,
-            approx_div: bool, frac_out: int = 16):
+            kv_len: int, q_offset: int, approx_div: bool,
+            spec: SimdiveSpec, frac_out: int):
+    """Depth-0 schedule: Pallas streams k/v tiles, carry lives in scratch."""
     kj = pl.program_id(2)
     qi = pl.program_id(1)
     qc = q_ref.shape[1]
@@ -94,72 +153,139 @@ def _kernel(q_ref, k_ref, v_ref, tab_ref, o_ref, m_sc, l_sc, acc_sc, *,
         l_sc[...] = jnp.zeros_like(l_sc)
         acc_sc[...] = jnp.zeros_like(acc_sc)
 
-    q = q_ref[0]                                   # (qc, dh)
-    k = k_ref[0]                                   # (kc, dh)
-    v = v_ref[0]
-    s = jax.lax.dot_general(
-        q, k, (((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.float32) * scale  # (qc, kc)
-    qpos = qi * qc + jax.lax.broadcasted_iota(jnp.int32, (qc, kc), 0)
-    kpos = kj * kc + jax.lax.broadcasted_iota(jnp.int32, (qc, kc), 1)
-    ok = jnp.ones((qc, kc), bool)
-    if causal:
-        ok &= kpos <= qpos
-    if window:
-        ok &= kpos > qpos - window
-    s = jnp.where(ok, s, -jnp.inf)
-
-    m_prev = m_sc[...]
-    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
-    m_new = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
-    p = jnp.exp(s - m_new[:, None])
-    c = jnp.exp(m_prev - m_new)
-    l_sc[...] = l_sc[...] * c + jnp.sum(p, axis=-1)
+    m_new, l_new, acc_new = _online_step(
+        q_ref[0], k_ref[0], v_ref[0], m_sc[...], l_sc[...], acc_sc[...],
+        qi * qc + q_offset, kj * kc,
+        causal=causal, window=window, kv_len=kv_len, scale=scale)
     m_sc[...] = m_new
-    acc_sc[...] = acc_sc[...] * c[:, None] + jax.lax.dot_general(
-        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)
+    l_sc[...] = l_new
+    acc_sc[...] = acc_new
 
     @pl.when(kj == nk - 1)
-    def _finalize():
-        acc = acc_sc[...]
-        l = jnp.maximum(l_sc[...], 1e-30)
-        if approx_div:
-            # SIMDive divider: quotient acc/l in the log domain (uint32)
-            SC = jnp.float32(1 << 16)
-            qn = jnp.clip(jnp.abs(acc) * SC, 0, 4e9).astype(jnp.uint32)
-            qd = jnp.maximum(l * SC, 1.0).astype(jnp.uint32)[:, None]
-            qd = jnp.broadcast_to(qd, qn.shape)
-            quot = kernel_div_u32(qn, qd, tab_ref[...], frac_out)
-            out = (jnp.sign(acc) * quot.astype(jnp.float32)
-                   * jnp.float32(2.0 ** -frac_out))
-        else:
-            out = acc / l[:, None]
-        o_ref[0] = out.astype(o_ref.dtype)
+    def _fin():
+        o_ref[0] = _finalize_tile(acc_sc[...], l_sc[...], tab_ref[...],
+                                  approx_div=approx_div, spec=spec,
+                                  frac_out=frac_out, out_dtype=o_ref.dtype)
+
+
+def _kernel_pipelined(q_ref, k_hbm, v_hbm, tab_ref, o_ref, *,
+                      nk: int, kc: int, depth: int, causal: bool,
+                      window: int, scale: float, kv_len: int, q_offset: int,
+                      approx_div: bool, spec: SimdiveSpec, frac_out: int,
+                      kv_dtype):
+    """Depth-D schedule: the kernel drives its own double-buffered k/v DMA.
+
+    Warm-up starts chunks 0..D-2; loop step c starts chunk c+D-1 into the
+    slot chunk c-1 just vacated ((c+D-1) % D == (c-1) % D), waits on chunk
+    c's slot, computes. D=1 is the serial copy-then-compute degenerate.
+    """
+    b = pl.program_id(0)
+    qi = pl.program_id(1)
+    qc, dh = q_ref.shape[1], q_ref.shape[2]
+    q = q_ref[0]
+
+    def body(k_sc, v_sc, k_sem, v_sem):
+        def dma(c, slot):
+            return (
+                pltpu.make_async_copy(
+                    k_hbm.at[b, pl.ds(c * kc, kc), :], k_sc.at[slot],
+                    k_sem.at[slot]),
+                pltpu.make_async_copy(
+                    v_hbm.at[b, pl.ds(c * kc, kc), :], v_sc.at[slot],
+                    v_sem.at[slot]),
+            )
+
+        for c in range(min(depth - 1, nk)):       # warm-up: fill the slots
+            for cp in dma(c, c % depth):
+                cp.start()
+
+        def step(c, carry):
+            m, l, acc = carry
+            nxt = c + depth - 1
+
+            @pl.when(nxt < nk)
+            def _prefetch():
+                for cp in dma(nxt, jax.lax.rem(nxt, depth)):
+                    cp.start()
+
+            slot = jax.lax.rem(c, depth)
+            for cp in dma(c, slot):
+                cp.wait()
+            return _online_step(
+                q, k_sc[slot], v_sc[slot], m, l, acc,
+                qi * qc + q_offset, c * kc,
+                causal=causal, window=window, kv_len=kv_len, scale=scale)
+
+        m0 = jnp.full((qc,), -jnp.inf, jnp.float32)
+        carry = (m0, jnp.zeros((qc,), jnp.float32),
+                 jnp.zeros((qc, dh), jnp.float32))
+        m, l, acc = jax.lax.fori_loop(0, nk, step, carry)
+        o_ref[0] = _finalize_tile(acc, l, tab_ref[...],
+                                  approx_div=approx_div, spec=spec,
+                                  frac_out=frac_out, out_dtype=o_ref.dtype)
+
+    pl.run_scoped(
+        body,
+        k_sc=pltpu.VMEM((depth, kc, dh), kv_dtype),
+        v_sc=pltpu.VMEM((depth, kc, dh), kv_dtype),
+        k_sem=pltpu.SemaphoreType.DMA((depth,)),
+        v_sem=pltpu.SemaphoreType.DMA((depth,)),
+    )
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("causal", "window", "q_chunk", "kv_chunk",
-                     "approx_div", "interpret"),
+    static_argnames=("spec", "causal", "window", "q_chunk", "kv_chunk",
+                     "pipeline_depth", "approx_div", "frac_out", "q_offset",
+                     "kv_len", "interpret"),
 )
-def flash_attention_pallas(q, k, v, *, causal=True, window=0, q_chunk=512,
-                           kv_chunk=512, approx_div=False, interpret=True):
+def flash_attention_pallas(q, k, v, *, spec: SimdiveSpec = DEFAULT_DIV_SPEC,
+                           causal=True, window=0, q_chunk=512, kv_chunk=512,
+                           pipeline_depth=0, approx_div=False,
+                           frac_out=DEFAULT_FRAC_OUT, q_offset=0,
+                           kv_len=None, interpret=None):
     """q: (BH, Sq, dh); k, v: (BH, Skv, dh) — heads pre-flattened & matched
-    (GQA callers repeat/reshape kv outside). Returns (BH, Sq, dh).
+    (GQA callers repeat/reshape kv outside; the registry's ``attention`` op
+    in ops.py does the padding/flattening bookkeeping). Returns (BH, Sq, dh).
+
+    ``kv_len`` masks trailing kv padding (defaults to Skv); ``q_offset``
+    shifts query positions for decode-style calls. ``interpret=None``
+    resolves the backend like every other kernel: compiled on TPU hosts,
+    interpret mode elsewhere.
     """
+    if interpret is None:
+        interpret = resolve_backend("auto") != "pallas-tpu"
     BH, Sq, dh = q.shape
     Skv = k.shape[1]
+    if kv_len is None:
+        kv_len = Skv
     qc = min(q_chunk, Sq)
     kc = min(kv_chunk, Skv)
     assert Sq % qc == 0 and Skv % kc == 0, "pad outside"
     nq, nk = Sq // qc, Skv // kc
-    tab = jnp.asarray(build_table("div", 32, 8))  # F=31 table; rescale below
-    # rescale table entries from F=31 to F_DIV resolution
-    tab = (tab.astype(jnp.int32) >> (31 - F_DIV)).astype(jnp.int32)
-    kern = functools.partial(
-        _kernel, nk=nk, kc=kc, causal=causal, window=window,
-        scale=dh ** -0.5, approx_div=approx_div)
+    tab = _div_table(spec.width, spec.coeff_bits, spec.index_bits)
+    common = dict(nk=nk, kc=kc, causal=causal, window=window,
+                  scale=dh ** -0.5, kv_len=kv_len, q_offset=q_offset,
+                  approx_div=approx_div, spec=spec, frac_out=frac_out)
+    if pipeline_depth:
+        kern = functools.partial(_kernel_pipelined, depth=int(pipeline_depth),
+                                 kv_dtype=k.dtype, **common)
+        return pl.pallas_call(
+            kern,
+            grid=(BH, nq),
+            in_specs=[
+                pl.BlockSpec((1, qc, dh), lambda b, i: (b, i, 0)),
+                pl.BlockSpec(memory_space=pltpu.ANY),
+                pl.BlockSpec(memory_space=pltpu.ANY),
+                pl.BlockSpec((tab.shape[0],), lambda b, i: (0,)),
+            ],
+            out_specs=pl.BlockSpec((1, qc, dh), lambda b, i: (b, i, 0)),
+            out_shape=jax.ShapeDtypeStruct((BH, Sq, dh), q.dtype),
+            compiler_params=dp.tpu_compiler_params(
+                dimension_semantics=("parallel", "parallel")),
+            interpret=interpret,
+        )(q, k, v, tab)
+    kern = functools.partial(_kernel, **common)
     return pl.pallas_call(
         kern,
         grid=(BH, nq, nk),
@@ -167,7 +293,7 @@ def flash_attention_pallas(q, k, v, *, causal=True, window=0, q_chunk=512,
             pl.BlockSpec((1, qc, dh), lambda b, i, j: (b, i, 0)),
             pl.BlockSpec((1, kc, dh), lambda b, i, j: (b, j, 0)),
             pl.BlockSpec((1, kc, dh), lambda b, i, j: (b, j, 0)),
-            pl.BlockSpec((64,), lambda b, i, j: (0,)),
+            pl.BlockSpec((tab.shape[0],), lambda b, i, j: (0,)),
         ],
         out_specs=pl.BlockSpec((1, qc, dh), lambda b, i, j: (b, i, 0)),
         out_shape=jax.ShapeDtypeStruct((BH, Sq, dh), q.dtype),
@@ -176,7 +302,65 @@ def flash_attention_pallas(q, k, v, *, causal=True, window=0, q_chunk=512,
             pltpu.VMEM((qc,), jnp.float32),
             pltpu.VMEM((qc, dh), jnp.float32),
         ],
-        compiler_params=tpu_compiler_params(
+        compiler_params=dp.tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(q, k, v, tab)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("spec", "causal", "window", "approx_div", "frac_out",
+                     "q_offset", "kv_len"),
+)
+def flash_attention_ref(q, k, v, *, spec: SimdiveSpec = DEFAULT_DIV_SPEC,
+                        causal=True, window=0, approx_div=False,
+                        frac_out=DEFAULT_FRAC_OUT, q_offset=0, kv_len=None):
+    """Dense jnp oracle on the kernel's (BH, S, dh) contract.
+
+    Exact softmax (not online), same masking semantics, and — under
+    ``approx_div`` — the *same* divider stages as the kernel, composed with
+    ``in_kernel=False`` so the PR 4 fast paths apply (bit-identical to the
+    faithful stages, enforced by tests/test_fastpath.py). Memory is bounded
+    by processing q in chunks: each step materializes (BH, qc, Skv), never
+    the full score cube, so long-context conformance shapes stay cheap.
+    """
+    BH, Sq, dh = q.shape
+    Skv = k.shape[1]
+    if kv_len is None:
+        kv_len = Skv
+    qc = min(512, Sq)
+    pad = (-Sq) % qc
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0)))
+    scale = dh ** -0.5
+    kpos = jnp.arange(Skv)[None, :]
+    tab = _div_table(spec.width, spec.coeff_bits, spec.index_bits)
+
+    def chunk(i):
+        qi = q[:, i * qc:(i + 1) * qc]
+        s = jnp.einsum("bqd,btd->bqt", qi, k,
+                       preferred_element_type=jnp.float32) * scale
+        qpos = q_offset + i * qc + jnp.arange(qc)[:, None]
+        ok = kpos < kv_len
+        if causal:
+            ok = ok & (kpos <= qpos)
+        if window:
+            ok = ok & (kpos > qpos - window)
+        s = jnp.where(ok[None], s, -jnp.inf)
+        m = jnp.max(s, axis=-1)
+        m = jnp.where(jnp.isfinite(m), m, 0.0)
+        p = jnp.exp(s - m[..., None])
+        l = jnp.maximum(jnp.sum(p, axis=-1), 1e-30)
+        acc = jnp.einsum("bqt,btd->bqd", p.astype(v.dtype), v,
+                         preferred_element_type=jnp.float32)
+        if approx_div:
+            out = softmax_div(acc, l, tab, width=spec.width,
+                              index_bits=spec.index_bits, frac_out=frac_out,
+                              round_out=spec.round_output, in_kernel=False)
+        else:
+            out = acc / l[..., None]
+        return out.astype(q.dtype)
+
+    out = jnp.concatenate([chunk(i) for i in range((Sq + pad) // qc)], axis=1)
+    return out[:, :Sq]

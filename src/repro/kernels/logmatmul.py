@@ -2,32 +2,41 @@
 
 C[m,n] = sum_k  sign * SIMDive(|X[m,k]|, |W[k,n]|)
 
-Grid (M/bm, N/bn, K/bk) with the K axis innermost ("arbitrary" semantics):
-each step loads an (bm, bk) X-tile and (bk, bn) W-tile into VMEM and walks
-the bk slice in ``k_unroll``-wide chunks — each fori_loop step materializes
+Two schedules over the same tile math (:func:`_tile_partial` — sign split,
+one LOD/log pass per tile, then a ``k_unroll``-wide chunked sweep through
+the fused correct+anti-log stage :func:`datapath.log_mul`):
+
+* ``pipeline_depth=0`` — grid (M/bm, N/bn, K/bk) with the K axis innermost
+  ("arbitrary" semantics): Pallas streams the (bm, bk)/(bk, bn) operand
+  tiles via BlockSpecs and the int32 output tile accumulates across the K
+  steps.
+* ``pipeline_depth=D>=1`` — RAPID-style software pipelining (arXiv:
+  2206.13970): grid (M/bm, N/bn), operands stay in ANY/HBM space, and the
+  kernel drives its own DMA with D VMEM slots per operand — tile k+D-1's
+  copy-in starts while tile k computes, so copy-in latency hides behind the
+  log-domain sweep. D=1 is the serial copy-then-compute degenerate; D=2 is
+  classic double buffering.
+
+``k_unroll`` chunks the in-tile K sweep — each fori_loop step materializes
 a (bm, k_unroll, bn) rank-``k_unroll`` partial in VMEM (one vector add +
 anti-log shift per element — no MXU multiply) and reduces it into the int32
-output tile. ``k_unroll = 1`` is the original serial rank-1 sweep; wider
-chunks trade VMEM for far fewer loop iterations and better VPU occupancy
-(RAPID's pipelining argument, arXiv:2206.13970 — the datapath stays, only
-the schedule changes). ``k_unroll`` is an autotuned axis: the registry's
-block candidates carry it as a 4th component (see ops.py). Signs are split
-and rejoined outside the log path via the shared
-:mod:`repro.kernels.datapath` sign stages, standard for sign-magnitude log
-arithmetic; the log front-end runs *once* per tile, outside the K loop —
-only the correction + anti-log stages ride the chunked sweep.
+accumulator. ``k_unroll = 1`` is the original serial rank-1 sweep; wider
+chunks trade VMEM for fewer loop iterations and better VPU occupancy. Both
+``k_unroll`` and ``pipeline_depth`` are autotuned axes: the registry's block
+candidates carry them as 4th/5th components (see ops.py).
 
-VMEM budget per step: bm*bk + bk*bn input words + bm*bn accumulator +
-bm*k_unroll*bn chunk partials — (128, 128, 128) int32 with k_unroll = 16 is
-3 * 64 KiB + 1 MiB, far under the ~16 MiB/core budget; the MXU-aligned
-128-multiples keep layouts native.
+VMEM budget per step: bm*bk + bk*bn input words per pipeline slot +
+bm*bn accumulator + bm*k_unroll*bn chunk partials — (128, 128, 128) int32
+with k_unroll = 16 and depth = 2 is 5 * 64 KiB + 1 MiB, far under the
+~16 MiB/core budget; the MXU-aligned 128-multiples keep layouts native.
 
 Exactness contract: for width 8 the int32 accumulation is exact (products
 < 2^16, K < 2^15) and the kernel must match ref.py bit-for-bit; width 16
 accumulates in int32 too and is exact for K*max_product < 2^31 (callers
-scale). Any ``k_unroll`` produces bit-identical sums — int32 addition is
-associative (wrap-around included), so the chunked reduction is a pure
-schedule change. This kernel exists because the *emulation* of the paper's
+scale). Any ``k_unroll`` x ``pipeline_depth`` combination produces
+bit-identical sums — int32 addition is associative (wrap-around included),
+so both the chunked reduction and the pipelined K sweep are pure schedule
+changes. This kernel exists because the *emulation* of the paper's
 arithmetic must run at usable speed on TPU for accuracy studies; the
 deployment path for weights is packed int8 + MXU (see DESIGN.md §2).
 """
@@ -39,24 +48,33 @@ import math
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.simdive import SimdiveSpec
 from . import datapath as dp
 
-__all__ = ["logmatmul_pallas", "DEFAULT_K_UNROLL", "K_UNROLL_CANDIDATES"]
+__all__ = ["logmatmul_pallas", "DEFAULT_K_UNROLL", "K_UNROLL_CANDIDATES",
+           "PIPELINE_CANDIDATES"]
 
 DEFAULT_BLOCKS = (128, 128, 128)  # (bm, bn, bk)
 DEFAULT_K_UNROLL = 8
-#: the autotune axis joined to the block candidates in ops.py
+#: the autotune axes joined to the block candidates in ops.py
 K_UNROLL_CANDIDATES = (1, 4, 8, 16)
+PIPELINE_CANDIDATES = (0, 2, 4)
 
 
-def _kernel(x_ref, w_ref, tab_ref, o_ref, *, spec: SimdiveSpec, bk: int,
-            k_unroll: int):
+def _tile_partial(x_tile, w_tile, tab, *, spec: SimdiveSpec, bk: int,
+                  k_unroll: int):
+    """int32 partial product-sum of one (bm, bk) x (bk, bn) tile pair.
+
+    The log front-end (sign split + LOD/log) runs *once* per tile, outside
+    the K loop; only the fused correct+anti-log stage rides the chunked
+    sweep. Shared verbatim by both kernel schedules so bit-identity between
+    them is structural.
+    """
     width = spec.width
-    tab = tab_ref[...]
-    xm, sx = dp.sign_split(x_ref[...], width)       # (bm, bk) magnitudes
-    wm, sw = dp.sign_split(w_ref[...], width)       # (bk, bn)
+    xm, sx = dp.sign_split(x_tile, width)           # (bm, bk) magnitudes
+    wm, sw = dp.sign_split(w_tile, width)           # (bk, bn)
     lx = dp.lod_log(xm, width, in_kernel=True)
     lw = dp.lod_log(wm, width, in_kernel=True)
     zx = xm == 0
@@ -67,20 +85,23 @@ def _kernel(x_ref, w_ref, tab_ref, o_ref, *, spec: SimdiveSpec, bk: int,
         k0 = j * u
         la = jax.lax.dynamic_slice_in_dim(lx, k0, u, axis=1)[:, :, None]
         lb = jax.lax.dynamic_slice_in_dim(lw, k0, u, axis=0)[None, :, :]
-        corr = dp.region_corr(la, lb, tab, width, spec.index_bits,
-                              in_kernel=True)
         zj = (jax.lax.dynamic_slice_in_dim(zx, k0, u, axis=1)[:, :, None]
               | jax.lax.dynamic_slice_in_dim(zw, k0, u, axis=0)[None, :, :])
-        p = dp.antilog_mul(la, lb, width, corr=corr,
-                           round_out=spec.round_output, zero=zj,
-                           in_kernel=True)        # (bm, u, bn)
+        p = dp.log_mul(la, lb, tab, width, spec.index_bits,
+                       round_out=spec.round_output, zero=zj,
+                       in_kernel=True)              # (bm, u, bn)
         s = (jax.lax.dynamic_slice_in_dim(sx, k0, u, axis=1)[:, :, None]
              * jax.lax.dynamic_slice_in_dim(sw, k0, u, axis=0)[None, :, :])
         return acc + jnp.sum(dp.sign_join(p, s), axis=1, dtype=jnp.int32)
 
-    partial_sum = jax.lax.fori_loop(
-        0, bk // u, body, jnp.zeros(o_ref.shape, jnp.int32)
-    )
+    shape = (x_tile.shape[0], w_tile.shape[1])
+    return jax.lax.fori_loop(0, bk // u, body, jnp.zeros(shape, jnp.int32))
+
+
+def _kernel(x_ref, w_ref, tab_ref, o_ref, *, spec: SimdiveSpec, bk: int,
+            k_unroll: int):
+    partial_sum = _tile_partial(x_ref[...], w_ref[...], tab_ref[...],
+                                spec=spec, bk=bk, k_unroll=k_unroll)
 
     @pl.when(pl.program_id(2) == 0)
     def _init():
@@ -89,11 +110,69 @@ def _kernel(x_ref, w_ref, tab_ref, o_ref, *, spec: SimdiveSpec, bk: int,
     o_ref[...] += partial_sum
 
 
+def _kernel_pipelined(x_hbm, w_hbm, tab_ref, o_ref, *, spec: SimdiveSpec,
+                      bm: int, bn: int, bk: int, nk: int, k_unroll: int,
+                      depth: int, in_dtype):
+    """Depth-D schedule: operand tiles arrive by explicit double-buffered
+    DMA while the previous tile's log-domain sweep computes.
+
+    Warm-up starts tiles 0..D-2; loop step c starts tile c+D-1 into the
+    slot tile c-1 just vacated ((c+D-1) % D == (c-1) % D), waits on tile
+    c's slot, computes. D=1 degenerates to serial copy-then-compute.
+    """
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    tab = tab_ref[...]
+
+    def body(x_sc, w_sc, x_sem, w_sem):
+        def dma(c, slot):
+            return (
+                pltpu.make_async_copy(
+                    x_hbm.at[pl.ds(i * bm, bm), pl.ds(c * bk, bk)],
+                    x_sc.at[slot], x_sem.at[slot]),
+                pltpu.make_async_copy(
+                    w_hbm.at[pl.ds(c * bk, bk), pl.ds(j * bn, bn)],
+                    w_sc.at[slot], w_sem.at[slot]),
+            )
+
+        for c in range(min(depth - 1, nk)):       # warm-up: fill the slots
+            for cp in dma(c, c % depth):
+                cp.start()
+
+        def step(c, acc):
+            nxt = c + depth - 1
+
+            @pl.when(nxt < nk)
+            def _prefetch():
+                for cp in dma(nxt, jax.lax.rem(nxt, depth)):
+                    cp.start()
+
+            slot = jax.lax.rem(c, depth)
+            for cp in dma(c, slot):
+                cp.wait()
+            return acc + _tile_partial(x_sc[slot], w_sc[slot], tab,
+                                       spec=spec, bk=bk, k_unroll=k_unroll)
+
+        o_ref[...] = jax.lax.fori_loop(
+            0, nk, step, jnp.zeros((bm, bn), jnp.int32))
+
+    pl.run_scoped(
+        body,
+        x_sc=pltpu.VMEM((depth, bm, bk), in_dtype),
+        w_sc=pltpu.VMEM((depth, bk, bn), in_dtype),
+        x_sem=pltpu.SemaphoreType.DMA((depth,)),
+        w_sem=pltpu.SemaphoreType.DMA((depth,)),
+    )
+
+
 @functools.partial(
-    jax.jit, static_argnames=("spec", "blocks", "k_unroll", "interpret")
+    jax.jit,
+    static_argnames=("spec", "blocks", "k_unroll", "pipeline_depth",
+                     "interpret"),
 )
 def logmatmul_pallas(x, w, spec: SimdiveSpec, blocks=DEFAULT_BLOCKS,
                      k_unroll: int = DEFAULT_K_UNROLL,
+                     pipeline_depth: int = 0,
                      interpret: bool = True):
     """(M,K) @ (K,N) with SIMDive scalar products; int32 result (no scales).
 
@@ -101,6 +180,8 @@ def logmatmul_pallas(x, w, spec: SimdiveSpec, blocks=DEFAULT_BLOCKS,
     and scale bookkeeping live in ops.py / repro.core.approx).
     ``k_unroll`` chunks the in-tile K sweep; it is snapped down to a
     divisor of the (possibly shape-clamped) bk so every chunk is full.
+    ``pipeline_depth >= 1`` switches to the explicit double-buffered DMA
+    schedule (bit-identical output at any depth).
     """
     assert x.ndim == 2 and w.ndim == 2 and x.shape[1] == w.shape[0]
     M, K = x.shape
@@ -108,8 +189,27 @@ def logmatmul_pallas(x, w, spec: SimdiveSpec, blocks=DEFAULT_BLOCKS,
     bm, bn, bk = (min(blocks[0], M), min(blocks[1], N), min(blocks[2], K))
     assert M % bm == 0 and N % bn == 0 and K % bk == 0
     u = math.gcd(max(int(k_unroll), 1), bk)
-    grid = (M // bm, N // bn, K // bk)
     tab = dp.op_table("mul", spec.width, spec.coeff_bits, spec.index_bits)
+    if pipeline_depth:
+        kern = functools.partial(
+            _kernel_pipelined, spec=spec, bm=bm, bn=bn, bk=bk, nk=K // bk,
+            k_unroll=u, depth=int(pipeline_depth), in_dtype=x.dtype)
+        return pl.pallas_call(
+            kern,
+            grid=(M // bm, N // bn),
+            in_specs=[
+                pl.BlockSpec(memory_space=pltpu.ANY),
+                pl.BlockSpec(memory_space=pltpu.ANY),
+                pl.BlockSpec((tab.shape[0],), lambda i, j: (0,)),
+            ],
+            out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((M, N), jnp.int32),
+            interpret=interpret,
+            compiler_params=dp.tpu_compiler_params(
+                dimension_semantics=("parallel", "parallel")
+            ),
+        )(x, w, tab)
+    grid = (M // bm, N // bn, K // bk)
     kern = functools.partial(_kernel, spec=spec, bk=bk, k_unroll=u)
     return pl.pallas_call(
         kern,

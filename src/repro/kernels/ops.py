@@ -20,6 +20,12 @@ from repro.core.fastpath import fastpath_enabled
 from repro.core.simdive import SimdiveSpec, simdive_mul
 from . import ref as _ref
 from .elemwise import DEFAULT_BLOCK as ELEMWISE_BLOCK, elemwise_pallas
+from .flash_attention import (
+    DEFAULT_DIV_SPEC,
+    DEFAULT_FRAC_OUT,
+    flash_attention_pallas,
+    flash_attention_ref,
+)
 from .logmatmul import (
     DEFAULT_BLOCKS as MATMUL_BLOCKS,
     DEFAULT_K_UNROLL,
@@ -28,7 +34,8 @@ from .logmatmul import (
 from .packed_simd import DEFAULT_BLOCK as PACKED_BLOCK, packed_pallas
 from .registry import get_op, register_op
 
-__all__ = ["simdive_elemwise", "simdive_packed", "simdive_matmul_int"]
+__all__ = ["simdive_elemwise", "simdive_packed", "simdive_matmul_int",
+           "simdive_attention"]
 
 
 def _pad2d(x, bm, bn, fill=0):
@@ -97,11 +104,16 @@ def _matmul_int_ref(x, w, *, spec):
 
 
 def _split_matmul_block(block):
-    """A matmul block is (bm, bn, bk) or (bm, bn, bk, k_unroll): the 4th
-    component is the autotuned in-tile K chunk width (see logmatmul.py)."""
+    """A matmul block is (bm, bn, bk), (bm, bn, bk, k_unroll) or
+    (bm, bn, bk, k_unroll, pipeline_depth): the 4th component is the
+    autotuned in-tile K chunk width and the 5th the double-buffer depth of
+    the pipelined K sweep (see logmatmul.py). Shorter tuples stay accepted
+    and mean the default unroll / the unpipelined grid schedule."""
+    if len(block) == 5:
+        return tuple(block[:3]), int(block[3]), int(block[4])
     if len(block) == 4:
-        return tuple(block[:3]), int(block[3])
-    return tuple(block), DEFAULT_K_UNROLL
+        return tuple(block[:3]), int(block[3]), 0
+    return tuple(block), DEFAULT_K_UNROLL, 0
 
 
 def _matmul_int_pallas(x, w, *, spec, block, interpret):
@@ -109,12 +121,13 @@ def _matmul_int_pallas(x, w, *, spec, block, interpret):
     x2 = x.reshape(-1, x.shape[-1])
     M, K = x2.shape
     N = w.shape[1]
-    (bm_, bn_, bk_), k_unroll = _split_matmul_block(block)
+    (bm_, bn_, bk_), k_unroll, depth = _split_matmul_block(block)
     bm, bn, bk = min(bm_, M), min(bn_, N), min(bk_, K)
     xp = _pad2d(x2, bm, bk)
     wp = _pad2d(w, bk, bn)
     out = logmatmul_pallas(xp, wp, spec, blocks=(bm, bn, bk),
-                           k_unroll=k_unroll, interpret=interpret)
+                           k_unroll=k_unroll, pipeline_depth=depth,
+                           interpret=interpret)
     return out[:M, :N].reshape(*lead, N)
 
 
@@ -176,6 +189,44 @@ def _matmul_emul_pallas(qx, sx, qw, sw, *, spec, block, interpret,
                               interpret=interpret).astype(jnp.int64)
 
 
+# -------------------------------------------------------------- attention --
+def _attention_ref(q, k, v, *, spec, causal=True, window=0, approx_div=True,
+                   frac_out=DEFAULT_FRAC_OUT, q_offset=0):
+    return flash_attention_ref(q, k, v, spec=spec, causal=causal,
+                               window=window, approx_div=approx_div,
+                               frac_out=frac_out, q_offset=q_offset)
+
+
+def _split_attention_block(block):
+    """An attention block is (q_chunk, kv_chunk) or (q_chunk, kv_chunk,
+    pipeline_depth): the 3rd component selects the double-buffered kv-sweep
+    schedule (see flash_attention.py)."""
+    if len(block) == 3:
+        return int(block[0]), int(block[1]), int(block[2])
+    return int(block[0]), int(block[1]), 0
+
+
+def _attention_pallas(q, k, v, *, spec, block, interpret, causal=True,
+                      window=0, approx_div=True, frac_out=DEFAULT_FRAC_OUT,
+                      q_offset=0):
+    qc, kc, depth = _split_attention_block(block)
+    BH, Sq, dh = q.shape
+    Skv = k.shape[1]
+    qc, kc = min(qc, Sq), min(kc, Skv)
+    pq, pk = (-Sq) % qc, (-Skv) % kc
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0)))
+    out = flash_attention_pallas(
+        q, k, v, spec=spec, causal=causal, window=window, q_chunk=qc,
+        kv_chunk=kc, pipeline_depth=depth, approx_div=approx_div,
+        frac_out=frac_out, q_offset=q_offset, kv_len=Skv,
+        interpret=interpret)
+    return out[:, :Sq]
+
+
 # ------------------------------------------------------------------- sqrt --
 def _sqrt_ref(a, *, spec, frac_out=0):
     from repro.core.simdive import simdive_sqrt
@@ -198,15 +249,19 @@ register_op(
     default_block=PACKED_BLOCK,
     block_candidates=((64, 128), (128, 256), (256, 256)),
 )
-# matmul blocks carry the k_unroll autotune axis as a 4th component
-# (K_UNROLL_CANDIDATES in logmatmul.py); 3-tuples stay accepted and mean
-# the default unroll.
+# matmul blocks carry the k_unroll autotune axis as a 4th component and the
+# pipeline_depth axis as a 5th (K_UNROLL_CANDIDATES / PIPELINE_CANDIDATES in
+# logmatmul.py); shorter tuples stay accepted and mean the default unroll /
+# the unpipelined grid schedule.
 _MATMUL_CANDIDATES = (
     (128, 128, 128, 1),
     (128, 128, 128, 4),
     (128, 128, 128, 8),
     (128, 128, 128, 16),
     (64, 128, 256, 8),
+    (128, 128, 128, 8, 2),
+    (128, 128, 128, 8, 4),
+    (64, 128, 256, 8, 2),
 )
 register_op(
     "matmul_int",
@@ -221,6 +276,21 @@ register_op(
     pallas=_matmul_emul_pallas,
     default_block=MATMUL_BLOCKS + (DEFAULT_K_UNROLL,),
     block_candidates=_MATMUL_CANDIDATES,
+)
+# attention blocks are (q_chunk, kv_chunk[, pipeline_depth]); the depth
+# variants run the explicit double-buffered kv sweep (bit-identical output)
+_ATTENTION_CANDIDATES = (
+    (256, 256),
+    (512, 512),
+    (512, 512, 2),
+    (1024, 512, 2),
+)
+register_op(
+    "attention",
+    ref=_attention_ref,
+    pallas=_attention_pallas,
+    default_block=(512, 512),
+    block_candidates=_ATTENTION_CANDIDATES,
 )
 register_op("sqrt", ref=_sqrt_ref)   # Pallas impl: future PR, plugs in here
 
@@ -244,3 +314,21 @@ def simdive_matmul_int(x, w, spec: SimdiveSpec, backend: str = "auto",
                        blocks=None):
     """Signed int32 (…,K) @ (K,N) with SIMDive products (int32 result)."""
     return get_op("matmul_int", spec, backend, block=blocks)(x, w)
+
+
+def simdive_attention(q, k, v, spec: SimdiveSpec | None = None, *,
+                      causal: bool = True, window: int = 0,
+                      approx_div: bool = True,
+                      frac_out: int = DEFAULT_FRAC_OUT, q_offset: int = 0,
+                      backend: str = "auto", block=None):
+    """Flash attention with the SIMDive softmax divider.
+
+    q: (BH, Sq, dh); k, v: (BH, Skv, dh) — heads pre-flattened & matched
+    (GQA callers repeat/reshape kv outside; models/layers.py does this).
+    ``spec`` picks the divider config (defaults to the width-16 attention
+    divider); padding to chunk multiples happens inside.
+    """
+    spec = DEFAULT_DIV_SPEC if spec is None else spec
+    return get_op("attention", spec, backend, block=block)(
+        q, k, v, causal=causal, window=window, approx_div=approx_div,
+        frac_out=frac_out, q_offset=q_offset)

@@ -36,6 +36,7 @@ __all__ = [
     "BoundOp",
     "register_op",
     "registered_ops",
+    "op_default_block",
     "get_op",
     "resolve_backend",
     "shape_bucket",
@@ -100,6 +101,17 @@ def _ensure_builtin_ops() -> None:
 def registered_ops() -> tuple[str, ...]:
     _ensure_builtin_ops()
     return tuple(sorted(_REGISTRY))
+
+
+def op_default_block(name: str) -> tuple | None:
+    """The registered default block of op ``name`` (None for ref-only ops).
+
+    Introspection for traffic models (launch/dryrun.py prices the VMEM
+    tiles of the kernel the registry would serve); autotuned winners
+    override this at dispatch time, per shape bucket."""
+    _ensure_builtin_ops()
+    entry = _REGISTRY.get(name)
+    return None if entry is None else entry.default_block
 
 
 def _on_tpu() -> bool:

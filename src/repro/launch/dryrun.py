@@ -488,6 +488,8 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
 def _compile_costs(lowered, fuse_pairs: tuple = ()):
     compiled = lowered.compile()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):    # CPU backend: one dict per device
+        cost = cost[0] if cost else {}
     txt = compiled.as_text()
     return {
         "flops": float(cost.get("flops", 0.0)),
@@ -497,6 +499,25 @@ def _compile_costs(lowered, fuse_pairs: tuple = ()):
         "bytes_v2_noflash": traffic_v2(txt),
         "coll": collective_bytes(txt),
     }
+
+
+def _attention_fuse_pairs(cfg) -> tuple:
+    """(q_chunk, kv_chunk) trailing-dim pairs that stay VMEM-resident.
+
+    The model config's scan chunks tag the score tiles in the lowered HLO;
+    the registry's ``attention`` op block — what ``get_op('attention',...)``
+    would serve through the policy-governed routing in models/layers.py —
+    is added when it differs, so the v2 traffic model prices the tiles the
+    registered kernel actually keeps resident (autotuned winners override
+    the default per shape bucket at dispatch time, same first two
+    components)."""
+    from repro.kernels.registry import op_default_block
+
+    pairs = {(cfg.attn_q_chunk, cfg.attn_kv_chunk)}
+    blk = op_default_block("attention")
+    if blk:
+        pairs.add((int(blk[0]), int(blk[1])))
+    return tuple(sorted(pairs))
 
 
 def analyze(lowered, mesh, meta, arch=None, shape_name=None,
@@ -526,8 +547,7 @@ def analyze(lowered, mesh, meta, arch=None, shape_name=None,
     hybrid = cfg.family == "hybrid"
     l1_layers = cfg.hybrid_period if hybrid else 1
     units = (cfg.n_layers // cfg.hybrid_period) if hybrid else cfg.n_layers
-    qc, kc = cfg.attn_q_chunk, cfg.attn_kv_chunk
-    fuse_pairs = ((qc, kc),)   # the Pallas flash kernel's VMEM score tiles
+    fuse_pairs = _attention_fuse_pairs(cfg)  # the kernel's VMEM score tiles
     c0 = _compile_costs(lower_cell(arch, shape_name, multi_pod,
                                    layers_override=0, unroll=True,
                                    **lower_kw)[0], fuse_pairs)

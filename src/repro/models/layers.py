@@ -27,7 +27,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.core.approx import ApproxConfig, approx_matmul, _fixed_point_div
+from repro.core.approx import ApproxConfig, approx_matmul, attention_div
+from repro.kernels.registry import get_op, resolve_backend
 from repro.launch.sharding import shard
 
 EXACT = ApproxConfig()
@@ -150,12 +151,41 @@ def apply_rope(x, cos, sin, rot_dims):
 
 # -------------------------------------------------------------- attention --
 def _finalize(acc, l, approx: ApproxConfig):
-    """acc / l — softmax normalization; SIMDive divider when enabled."""
+    """acc / l — softmax normalization; SIMDive divider when enabled.
+
+    The approximate branch is the logical ``'attention'`` op: a policy
+    entry for ``op='attention'`` (layer-scoped first) picks the divider's
+    width/coeff_bits/index_bits/frac_out, same per-row quantization as the
+    Pallas kernel's in-kernel finalize.
+    """
     if approx.enabled and approx.use_in_softmax:
-        l_b = jnp.broadcast_to(l[..., None], acc.shape)
-        pos = _fixed_point_div(jnp.abs(acc), l_b, approx)
-        return jnp.sign(acc) * pos
+        return attention_div(acc, l, approx)
     return acc / l[..., None]
+
+
+def _flash_attention_kernel(q, k, v, *, causal, window, approx: ApproxConfig,
+                            q_offset, spec, backend):
+    """Serve attention from the registry's Pallas kernel (serving path —
+    no custom VJP; the jnp scan below remains the differentiable path).
+
+    GQA bookkeeping: flatten to the kernel's matched-heads (BH, S, dh)
+    contract by repeating kv over the group dim; block selection (q/kv
+    chunks, pipeline depth) is the registry autotuner's job.
+    """
+    B, Sq, KVH, G, dh = q.shape
+    Skv = k.shape[1]
+    qf = q.transpose(0, 2, 3, 1, 4).reshape(B * KVH * G, Sq, dh)
+    kf = jnp.repeat(k.transpose(0, 2, 1, 3), G, axis=1).reshape(
+        B * KVH * G, Skv, dh)
+    vf = jnp.repeat(v.transpose(0, 2, 1, 3), G, axis=1).reshape(
+        B * KVH * G, Skv, dh)
+    _, _, frac_out = approx.resolve_attention()
+    out = get_op("attention", spec, backend)(
+        qf, kf, vf, causal=causal, window=window,
+        approx_div=approx.enabled and approx.use_in_softmax,
+        frac_out=frac_out, q_offset=q_offset)
+    out = out.reshape(B, KVH, G, Sq, dh).transpose(0, 3, 1, 2, 4)
+    return out.astype(q.dtype)
 
 
 def flash_attention(q, k, v, *, causal=True, window=0, q_chunk=1024,
@@ -167,7 +197,19 @@ def flash_attention(q, k, v, *, causal=True, window=0, q_chunk=1024,
     (Mixtral). ``q_offset`` shifts absolute q positions (cache prefill).
     Per-(q,kv)-chunk compute is wrapped in jax.checkpoint so the backward
     pass never materializes more than one (qc, kc) score tile per step.
+
+    Backend routing: ``approx.resolve('attention')`` (policy entry first,
+    then ``approx.backend``) decides who serves the whole attention — a
+    pallas-* backend dispatches the registry's fused flash kernel
+    (autotuned q/kv chunks + pipelined kv sweep); anything else runs the
+    differentiable jnp scan below with only the finalize divider
+    approximated.
     """
+    spec, backend = approx.resolve("attention", approx.div_width)
+    if resolve_backend(backend).startswith("pallas"):
+        return _flash_attention_kernel(
+            q, k, v, causal=causal, window=window, approx=approx,
+            q_offset=q_offset, spec=spec, backend=backend)
     B, Sq0, KVH, G, dh = q.shape
     Skv0 = k.shape[1]
     qc = min(q_chunk, Sq0)

@@ -56,12 +56,13 @@ class PolicyEntry:
     never affects dispatch. Hashable on purpose: ``ApproxConfig`` (a jit
     static argument) embeds policies whole.
     """
-    op: str                      # logical op served: 'mul'|'div'|'matmul'
+    op: str                      # logical op: 'mul'|'div'|'matmul'|'attention'
     width: int
     coeff_bits: int
     index_bits: int = 3
     backend: str = "ref"
     kernel: str = "elemwise"
+    frac_out: int | None = None  # divider output bits (None = caller's knob)
     layer: str | None = None     # None = the op's default entry
     stats: tuple = ()
 

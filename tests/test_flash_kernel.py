@@ -11,8 +11,23 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.kernels.flash_attention import flash_attention_pallas
+from repro.core import SimdiveSpec
+from repro.core.approx import ApproxConfig
+from repro.core.fastpath import faithful_mode
+from repro.kernels import get_op, simdive_attention
+from repro.kernels.flash_attention import (
+    DEFAULT_DIV_SPEC,
+    flash_attention_pallas,
+    flash_attention_ref,
+)
 from repro.models.layers import flash_attention
+
+
+def _qkv(BH, S, dh, seed=0):
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return (jax.random.normal(kq, (BH, S, dh), jnp.float32),
+            jax.random.normal(kk, (BH, S, dh), jnp.float32),
+            jax.random.normal(kv, (BH, S, dh), jnp.float32))
 
 
 def dense_ref(q, k, v, causal=True, window=0):
@@ -100,3 +115,97 @@ def test_kernel_simdive_divider_close():
     denom = np.maximum(np.abs(np.asarray(exact)), 0.05)
     assert np.median(err / denom) < 0.01
     assert np.mean(err / denom) < 0.03
+
+
+# ------------------------------------------------ registry-routed op --
+@pytest.mark.parametrize("backend", ["ref", "pallas-interpret"])
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 48),
+                                           (False, 0)])
+def test_get_op_fast_vs_faithful_bitwise(backend, causal, window):
+    """Through ``get_op('attention', ...)`` the fast divider paths must be
+    bit-identical to the hardware-faithful stages (ISSUE 4 contract), for
+    both backends and every masking mode."""
+    q, k, v = _qkv(2, 64, 16, seed=3)
+    bound = get_op("attention", DEFAULT_DIV_SPEC, backend, block=(32, 32))
+    kw = dict(causal=causal, window=window, approx_div=True)
+    with faithful_mode(False):
+        fast = np.asarray(bound(q, k, v, **kw))
+    with faithful_mode():
+        faith = np.asarray(bound(q, k, v, **kw))
+    assert np.array_equal(fast, faith)
+
+
+@pytest.mark.parametrize("approx_div", [False, True])
+def test_get_op_backends_agree(approx_div):
+    """ref and pallas-interpret serve the same attention (same per-row
+    quantized divider); only float accumulation order differs."""
+    q, k, v = _qkv(2, 96, 16, seed=5)
+    out = {}
+    for backend in ("ref", "pallas-interpret"):
+        bound = get_op("attention", DEFAULT_DIV_SPEC, backend,
+                       block=(32, 32))
+        out[backend] = np.asarray(bound(q, k, v, approx_div=approx_div))
+    np.testing.assert_allclose(out["ref"], out["pallas-interpret"],
+                               rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("approx_div", [False, True])
+@pytest.mark.parametrize("depth", [1, 2, 3])
+def test_attention_pipeline_depth_bit_identity(depth, approx_div):
+    """The double-buffered kv sweep is a schedule, not a semantic change:
+    every pipeline depth returns the depth-0 BlockSpec result bitwise."""
+    q, k, v = _qkv(2, 128, 16, seed=11)
+    base = simdive_attention(q, k, v, backend="pallas-interpret",
+                             block=(32, 32), approx_div=approx_div)
+    got = simdive_attention(q, k, v, backend="pallas-interpret",
+                            block=(32, 32, depth), approx_div=approx_div)
+    assert np.array_equal(np.asarray(got), np.asarray(base))
+
+
+def test_attention_ragged_shapes_padded():
+    """simdive_attention pads Sq/Skv to chunk multiples internally and the
+    kv-length mask keeps padded keys out of the softmax."""
+    q, k, v = _qkv(2, 80, 16, seed=13)       # 80 % 32 != 0
+    got = simdive_attention(q, k, v, backend="pallas-interpret",
+                            block=(32, 32), approx_div=False)
+    ref = dense_ref(q, k, v, causal=True)
+    assert got.shape == q.shape
+    np.testing.assert_allclose(np.asarray(got), ref, rtol=3e-5, atol=3e-5)
+
+
+def test_layers_policy_routes_attention_kernel():
+    """A pallas backend on ApproxConfig swings models/layers.flash_attention
+    onto the registered kernel: exact mode matches the jnp online-softmax
+    path, simdive mode stays within the divider band — across GQA heads."""
+    B, S, KVH, G, dh = 2, 64, 2, 3, 16
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(17), 3)
+    q = jax.random.normal(kq, (B, S, KVH, G, dh), jnp.float32)
+    k = jax.random.normal(kk, (B, S, KVH, dh), jnp.float32)
+    v = jax.random.normal(kv, (B, S, KVH, dh), jnp.float32)
+    jnp_out = np.asarray(flash_attention(q, k, v, causal=True,
+                                         q_chunk=32, kv_chunk=32))
+
+    exact_kernel = ApproxConfig(mode="exact", backend="pallas")
+    out = np.asarray(flash_attention(q, k, v, causal=True, q_chunk=32,
+                                     kv_chunk=32, approx=exact_kernel))
+    np.testing.assert_allclose(out, jnp_out, rtol=3e-5, atol=3e-5)
+
+    simdive = ApproxConfig(mode="simdive", backend="pallas")
+    approx = np.asarray(flash_attention(q, k, v, causal=True, q_chunk=32,
+                                        kv_chunk=32, approx=simdive))
+    err = np.abs(approx - jnp_out) / np.maximum(np.abs(jnp_out), 0.05)
+    assert np.median(err) < 0.01
+    assert np.mean(err) < 0.05
+
+
+def test_ref_entry_matches_kernel_divider():
+    """flash_attention_ref's dense softmax + the same per-row quantized
+    divider tracks the online kernel within float reassociation noise."""
+    q, k, v = _qkv(2, 64, 16, seed=23)
+    spec = SimdiveSpec(width=16, coeff_bits=8, index_bits=3)
+    kern = flash_attention_pallas(q, k, v, spec=spec, q_chunk=32,
+                                  kv_chunk=32, approx_div=True,
+                                  interpret=True)
+    ref = flash_attention_ref(q, k, v, spec=spec, approx_div=True)
+    np.testing.assert_allclose(np.asarray(kern), np.asarray(ref),
+                               rtol=1e-3, atol=1e-3)

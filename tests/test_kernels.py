@@ -81,6 +81,26 @@ def test_logmatmul_matches_ref(spec, mkn, blocks):
     assert np.array_equal(np.asarray(got), np.asarray(want))
 
 
+@pytest.mark.parametrize("k_unroll", [1, 8])
+@pytest.mark.parametrize("depth", [1, 2, 4])
+def test_logmatmul_pipeline_bit_identity(k_unroll, depth):
+    """The double-buffered K sweep at any depth x unroll returns the
+    depth-0 BlockSpec result bitwise (int32 accumulation, same op order);
+    the 5-tuple block encoding carries both knobs through the registry."""
+    spec = SimdiveSpec(width=8, coeff_bits=6)
+    M, K, N = 24, 96, 40                     # padding on every axis
+    hi = 1 << 8
+    x = jnp.asarray(RNG.integers(-hi + 1, hi, size=(M, K), dtype=np.int32))
+    w = jnp.asarray(RNG.integers(-hi + 1, hi, size=(K, N), dtype=np.int32))
+    base = simdive_matmul_int(x, w, spec, backend="pallas",
+                              blocks=(16, 16, 16, k_unroll, 0))
+    got = simdive_matmul_int(x, w, spec, backend="pallas",
+                             blocks=(16, 16, 16, k_unroll, depth))
+    want = simdive_matmul_int(x, w, spec, backend="ref")
+    assert np.array_equal(np.asarray(base), np.asarray(want))
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
 def test_logmatmul_close_to_exact():
     """End-to-end sanity: SIMDive matmul ~1% of the exact integer matmul."""
     spec = SimdiveSpec(width=8, coeff_bits=6)
