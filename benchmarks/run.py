@@ -166,6 +166,17 @@ def _grid_configs(quick: bool):
     yield dict(kernel="attention", op="attention", width=16, coeff_bits=8,
                backend="pallas-interpret", arch="qwen3-4b", sq=512,
                block=(256, 256, 2), **common)
+    # serving: the end-to-end policy-resolved decode path (launch/serve.py)
+    # at smoke smollm-360m shapes. Each row ships a one-entry attention
+    # policy (the simdive-policy/v1 resolution serving actually uses),
+    # measures the steady-state jitted decode step post-warmup with device
+    # sync, and scores tokens/logits against the exact-mode twin — the
+    # tok/s-vs-accuracy serving family the gate diffs per PR. Runs under
+    # --quick too (the model is smoke-sized).
+    for width, cb in ((16, 8), (16, 0), (8, 6)):
+        yield dict(kernel="serve", op="serve", width=width, coeff_bits=cb,
+                   backend="ref", arch="smollm-360m", batch=4, prompt=32,
+                   gen=8, **common)
 
 
 def _cfg_geometry(cfg: dict, quick: bool) -> dict:
@@ -200,6 +211,13 @@ def _cfg_geometry(cfg: dict, quick: bool) -> dict:
         lay = _attention_layout(cfg["arch"], cfg["sq"])
         shapes = ((lay["bh"], cfg["sq"], lay["dh"]),) * 3
         g = {**lay, "sq": cfg["sq"]}
+    elif cfg["kernel"] == "serve":
+        # the serving row keys on its (batch, prompt) geometry; the timed
+        # callable is a closure (no array operands), so the declared
+        # buckets are stamped onto the measurement explicitly
+        shapes = ((cfg["batch"], cfg["prompt"]),)
+        g = {"batch": cfg["batch"], "prompt": cfg["prompt"],
+             "gen": cfg["gen"]}
     else:                                  # matmul_int / matmul_emul
         m = 32 if interp else 64
         shapes = ((m, cfg["k"]), (cfg["k"], m))
@@ -386,12 +404,72 @@ def _run_attention(cfg: dict, quick: bool) -> dict:
     }
 
 
+def _run_serve(cfg: dict, quick: bool) -> dict:
+    """The policy-resolved serving path vs its exact twin, measured.
+
+    Builds the smoke LM twice — exact, and with an ``ApproxConfig`` whose
+    one-entry attention policy pins this row's (width, coeff_bits,
+    frac_out) — then scores the approximate prefill logits against the
+    exact ones (sampled class), counts greedy-token agreement across a
+    ``gen``-token decode, and times the steady-state jitted decode step on
+    a warmed post-prompt cache (the per-token latency a scheduler sees).
+    """
+    from repro.configs import get_config
+    from repro.core.approx import ApproxConfig
+    from repro.launch.serve import generate, make_decode_step, merge_cache
+    from repro.models import build
+    from repro.tuning.select import PolicyEntry, TuningPolicy
+
+    geo = _cfg_geometry(cfg, quick)
+    B, P, G = geo["batch"], geo["prompt"], geo["gen"]
+    frac_out = cfg["width"] - 1          # quotient in [0,1]: width-1 bits
+    policy = TuningPolicy(
+        entries=(PolicyEntry(op="attention", width=cfg["width"],
+                             coeff_bits=cfg["coeff_bits"],
+                             index_bits=cfg["index_bits"],
+                             backend=cfg["backend"], frac_out=frac_out),),
+        meta=(("source", "bench-serve-row"),))
+    base = get_config(cfg["arch"], smoke=True)
+    lm_e = build(base)
+    lm_a = build(base.with_approx(ApproxConfig(
+        mode="simdive", use_in_softmax=True, policy=policy)))
+    params = lm_e.init(jax.random.PRNGKey(GRID_SEED))
+    rng = np.random.default_rng(GRID_SEED + 4)
+    prompts = jnp.asarray(rng.integers(0, base.vocab_size, (B, P),
+                                       dtype=np.int32))
+    max_seq = P + G
+    logits_e, _ = lm_e.prefill(params, {"tokens": prompts})
+    logits_a, cache = lm_a.prefill(params, {"tokens": prompts})
+    err = error_stats(np.asarray(logits_a, np.float64),
+                      np.asarray(logits_e, np.float64))
+    tok_e = np.asarray(generate(lm_e, params, prompts, max_seq, G))
+    tok_a = np.asarray(generate(lm_a, params, prompts, max_seq, G))
+    # steady-state decode step at the first post-prompt position; the
+    # non-donating wrapper keeps the timed buffer re-runnable
+    step = make_decode_step(lm_a, donate=False)
+    cache = merge_cache(lm_a.empty_cache(B, max_seq), cache)
+    tok = jnp.argmax(logits_a, -1).astype(jnp.int32)
+    call = (lambda: step(params, cache, tok, jnp.int32(P)))
+    t = time_callable(call, iters=9, items=B)
+    tp = t.as_dict()
+    tp["shape_buckets"] = geo["shape_buckets"]
+    return {
+        "n": int(np.asarray(logits_e).size), "seed": GRID_SEED,
+        "exhaustive": False,             # sampled class: the gate's 2% rtol
+        "shape": {"arch": cfg["arch"], "batch": B, "prompt": P, "gen": G},
+        "frac_out": frac_out,
+        "token_match": float((tok_e == tok_a).mean()),
+        "error": err.as_dict(), "throughput": tp,
+    }
+
+
 _GRID_RUNNERS = {
     "elemwise": _run_elemwise,
     "packed": _run_packed,
     "matmul_int": _run_matmul,
     "matmul_emul": _run_matmul,
     "attention": _run_attention,
+    "serve": _run_serve,
 }
 
 
@@ -402,6 +480,8 @@ def _cfg_label(cfg: dict) -> str:
         label += f"/K{cfg['k']}"
     if "sq" in cfg:
         label += f"/{cfg['arch']}/Sq{cfg['sq']}"
+    if "prompt" in cfg:
+        label += f"/{cfg['arch']}/B{cfg['batch']}xP{cfg['prompt']}"
     if cfg.get("block") is not None and len(cfg["block"]) > 2:
         label += f"/pipelined-d{cfg['block'][2]}"
     return label
@@ -635,9 +715,10 @@ def main() -> None:
         policy_record = {"path": os.path.basename(args.policy),
                          **policy.as_dict()}
     wanted = set(args.only.split(",")) if args.only else None
-    # 'attention' is the grid restricted to the attention rows — handy
-    # when iterating on the kernel without re-sweeping every op
-    valid = {name for name, _, _, _ in SUITES} | {"grid", "attention"}
+    # 'attention' / 'serve' are the grid restricted to those kernels —
+    # handy when iterating on one path without re-sweeping every op
+    grid_kernels = {"attention", "serve"}
+    valid = {name for name, _, _, _ in SUITES} | {"grid"} | grid_kernels
     if wanted is not None and not wanted <= valid:
         # a typo'd suite name must not append an empty trajectory record
         ap.error(f"unknown --only names {sorted(wanted - valid)}; "
@@ -662,13 +743,13 @@ def main() -> None:
                f"from {os.path.basename(src)}")
     grid_records: list[dict] = []
     grid_failures = 0
-    if wanted is None or wanted & {"grid", "attention"}:
-        only_attn = (wanted is not None and "grid" not in wanted
-                     and "attention" in wanted)
+    if wanted is None or wanted & ({"grid"} | grid_kernels):
+        kernels = None
+        if wanted is not None and "grid" not in wanted:
+            kernels = tuple(sorted(wanted & grid_kernels))
         try:
             grid_failures = run_grid(
-                report, args.quick, grid_records,
-                kernels=("attention",) if only_attn else None)
+                report, args.quick, grid_records, kernels=kernels)
         except Exception as e:  # noqa: BLE001 — per-config capture is in
             # run_grid; this catches harness-level breakage, and the
             # records accumulated so far survive in grid_records
@@ -676,7 +757,8 @@ def main() -> None:
             report(f"# !!! grid harness FAILED: {type(e).__name__}: {e}")
             traceback.print_exc()
     suites, failures = run_suites(
-        report, None if wanted is None else wanted - {"grid", "attention"},
+        report,
+        None if wanted is None else wanted - ({"grid"} | grid_kernels),
         args.quick)
     failures += grid_failures
 

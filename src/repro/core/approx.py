@@ -54,9 +54,12 @@ __all__ = [
     "ApproxConfig",
     "quantize_sign_magnitude",
     "approx_matmul",
+    "approx_matmul_int8",
     "approx_softmax",
     "approx_rmsnorm",
     "attention_div",
+    "layer_label",
+    "serving_segments",
 ]
 
 
@@ -134,6 +137,52 @@ class ApproxConfig:
 EXACT = ApproxConfig()
 
 
+def layer_label(i: int) -> str:
+    """Canonical policy label of transformer layer ``i`` (``'L0'``...).
+
+    The serving stack resolves layer-scoped policy entries against these
+    labels, so a ``simdive-policy/v1`` file targets a decoder layer with
+    ``layer='L3'`` the same way the ANN path targets ``layer='fc0'``.
+    """
+    return f"L{i}"
+
+
+def _resolution_sig(cfg: ApproxConfig) -> tuple:
+    """Everything policy resolution can change for one layer, hashable."""
+    spec_a, backend_a, frac = cfg.resolve_attention()
+    return (cfg.resolve("matmul"), cfg.resolve("div", cfg.div_width),
+            spec_a, backend_a, frac)
+
+
+def serving_segments(approx: ApproxConfig, n_layers: int
+                     ) -> tuple[tuple[int, int, ApproxConfig], ...]:
+    """Contiguous layer runs with identical policy resolution.
+
+    Returns ``((lo, hi, cfg), ...)`` covering ``[0, n_layers)``; each
+    ``cfg`` carries ``layer=layer_label(lo)`` so every dispatch inside the
+    run resolves to that run's policy entries. Without a policy (or with
+    one whose entries are all op-defaults) this collapses to a single
+    segment carrying the original config — the scan-over-layers stays one
+    scan, exactly the pre-policy trace. The segment tuple is static under
+    jit (ApproxConfig is hashable), so a heterogeneous policy costs one
+    scan per *distinct-config run*, not one per layer.
+    """
+    if n_layers <= 0:
+        return ((0, max(n_layers, 0), approx),)
+    if approx.policy is None or not approx.enabled:
+        # exact mode ignores every resolved entry — one segment, one scan
+        return ((0, n_layers, approx),)
+    cfgs = [replace(approx, layer=layer_label(i)) for i in range(n_layers)]
+    sigs = [_resolution_sig(c) for c in cfgs]
+    segments, lo = [], 0
+    for i in range(1, n_layers):
+        if sigs[i] != sigs[i - 1]:
+            segments.append((lo, i, cfgs[lo]))
+            lo = i
+    segments.append((lo, n_layers, cfgs[lo]))
+    return tuple(segments)
+
+
 def quantize_sign_magnitude(x: jax.Array, width: int, axis=None):
     """Symmetric sign-magnitude quantization to ``width``-bit magnitudes.
 
@@ -180,6 +229,41 @@ def _approx_matmul_bwd(cfg, res, g):
 
 
 approx_matmul.defvjp(_approx_matmul_fwd, _approx_matmul_bwd)
+
+
+def approx_matmul_int8(x: jax.Array, q: jax.Array, scale: jax.Array,
+                       cfg: ApproxConfig) -> jax.Array:
+    """SIMDive matmul against *pre-quantized* int8 weights.
+
+    The ``--quantize`` serving path swaps linear weights for
+    ``QuantizedWeight`` pytrees (int8 magnitudes <= 127, per-out-channel
+    scale); composing that with ``--approx`` used to silently fall back to
+    the exact dequantized matmul. Here the stored int8 magnitudes feed the
+    emulated SIMDive matmul directly — no requantization, the weight's own
+    scale rides through — so int8 deployment and approximate arithmetic
+    compose bit-faithfully. Inference-path only (no custom VJP: int8
+    weights are not differentiated through).
+
+    Raises when the resolved lane is narrower than the stored 8-bit
+    magnitudes: serving would silently truncate every weight, which is
+    exactly the mis-serve this path exists to refuse.
+    """
+    spec, backend = cfg.resolve("matmul")
+    if spec.width < 8:
+        raise ValueError(
+            f"approx+quantize: resolved matmul lane width {spec.width} "
+            "cannot hold int8 weight magnitudes (<=127 needs width >= 8); "
+            "widen the policy's matmul entry or serve unquantized")
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    qx, sx, scx = quantize_sign_magnitude(x2, spec.width)
+    qi = q.astype(jnp.int32)
+    qw = jnp.abs(qi).astype(jnp.uint32)
+    sw = jnp.where(qi < 0, -1, 1).astype(jnp.int32)
+    mm = get_op("matmul_emul", spec, backend=backend)
+    acc = mm(qx, sx, qw, sw, k_chunk=cfg.k_chunk)
+    out = acc.astype(jnp.float32) * (scx * scale.astype(jnp.float32))
+    return out.reshape(*lead, q.shape[-1]).astype(x.dtype)
 
 
 def _fixed_point_div(num: jax.Array, den: jax.Array, cfg: ApproxConfig):

@@ -1,1 +1,2 @@
-"""repro.launch — meshes, sharding rules, dry-run, train/serve drivers."""
+"""repro.launch — meshes, sharding rules, dry-run, train/serve drivers,
+and the continuous-batching serving scheduler (policy-driven load shed)."""

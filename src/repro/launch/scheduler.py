@@ -1,0 +1,321 @@
+"""Continuous-batching serving scheduler with policy-driven load shedding.
+
+The shape is the ``ReservationStations`` fan-in/fan-out pattern of the
+ieee754fpu divider pipeline (SNIPPETS.md Snippet 3) translated to LM
+serving: requests *fan in* from a prefill queue onto a fixed set of
+decode slots sharing one batched KV cache and one jitted step function,
+decode advances every occupied slot one token per tick, and finished
+requests *fan out* to the done list, freeing their slot for the next
+admission — prefill and decode stay decoupled, the batch never drains to
+refill.
+
+Accuracy is the load-shed axis (the paper's tunable-accuracy pitch under
+queue pressure, the serving analogue of the dynamic-reconfiguration
+follow-up arxiv 2310.10053): the scheduler holds a ladder of
+:class:`ServeLevel` rungs — each an :class:`~repro.core.approx.ApproxConfig`
+(optionally policy-backed; the distinct ``(op, width, coeff_bits,
+index_bits, frac_out)`` configs are hashable, so each rung's prefill /
+decode executables compile once at :meth:`Scheduler.warmup` and stay
+cached). When the queue deepens past ``shed_depth`` the scheduler
+hot-swaps to the next coarser rung — the KV cache is plain float state,
+level-independent, so the swap is just dispatching the next tick through
+a different precompiled step — and when the queue drains to
+``recover_depth`` it steps back up.
+
+Attention-family archs only (the shared cache is the stacked (L,B,S,KV,dh)
+KV pytree; ssm/hybrid recurrent state has no per-slot seq axis to fan
+into).
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field, replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.approx import ApproxConfig
+from repro.models import build
+
+__all__ = [
+    "Request",
+    "ServeLevel",
+    "Scheduler",
+    "coarse_step",
+    "default_ladder",
+]
+
+
+@dataclass
+class Request:
+    """One serving request: a fixed-length prompt and a token budget."""
+    rid: int
+    prompt: np.ndarray           # (prompt_len,) int32
+    max_new: int
+    tokens: list = field(default_factory=list)
+    levels: list = field(default_factory=list)   # serving level per token
+    submitted: int = -1          # ticks (scheduler time, not wall-clock)
+    started: int = -1
+    finished: int = -1
+
+
+@dataclass(frozen=True)
+class ServeLevel:
+    """One accuracy rung of the serving ladder (finest first)."""
+    name: str
+    approx: ApproxConfig
+
+
+def coarse_step(approx: ApproxConfig) -> ApproxConfig:
+    """One rung coarser than ``approx``: uncorrected Mitchell on the same
+    lanes, policy dropped (the policy pinned the *fine* rung's configs).
+    An exact base steps into divider-softmax Mitchell — shedding accuracy
+    for throughput is the whole point of the ladder."""
+    if not approx.enabled:
+        return replace(approx, mode="mitchell", emulate=False,
+                       use_in_softmax=True, policy=None, layer=None)
+    return replace(approx, mode="mitchell", policy=None, layer=None)
+
+
+def default_ladder(approx: ApproxConfig) -> tuple[ServeLevel, ...]:
+    """The two-rung default: the deployment's own config, and one
+    Mitchell-coarse shed rung."""
+    return (ServeLevel("fine", approx),
+            ServeLevel("shed", coarse_step(approx)))
+
+
+class Scheduler:
+    """Continuous-batching scheduler over shared jitted step functions.
+
+    One tick = (adjust level by queue depth) -> (admit queued requests
+    into free slots via one fixed-shape batched prefill) -> (one decode
+    step advancing every occupied slot). Prefill always runs at the full
+    ``(batch, prompt_len)`` shape (unused rows are padding whose cache
+    writes are dropped), and decode always at ``(batch,)`` with per-row
+    positions — every executable is compiled once per level, at
+    :meth:`warmup`, never mid-serve.
+
+    Inactive slots decode garbage rows (position held at 0, fully masked
+    attention) that cost their share of the batch but never touch live
+    state; their cache rows are overwritten by the next admission's
+    prefill insert.
+    """
+
+    def __init__(self, cfg, params=None, *,
+                 levels: tuple[ServeLevel, ...] | None = None,
+                 batch: int = 4, prompt_len: int = 32,
+                 max_seq: int | None = None,
+                 shed_depth: int = 4, recover_depth: int = 1,
+                 seed: int = 0):
+        if cfg.family in ("ssm", "hybrid"):
+            raise ValueError(
+                f"Scheduler needs an attention-family cache, got family "
+                f"{cfg.family!r} (recurrent state has no per-slot seq axis)")
+        if levels is None:
+            levels = default_ladder(cfg.approx)
+        if recover_depth >= shed_depth:
+            raise ValueError(
+                f"recover_depth ({recover_depth}) must be < shed_depth "
+                f"({shed_depth}) — equal thresholds oscillate every tick")
+        self.cfg = cfg
+        self.levels = tuple(levels)
+        self.batch = batch
+        self.prompt_len = prompt_len
+        self.max_seq = max_seq or prompt_len * 2
+        self.shed_depth = shed_depth
+        self.recover_depth = recover_depth
+        self.lms = tuple(build(cfg.with_approx(lv.approx))
+                         for lv in self.levels)
+        self.params = params if params is not None \
+            else self.lms[0].init(jax.random.PRNGKey(seed))
+        # non-donating steps: the scheduler re-reads self.cache between
+        # ticks (measure_decode times the same buffer repeatedly)
+        from repro.launch.serve import make_decode_step
+        self.steps = tuple(make_decode_step(lm, donate=False)
+                           for lm in self.lms)
+        self._insert = jax.jit(self._insert_impl)
+        self.cache = self.lms[0].empty_cache(batch, self.max_seq)
+        self.pos = np.zeros(batch, np.int32)
+        self.tok = np.zeros(batch, np.int32)
+        self.slots: list[Request | None] = [None] * batch
+        self.queue: deque[Request] = deque()
+        self.done: list[Request] = []
+        self.level = 0
+        self.tick_no = 0
+        self.events: list[tuple[int, str, object]] = []
+        self._next_rid = 0
+
+    # ------------------------------------------------------------ intake --
+    def submit(self, prompt, max_new: int) -> Request:
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if prompt.shape[0] != self.prompt_len:
+            raise ValueError(
+                f"prompt length {prompt.shape[0]} != scheduler prompt_len "
+                f"{self.prompt_len} (fixed-shape prefill: pad upstream)")
+        if self.prompt_len + max_new > self.max_seq:
+            raise ValueError(
+                f"prompt_len + max_new = {self.prompt_len + max_new} "
+                f"exceeds max_seq {self.max_seq}")
+        req = Request(rid=self._next_rid, prompt=prompt, max_new=max_new,
+                      submitted=self.tick_no)
+        self._next_rid += 1
+        self.queue.append(req)
+        return req
+
+    # ----------------------------------------------------------- warmup --
+    def warmup(self) -> int:
+        """Compile every level's prefill + decode executable up front.
+
+        Returns the number of executables warmed (2 per level). The jit
+        caches key on the hashable LM (and through it the level's
+        ApproxConfig / policy entries), so serving never compiles
+        mid-drill — a level swap is a dispatch, not a trace.
+        """
+        dummy_p = jnp.zeros((self.batch, self.prompt_len), jnp.int32)
+        dummy_t = jnp.zeros((self.batch,), jnp.int32)
+        dummy_pos = jnp.zeros((self.batch,), jnp.int32)
+        n = 0
+        for lm, step in zip(self.lms, self.steps):
+            logits, pre = lm.prefill(self.params, {"tokens": dummy_p})
+            jax.block_until_ready(logits)
+            out = step(self.params, self.cache, dummy_t, dummy_pos)
+            jax.block_until_ready(out[0])
+            n += 2
+        # warm the cache insert once too (same executable every admission)
+        oob = jnp.full((self.batch,), self.batch, jnp.int32)
+        jax.block_until_ready(
+            jax.tree.leaves(self._insert(self.cache, pre, oob))[0])
+        return n
+
+    # ------------------------------------------------------------- steps --
+    def _insert_impl(self, full, pre, slots):
+        """Scatter a (batch, prompt_len) prefill cache into the serving
+        cache at per-row slot indices; out-of-range indices (padding rows)
+        are dropped."""
+        def ins(path, dst, src):
+            P = src.shape[2]
+            if (dst.ndim >= 3 and src.ndim == dst.ndim
+                    and dst.shape[0] == src.shape[0]
+                    and dst.shape[2] >= P
+                    and dst.shape[3:] == src.shape[3:]):
+                return dst.at[:, slots, :P].set(src.astype(dst.dtype),
+                                                mode="drop")
+            raise ValueError(
+                f"unmergeable cache leaf {jax.tree_util.keystr(path)}: "
+                f"prefill {src.shape} vs serving cache {dst.shape}")
+        return jax.tree_util.tree_map_with_path(ins, full, pre)
+
+    def _adjust_level(self):
+        depth = len(self.queue)
+        if depth >= self.shed_depth and self.level < len(self.levels) - 1:
+            self.level += 1
+            self.events.append(
+                (self.tick_no, "shed", self.levels[self.level].name))
+        elif depth <= self.recover_depth and self.level > 0:
+            self.level -= 1
+            self.events.append(
+                (self.tick_no, "recover", self.levels[self.level].name))
+
+    def _admit(self):
+        free = [i for i, r in enumerate(self.slots) if r is None]
+        if not free or not self.queue:
+            return
+        take = min(len(free), len(self.queue))
+        reqs = [self.queue.popleft() for _ in range(take)]
+        prompts = np.zeros((self.batch, self.prompt_len), np.int32)
+        # padding rows scatter out of range -> dropped by the insert
+        slot_ix = np.full(self.batch, self.batch, np.int32)
+        for j, req in enumerate(reqs):
+            prompts[j] = req.prompt
+            slot_ix[j] = free[j]
+        lm = self.lms[self.level]
+        logits, pre = lm.prefill(self.params, {"tokens": jnp.asarray(prompts)})
+        self.cache = self._insert(self.cache, pre, jnp.asarray(slot_ix))
+        first = np.asarray(jnp.argmax(logits, -1)).astype(np.int32)
+        name = self.levels[self.level].name
+        for j, req in enumerate(reqs):
+            s = free[j]
+            self.slots[s] = req
+            self.pos[s] = self.prompt_len
+            self.tok[s] = first[j]
+            req.tokens.append(int(first[j]))
+            req.levels.append(name)
+            req.started = self.tick_no
+            self.events.append((self.tick_no, "admit", req.rid))
+
+    def _retire(self, s: int, req: Request):
+        req.finished = self.tick_no
+        self.done.append(req)
+        self.slots[s] = None
+        self.pos[s] = 0
+        self.tok[s] = 0
+        self.events.append((self.tick_no, "retire", req.rid))
+
+    def _decode(self):
+        if not any(r is not None for r in self.slots):
+            return
+        step = self.steps[self.level]
+        logits, self.cache = step(self.params, self.cache,
+                                  jnp.asarray(self.tok),
+                                  jnp.asarray(self.pos))
+        nxt = np.asarray(jnp.argmax(logits, -1)).astype(np.int32)
+        name = self.levels[self.level].name
+        for s, req in enumerate(self.slots):
+            if req is None:
+                continue
+            self.pos[s] += 1
+            if len(req.tokens) >= req.max_new:
+                self._retire(s, req)
+                continue
+            t = int(nxt[s])
+            req.tokens.append(t)
+            req.levels.append(name)
+            self.tok[s] = t
+            if len(req.tokens) >= req.max_new:
+                self._retire(s, req)
+
+    def step(self):
+        """One scheduler tick: adjust level, admit, decode."""
+        self.tick_no += 1
+        self._adjust_level()
+        self._admit()
+        self._decode()
+
+    def run(self, max_ticks: int = 10_000) -> dict:
+        """Tick until every submitted request retires; returns stats."""
+        while (self.queue or any(r is not None for r in self.slots)):
+            if self.tick_no >= max_ticks:
+                raise RuntimeError(
+                    f"scheduler did not drain in {max_ticks} ticks "
+                    f"(queue={len(self.queue)}, active="
+                    f"{sum(r is not None for r in self.slots)})")
+            self.step()
+        return self.stats()
+
+    # ------------------------------------------------------------- stats --
+    def stats(self) -> dict:
+        per_level: dict[str, int] = {lv.name: 0 for lv in self.levels}
+        for req in self.done + [r for r in self.slots if r is not None]:
+            for name in req.levels:
+                per_level[name] += 1
+        return {
+            "completed": len(self.done),
+            "ticks": self.tick_no,
+            "tokens": sum(per_level.values()),
+            "tokens_per_level": per_level,
+            "sheds": sum(1 for _, kind, _ in self.events if kind == "shed"),
+            "recovers": sum(1 for _, kind, _ in self.events
+                            if kind == "recover"),
+            "events": list(self.events),
+        }
+
+    def measure_decode(self, iters: int = 5):
+        """Steady-state decode-step latency at the current level, device-
+        synced post-warmup (:func:`repro.metrics.timing.time_callable`);
+        ``items=batch`` makes ``items_per_s`` the decode tok/s."""
+        from repro.metrics.timing import time_callable
+        return time_callable(self.steps[self.level], self.params,
+                             self.cache, jnp.asarray(self.tok),
+                             jnp.asarray(self.pos), iters=iters,
+                             items=self.batch)

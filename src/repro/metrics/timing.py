@@ -88,6 +88,14 @@ def _sig(v):
         return ("array", tuple(v.shape), str(getattr(v, "dtype", "")))
     if isinstance(v, (bool, int, float, str, bytes, type(None))):
         return v
+    # containers recurse (serving callables take cache *pytrees*: a dict of
+    # stacked KV arrays must sign by leaf shapes/dtypes, not by a repr that
+    # would stringify whole device arrays)
+    if isinstance(v, dict):
+        return ("dict", tuple((repr(k), _sig(v[k]))
+                              for k in sorted(v, key=repr)))
+    if isinstance(v, (list, tuple)):
+        return ("seq", tuple(_sig(x) for x in v))
     return repr(v)
 
 
@@ -120,7 +128,12 @@ def time_callable(fn, *args, iters: int = 5, warmup: int = 1,
     away or the clock is too coarse, and either way the number would
     poison the trajectory baseline it gets committed into.
     """
-    buckets = tuple(shape_bucket(a.shape) for a in args if hasattr(a, "shape"))
+    # bucket every array leaf, recursing through container args (for a
+    # plain array argument jax.tree.leaves is the identity, so existing
+    # callers' buckets are unchanged)
+    buckets = tuple(shape_bucket(leaf.shape)
+                    for a in args for leaf in jax.tree.leaves(a)
+                    if hasattr(leaf, "shape"))
     seen = _warmed_keys(fn)
     key = _warm_key(args, kw)
     warmed = 0

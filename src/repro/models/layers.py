@@ -27,7 +27,12 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.core.approx import ApproxConfig, approx_matmul, attention_div
+from repro.core.approx import (
+    ApproxConfig,
+    approx_matmul,
+    approx_matmul_int8,
+    attention_div,
+)
 from repro.kernels.registry import get_op, resolve_backend
 from repro.launch.sharding import shard
 
@@ -77,8 +82,17 @@ def quantize_weight(w: jax.Array) -> QuantizedWeight:
 
 
 def dense(x, w, approx: ApproxConfig = EXACT):
-    """Matmul with quantized-weight and SIMDive-emulation support."""
+    """Matmul with quantized-weight and SIMDive-emulation support.
+
+    QuantizedWeight + approximate emulation compose: the stored int8
+    magnitudes feed the emulated SIMDive matmul directly (the weight's own
+    per-channel scale rides through) instead of silently dequantizing to
+    an exact float matmul. ``approx_matmul_int8`` refuses lanes narrower
+    than the 8-bit magnitudes rather than truncating weights.
+    """
     if isinstance(w, QuantizedWeight):
+        if approx.enabled and approx.use_in_linear and approx.emulate:
+            return approx_matmul_int8(x, w.q, w.scale, approx)
         wf = w.q.astype(x.dtype) * w.scale.astype(x.dtype)
         return x @ wf
     if approx.enabled and approx.use_in_linear and approx.emulate:
@@ -150,6 +164,17 @@ def apply_rope(x, cos, sin, rot_dims):
 
 
 # -------------------------------------------------------------- attention --
+def _pos4(pos):
+    """Broadcast a decode position to score shape (B,KVH,G,Smax).
+
+    Scalar positions pass through (the single-stream decode path);
+    per-row (B,) positions — continuous batching, where every cache slot
+    is at its own depth — reshape to (B,1,1,1).
+    """
+    p = jnp.asarray(pos)
+    return p.reshape(-1, 1, 1, 1) if p.ndim else p
+
+
 def _finalize(acc, l, approx: ApproxConfig):
     """acc / l — softmax normalization; SIMDive divider when enabled.
 
@@ -295,15 +320,17 @@ def decode_attention(q, k_cache, v_cache, pos, *, window=0,
                      approx: ApproxConfig = EXACT):
     """Single-token attention against a cache.
 
-    q: (B,KVH,G,dh); caches: (B,Smax,KVH,dh); ``pos``: scalar int32 — the
-    index of the token being generated (cache entries > pos are masked; for
-    ring caches Smax == window and everything is valid).
+    q: (B,KVH,G,dh); caches: (B,Smax,KVH,dh); ``pos``: int32 — scalar, or
+    (B,) for per-row positions (continuous batching) — the index of the
+    token being generated (cache entries > pos are masked; for ring caches
+    Smax == window and everything is valid).
     """
     B, Smax, KVH, dh = k_cache.shape
     scale = dh ** -0.5
     s = jnp.einsum("bkgd,btkd->bkgt", q, k_cache,
                    preferred_element_type=jnp.float32) * scale
     idx = jnp.arange(Smax)[None, None, None, :]
+    pos = _pos4(pos)
     valid = idx <= pos
     if window and Smax > window:
         valid &= idx > pos - window
@@ -328,7 +355,9 @@ def decode_attention_append(q, k_cache, v_cache, k_new, v_new, pos, slot, *,
     analytically (online-softmax combine).
 
     q: (B,KVH,G,dh); caches: (B,Smax,KVH,dh); k_new/v_new: (B,1,KVH,dh);
-    ``slot``: the ring/linear slot the new token will occupy (its stale
+    ``pos``/``slot``: scalar int32, or (B,) for per-row positions
+    (continuous batching — every batch row decodes at its own depth);
+    ``slot`` is the ring/linear slot the new token will occupy (its stale
     cache entry is masked out of the past scores).
     """
     B, Smax, KVH, dh = k_cache.shape
@@ -336,6 +365,7 @@ def decode_attention_append(q, k_cache, v_cache, k_new, v_new, pos, slot, *,
     s = jnp.einsum("bkgd,btkd->bkgt", q, k_cache,
                    preferred_element_type=jnp.float32) * scale
     idx = jnp.arange(Smax)[None, None, None, :]
+    pos, slot = _pos4(pos), _pos4(slot)
     if ring_full:
         # ring not yet wrapped: history is [0, pos); wrapped: every slot
         # except the one being replaced holds live history

@@ -154,15 +154,18 @@ class LM:
 
     @partial(jax.jit, static_argnums=(0,))
     def decode_step(self, params, cache, tokens, pos):
-        """tokens: (B,) [(B,C) musicgen] int32; pos: scalar int32 (0-based).
+        """tokens: (B,) [(B,C) musicgen] int32; pos: int32 (0-based) —
+        scalar, or (B,) for per-row positions (continuous batching: every
+        cache slot decodes at its own depth; attention-family archs only).
 
         Returns (logits (B,V) [(B,C,V)], new_cache).
         """
         cfg = self.cfg
         tok = tokens[:, None] if tokens.ndim == 1 else tokens[:, None, :]
         B = tok.shape[0]
-        positions = jnp.broadcast_to(
-            jnp.asarray(pos, jnp.int32)[None, None], (B, 1))
+        pos_arr = jnp.asarray(pos, jnp.int32)
+        positions = pos_arr[:, None] if pos_arr.ndim else \
+            jnp.broadcast_to(pos_arr[None, None], (B, 1))
         if cfg.mrope:
             positions = jnp.broadcast_to(positions[..., None], (B, 1, 3))
         batch = {"tokens": tok, "positions": positions}

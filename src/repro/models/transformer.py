@@ -15,12 +15,14 @@ is also a layer scan. Sliding-window archs get ring caches (window-sized).
 """
 from __future__ import annotations
 
+from dataclasses import replace
 from functools import partial
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core.approx import serving_segments
 from repro.launch.sharding import logical_axis_size, shard
 from .layers import (
     apply_norm,
@@ -218,6 +220,42 @@ def attn_block_decode(p, x, cfg: ModelConfig, cache, pos, positions):
 # ------------------------------------------------------------ layer stack --
 
 
+def _approx_segments(cfg: ModelConfig):
+    """Policy-resolved layer segments for the attention stacks.
+
+    ``((lo, hi, seg_cfg), ...)``: contiguous layer runs whose
+    ``ApproxConfig`` resolves identically under ``cfg.approx.policy``
+    (see :func:`repro.core.approx.serving_segments`), each paired with a
+    ``ModelConfig`` carrying that run's layer-labelled approx config. A
+    homogeneous (or absent) policy yields one segment with the original
+    ``cfg`` — the scan-over-layers is exactly the pre-policy trace.
+    """
+    segs = serving_segments(cfg.approx, cfg.n_layers)
+    if len(segs) == 1:
+        return ((0, cfg.n_layers, cfg),)
+    return tuple((lo, hi, replace(cfg, approx=acfg))
+                 for lo, hi, acfg in segs)
+
+
+def _write_token(buf, i, slot, new):
+    """Write one decoded token's (B,1,KV,dh) slab into the stacked
+    (L,B,Smax,KV,dh) cache at layer ``i``, seq slot ``slot``.
+
+    Scalar ``slot`` keeps the historical dynamic_update_slice (one
+    contiguous in-place write on donated buffers); a (B,) ``slot`` —
+    continuous batching, per-row positions — scatters each row at its own
+    depth.
+    """
+    slot = jnp.asarray(slot, jnp.int32)
+    i = jnp.asarray(i, jnp.int32)
+    if slot.ndim:
+        rows = jnp.arange(new.shape[0])
+        return buf.at[i, rows, slot].set(new[:, 0])
+    zero = jnp.zeros((), jnp.int32)
+    at = (i, zero, slot, zero, zero)
+    return jax.lax.dynamic_update_slice(buf, new[None], at)
+
+
 def init_stack(key, cfg: ModelConfig, dtype):
     """Stacked per-layer params (leading L axis) + shared block (hybrid)."""
     L = cfg.n_layers
@@ -312,15 +350,24 @@ def stack_train(params, x, cfg: ModelConfig, positions):
             aux = aux + a
         return x, aux
 
-    # attention stacks (dense / moe / vlm / audio)
-    def body(carry, pl):
-        xc, aux = carry
-        y, _, a = remat(attn_block_train, static_argnums=(2,),
-                        prevent_cse=False)(pl, xc, cfg, positions)
-        return (y, aux + a), None
+    # attention stacks (dense / moe / vlm / audio): one scan per
+    # policy-resolved layer segment (a single scan when the policy is
+    # homogeneous or absent)
+    def body_for(seg_cfg):
+        def body(carry, pl):
+            xc, aux = carry
+            y, _, a = remat(attn_block_train, static_argnums=(2,),
+                            prevent_cse=False)(pl, xc, seg_cfg, positions)
+            return (y, aux + a), None
+        return body
 
-    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
-                               params["layers"], unroll=unroll)
+    carry = (x, jnp.zeros((), jnp.float32))
+    for lo, hi, seg_cfg in _approx_segments(cfg):
+        part = params["layers"] if (lo, hi) == (0, cfg.n_layers) \
+            else jax.tree.map(lambda a: a[lo:hi], params["layers"])
+        carry, _ = jax.lax.scan(body_for(seg_cfg), carry, part,
+                                unroll=unroll)
+    x, aux = carry
     return x, aux
 
 
@@ -380,11 +427,22 @@ def stack_prefill(params, x, cfg: ModelConfig, positions):
             "v": jnp.stack(vparts).astype(x.dtype),
         }
 
-    def body(xc, pl):
-        y, kv, _ = attn_block_train(pl, xc, cfg, positions)
-        return y, kv
+    def body_for(seg_cfg):
+        def body(xc, pl):
+            y, kv, _ = attn_block_train(pl, xc, seg_cfg, positions)
+            return y, kv
+        return body
 
-    x, (ks, vs) = jax.lax.scan(body, x, params["layers"], unroll=unroll)
+    kparts, vparts = [], []
+    for lo, hi, seg_cfg in _approx_segments(cfg):
+        part = params["layers"] if (lo, hi) == (0, cfg.n_layers) \
+            else jax.tree.map(lambda a: a[lo:hi], params["layers"])
+        x, (ks, vs) = jax.lax.scan(body_for(seg_cfg), x, part,
+                                   unroll=unroll)
+        kparts.append(ks)
+        vparts.append(vs)
+    ks = kparts[0] if len(kparts) == 1 else jnp.concatenate(kparts, 0)
+    vs = vparts[0] if len(vparts) == 1 else jnp.concatenate(vparts, 0)
     return x, {"k": ks.astype(x.dtype), "v": vs.astype(x.dtype)}
 
 
@@ -453,11 +511,8 @@ def stack_decode(params, x, cfg: ModelConfig, cache, pos, positions):
             kv = {"k": kc[g], "v": vc[g]}
             x, (k_new, v_new) = _hybrid_shared(params, x, cfg, positions, g,
                                                cache=kv, pos=pos)
-            zero = jnp.zeros((), jnp.int32)
-            at = (jnp.asarray(g, jnp.int32), zero,
-                  jnp.asarray(slot, jnp.int32), zero, zero)
-            kc = jax.lax.dynamic_update_slice(kc, k_new[None], at)
-            vc = jax.lax.dynamic_update_slice(vc, v_new[None], at)
+            kc = _write_token(kc, g, slot, k_new)
+            vc = _write_token(vc, g, slot, v_new)
         new_cache = {
             "ssm": jax.tree.map(lambda *xs: jnp.concatenate(xs, 0),
                                 *new_ssm_parts),
@@ -467,28 +522,41 @@ def stack_decode(params, x, cfg: ModelConfig, cache, pos, positions):
         return x, new_cache
 
     # attention archs: carry the stacked cache and write one token per
-    # layer in place (donated buffer) — the scan's xs are only the params
+    # layer in place (donated buffer) — the scan's xs are only the params.
+    # One scan per policy-resolved layer segment (single scan when the
+    # policy is homogeneous or absent); each segment scans its own slice
+    # of the stacked cache so layer indices stay segment-local.
     Smax = cache["k"].shape[2]
     slot = decode_slot(cfg, Smax, pos)
 
-    def body(carry, pl_i):
-        xc, kc, vc = carry
-        pl, i = pl_i
-        layer_cache = {
-            "k": jax.lax.dynamic_index_in_dim(kc, i, 0, keepdims=False),
-            "v": jax.lax.dynamic_index_in_dim(vc, i, 0, keepdims=False),
-        }
-        y, (k_new, v_new) = attn_block_decode(pl, xc, cfg, layer_cache,
-                                              pos, positions)
-        zero = jnp.zeros((), jnp.int32)
-        at = (i.astype(jnp.int32), zero, jnp.asarray(slot, jnp.int32),
-              zero, zero)
-        kc = jax.lax.dynamic_update_slice(kc, k_new[None], at)
-        vc = jax.lax.dynamic_update_slice(vc, v_new[None], at)
-        return (y, kc, vc), None
+    def body_for(seg_cfg):
+        def body(carry, pl_i):
+            xc, kc, vc = carry
+            pl, i = pl_i
+            layer_cache = {
+                "k": jax.lax.dynamic_index_in_dim(kc, i, 0, keepdims=False),
+                "v": jax.lax.dynamic_index_in_dim(vc, i, 0, keepdims=False),
+            }
+            y, (k_new, v_new) = attn_block_decode(pl, xc, seg_cfg,
+                                                  layer_cache, pos, positions)
+            kc = _write_token(kc, i, slot, k_new)
+            vc = _write_token(vc, i, slot, v_new)
+            return (y, kc, vc), None
+        return body
 
-    L = cfg.n_layers
-    (x, kc, vc), _ = jax.lax.scan(
-        body, (x, cache["k"], cache["v"]),
-        (params["layers"], jnp.arange(L)), unroll=unroll)
-    return x, {"k": kc, "v": vc}
+    segs = _approx_segments(cfg)
+    if len(segs) == 1:
+        (x, kc, vc), _ = jax.lax.scan(
+            body_for(segs[0][2]), (x, cache["k"], cache["v"]),
+            (params["layers"], jnp.arange(cfg.n_layers)), unroll=unroll)
+        return x, {"k": kc, "v": vc}
+    kparts, vparts = [], []
+    for lo, hi, seg_cfg in segs:
+        part = jax.tree.map(lambda a: a[lo:hi], params["layers"])
+        (x, kc, vc), _ = jax.lax.scan(
+            body_for(seg_cfg), (x, cache["k"][lo:hi], cache["v"][lo:hi]),
+            (part, jnp.arange(hi - lo)), unroll=unroll)
+        kparts.append(kc)
+        vparts.append(vc)
+    return x, {"k": jnp.concatenate(kparts, 0),
+               "v": jnp.concatenate(vparts, 0)}

@@ -131,6 +131,17 @@ class TuningPolicy:
     def meta_dict(self) -> dict:
         return dict(self.meta)
 
+    def distinct_configs(self) -> tuple:
+        """The distinct ``(op, width, coeff_bits, index_bits, frac_out)``
+        dispatch configs this policy can resolve to, sorted.
+
+        Each one is a hashable registry dispatch identity — the serving
+        scheduler precompiles one executable family per distinct config,
+        so this is also the compile budget a policy implies."""
+        return tuple(sorted({
+            (e.op, e.width, e.coeff_bits, e.index_bits, e.frac_out)
+            for e in self.entries}))
+
     def with_entries(self, *entries) -> "TuningPolicy":
         return replace(self, entries=self.entries + tuple(entries))
 
