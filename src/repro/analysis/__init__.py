@@ -1,0 +1,20 @@
+"""Static verification of the SIMDive integer datapath.
+
+* :mod:`repro.analysis.widthcheck` — jaxpr abstract interpreter proving
+  overflow / shift-range / lane-isolation / signedness safety for every
+  registered op at every supported width.
+* :mod:`repro.analysis.lint` — repo-specific AST rules (timing harness,
+  interpreter literals, hardcoded block shapes, unguarded uint64).
+
+CLI: ``python -m repro.analysis [--gate] [--json] [--op NAME] [--width W]``.
+"""
+from .domain import AbsVal, ArgSpec, Finding, TraceCase, from_concrete, top
+from .lint import run_lint
+from .widthcheck import (MatrixResult, check_case, render_text, run_matrix,
+                         to_json, verdict_for)
+
+__all__ = [
+    "AbsVal", "ArgSpec", "Finding", "TraceCase", "from_concrete", "top",
+    "run_lint", "MatrixResult", "check_case", "render_text", "run_matrix",
+    "to_json", "verdict_for",
+]

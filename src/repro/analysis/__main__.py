@@ -1,0 +1,60 @@
+"""``python -m repro.analysis`` — the static-analysis CI gate.
+
+Exit status 0 iff the widthcheck matrix has no findings, every registered
+op carries analysis metadata, and the lint pass is clean. Declared skips
+(e.g. "callers scale operands" contracts) are reported but do not fail
+the gate — they are auditable, reasoned exclusions, not silent gaps.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="SIMDive jaxpr width/overflow verifier + repo lint")
+    ap.add_argument("--gate", action="store_true",
+                    help="CI mode: nonzero exit on any finding/gap")
+    ap.add_argument("--json", action="store_true",
+                    help="emit the machine-readable report")
+    ap.add_argument("--op", action="append", default=None,
+                    help="restrict to this registered op (repeatable)")
+    ap.add_argument("--width", action="append", type=int, default=None,
+                    help="restrict to this lane width (repeatable)")
+    ap.add_argument("--no-lint", action="store_true",
+                    help="skip the AST lint pass")
+    ap.add_argument("--out", default=None,
+                    help="also write the report to this path")
+    args = ap.parse_args(argv)
+
+    # the gate must verify the width-32 uint64 configs, so run with x64 on;
+    # this is a standalone process, nothing else shares the config.
+    import jax
+    jax.config.update("jax_enable_x64", True)
+
+    from . import render_text, run_lint, run_matrix, to_json
+
+    result = run_matrix(ops=args.op, widths=args.width)
+    lint_findings = [] if args.no_lint else run_lint()
+
+    text = (json.dumps(to_json(result, lint_findings), indent=2, sort_keys=True)
+            if args.json else render_text(result, lint_findings))
+    print(text)
+    if args.out:
+        with open(args.out, "w") as fh:
+            fh.write(text if text.endswith("\n") else text + "\n")
+
+    bad = bool(result.findings) or bool(result.gaps) or bool(lint_findings)
+    if args.gate and bad:
+        print("GATE: FAIL", file=sys.stderr)
+        return 1
+    if args.gate:
+        print("GATE: PASS", file=sys.stderr)
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,234 @@
+"""Abstract values, findings, and trace-case declarations for widthcheck.
+
+The domain is **interval x possible-bits**:
+
+* every array is summarized by one abstract value (the per-element range
+  is what overflow/shift safety cares about; element positions are not),
+* integer values carry exact Python-int bounds ``[lo, hi]`` plus a
+  *possible-bits* mask ``bits`` (a bit is set iff some element of some
+  concretization may have it set) — valid only while ``lo >= 0``,
+* float values carry ``[lo, hi]`` as Python floats, possibly infinite;
+  the float side is deliberately loose (the integer datapath is the
+  verification target) but clamps/constants stay exact, which is exactly
+  what the quantizer clips feeding the lanes need.
+
+Soundness convention: every transfer function may over-approximate, never
+under-approximate. When a rule fires, the result is widened to the dtype's
+full range so one root cause yields one finding, not a cascade.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import numpy as np
+
+__all__ = ["AbsVal", "ArgSpec", "TraceCase", "Finding",
+           "from_concrete", "top", "join", "RULES"]
+
+#: every widthcheck rule name, with the one-line contract it enforces
+RULES = {
+    "overflow": "no integer add/sub/mul/sum/dot exceeds its carrier dtype",
+    "shift-range": "every shift amount is statically in [0, nbits-1]",
+    "lane-overlap": "integer OR operands have disjoint possible-bits masks "
+                    "(packed-lane / bit-field isolation)",
+    "signedness": "no conversion crosses a signedness boundary with a "
+                  "possibly-out-of-range value",
+    "lane-domain": "operands entering the log datapath fit the declared "
+                   "lane width (require_range contracts)",
+    "gather-bounds": "1-D table gather indices are statically in range",
+    "x64": "width-32 configs declare their uint64/x64 requirement",
+}
+
+
+def _int_info(dtype):
+    dt = np.dtype(dtype)
+    if dt.kind == "b":
+        return 0, 1
+    ii = np.iinfo(dt)
+    return int(ii.min), int(ii.max)
+
+
+def _mask_for(hi: int) -> int:
+    """Contiguous possible-bits mask covering [0, hi]."""
+    return (1 << max(int(hi), 0).bit_length()) - 1
+
+
+@dataclass(frozen=True)
+class AbsVal:
+    """One abstract array value: dtype + shape + interval (+ bits mask)."""
+    dtype: Any                    # numpy dtype
+    shape: tuple
+    lo: Any                       # int (int dtypes) or float (may be +-inf)
+    hi: Any
+    bits: int | None = None      # possible-bits mask; ints with lo >= 0 only
+    #: deferred unsigned-underflow evidence: ((key_a, key_b), rule, msg,
+    #: eqn_str, src). A guarded ``where(a >= b, a - b, _)`` clears it at the
+    #: matching select; any other consumption turns it into a finding.
+    pending: tuple | None = None
+
+    # ---------------------------------------------------------- helpers --
+    @property
+    def kind(self) -> str:
+        return np.dtype(self.dtype).kind       # 'u' 'i' 'b' 'f'
+
+    @property
+    def is_int(self) -> bool:
+        return self.kind in ("u", "i", "b")
+
+    @property
+    def nbits(self) -> int:
+        return 8 * np.dtype(self.dtype).itemsize
+
+    def norm(self) -> "AbsVal":
+        """Re-establish invariants: interval inside dtype range, bits mask
+        consistent with the interval (ints), bits dropped when lo < 0."""
+        if not self.is_int:
+            return self
+        dlo, dhi = _int_info(self.dtype)
+        lo = max(int(self.lo), dlo)
+        hi = min(int(self.hi), dhi)
+        if hi < lo:                            # empty => collapse, stay sound
+            lo, hi = dlo, dhi
+        bits = self.bits
+        if lo < 0:
+            bits = None
+        else:
+            m = _mask_for(hi)
+            bits = m if bits is None else (bits & m)
+            hi = min(hi, bits)                 # hi can never exceed the mask
+            if hi < lo:
+                lo = hi if hi >= 0 else lo
+        return AbsVal(self.dtype, self.shape, lo, hi, bits, self.pending)
+
+    def with_shape(self, shape: tuple) -> "AbsVal":
+        return AbsVal(self.dtype, tuple(shape), self.lo, self.hi, self.bits,
+                      self.pending)
+
+    def fits(self) -> bool:
+        """Interval inside the dtype's representable range?"""
+        if not self.is_int:
+            return True
+        dlo, dhi = _int_info(self.dtype)
+        return self.lo >= dlo and self.hi <= dhi
+
+    def describe(self) -> str:
+        if self.is_int:
+            s = f"[{self.lo}, {self.hi}]"
+            if self.bits is not None:
+                s += f" bits=0x{self.bits:x}"
+            return s
+        return f"[{self.lo:g}, {self.hi:g}]"
+
+
+def top(dtype, shape) -> AbsVal:
+    """The full range of ``dtype`` — the sound fallback."""
+    dt = np.dtype(dtype)
+    if dt.kind in ("u", "i", "b"):
+        lo, hi = _int_info(dt)
+        return AbsVal(dt, tuple(shape), lo, hi,
+                      _mask_for(hi) if lo >= 0 or dt.kind == "b" else None
+                      ).norm()
+    return AbsVal(dt, tuple(shape), -math.inf, math.inf, None)
+
+
+def from_concrete(x) -> AbsVal:
+    """Exact abstract value of a concrete array/scalar (jaxpr constants:
+    correction tables, masks, clip limits — their real min/max/bit-OR)."""
+    arr = np.asarray(x)
+    if arr.size == 0:
+        return top(arr.dtype, arr.shape)
+    if arr.dtype.kind in ("u", "i", "b"):
+        lo = int(arr.min())
+        hi = int(arr.max())
+        bits = None
+        if lo >= 0:
+            bits = 0
+            for v in np.unique(arr.ravel()):
+                bits |= int(v)
+        return AbsVal(arr.dtype, arr.shape, lo, hi, bits).norm()
+    fin = arr[np.isfinite(arr)] if arr.dtype.kind == "f" else arr
+    if arr.dtype.kind == "f" and fin.size != arr.size:
+        return top(arr.dtype, arr.shape)
+    return AbsVal(arr.dtype, arr.shape, float(arr.min()), float(arr.max()))
+
+
+def join(a: AbsVal, b: AbsVal) -> AbsVal:
+    """Least upper bound (select/concat/loop-carry union)."""
+    pend = a.pending or b.pending       # never silently drop evidence
+    if not a.is_int:
+        return AbsVal(a.dtype, a.shape, min(a.lo, b.lo), max(a.hi, b.hi),
+                      None, pend)
+    bits = None
+    if a.bits is not None and b.bits is not None:
+        bits = a.bits | b.bits
+    return AbsVal(a.dtype, a.shape, min(a.lo, b.lo), max(a.hi, b.hi),
+                  bits, pend).norm()
+
+
+# ------------------------------------------------------------- declarations --
+@dataclass(frozen=True)
+class ArgSpec:
+    """Declared abstract operand of a trace case (shape+dtype+range)."""
+    shape: tuple
+    dtype: Any
+    lo: int | float = 0
+    hi: int | float = 0
+
+    def absval(self) -> AbsVal:
+        dt = np.dtype(self.dtype)
+        if dt.kind in ("u", "i", "b"):
+            return AbsVal(dt, tuple(self.shape), int(self.lo), int(self.hi),
+                          _mask_for(int(self.hi)) if self.lo >= 0 else None
+                          ).norm()
+        return AbsVal(dt, tuple(self.shape), float(self.lo), float(self.hi))
+
+
+@dataclass(frozen=True)
+class TraceCase:
+    """One (op config, traced function, operand domain) verification unit.
+
+    Registered ops declare these via ``register_op(analysis=...)``; the
+    callable receives a width and returns a list of TraceCases (or a
+    skip-reason string). ``fn`` must be a pure traceable function of the
+    ArgSpec operands — kernel-body math, not ``pallas_call`` wrappers.
+    """
+    label: str                   # e.g. "elemwise w8 cb6 div frac_out=8"
+    fn: Callable
+    args: tuple                  # tuple[ArgSpec, ...]
+    requires_x64: bool = False
+    note: str = ""               # shown in the report next to the verdict
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One verified-unsafe (or lint) diagnostic, source-located."""
+    rule: str
+    ctx: str                     # trace-case label / lint file context
+    message: str
+    eqn: str = ""                # offending jaxpr equation (primitive form)
+    source: str = ""             # file:line of the traced source
+
+    def render(self) -> str:
+        loc = f"  [{self.source}]" if self.source else ""
+        eq = f"\n      {self.eqn}" if self.eqn else ""
+        return f"{self.rule}: {self.ctx}: {self.message}{loc}{eq}"
+
+    def sort_key(self):
+        return (self.ctx, self.rule, self.source, self.message)
+
+
+@dataclass
+class CaseReport:
+    """Findings + bookkeeping for one TraceCase."""
+    label: str
+    findings: list = field(default_factory=list)
+    assumed: list = field(default_factory=list)   # contract-verified scopes
+    unknown_prims: list = field(default_factory=list)
+    requires_x64: bool = False
+    note: str = ""
+
+    @property
+    def ok(self) -> bool:
+        return not self.findings

@@ -1,0 +1,166 @@
+"""Repo-specific AST lint rules (stdlib ``ast`` only — no third-party dep).
+
+Rules:
+
+* ``timing-outside-harness`` — bare ``time.time()`` / ``time.perf_counter()``
+  used outside ``metrics/timing.py``. Kernel timing must go through the
+  harness (device sync, steady-state warmup, MAD outlier rejection);
+  ad-hoc wall clocks produced the unsynced-timing bugs PR 3 fixed.
+* ``interpret-literal`` — literal ``interpret=True`` in a call. Interpreter
+  mode must be selected via the ``pallas-interpret`` backend string so the
+  registry cache keys and CI matrix see it; a hardcoded literal silently
+  benchmarks the interpreter (the PR 7 serving bug class).
+* ``hardcoded-block`` — a literal block-shape tuple passed as ``block=`` /
+  ``block_shape=`` outside the autotune machinery, bypassing the registry
+  autotune cache.
+* ``unguarded-uint64`` — ``jnp.uint64`` mentioned in a module that never
+  checks/enables x64. Without ``jax_enable_x64`` jnp silently downcasts
+  to uint32, which truncates 32-bit lane intermediates (the width-32
+  hazard class the widthcheck pass proves against).
+
+Suppression: a ``# simdive-lint: allow(<rule>): <reason>`` comment on the
+offending line (or the line above) suppresses that rule there. The reason
+is mandatory grep-bait — grandfathered sites must say why they're exempt.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from pathlib import Path
+
+from .domain import Finding
+
+__all__ = ["run_lint", "LINT_RULES"]
+
+LINT_RULES = {
+    "timing-outside-harness": "kernel timing must use metrics.timing",
+    "interpret-literal": "select interpreter via backend='pallas-interpret'",
+    "hardcoded-block": "block shapes come from the autotune cache",
+    "unguarded-uint64": "jnp.uint64 needs an explicit x64 check",
+}
+
+_ALLOW_RE = re.compile(r"#\s*simdive-lint:\s*allow\(([a-z0-9-]+)\)\s*:\s*\S")
+
+#: directories scanned relative to the repo root
+_SCAN_DIRS = ("src/repro", "benchmarks")
+_SKIP_PARTS = ("tests", "__pycache__")
+
+_TIME_FUNCS = {"time", "perf_counter", "monotonic", "process_time"}
+
+
+def _allows(source_lines, lineno: int) -> set:
+    """Rules allowed at ``lineno`` (1-based): same line or the line above."""
+    out = set()
+    for ln in (lineno, lineno - 1):
+        if 1 <= ln <= len(source_lines):
+            for m in _ALLOW_RE.finditer(source_lines[ln - 1]):
+                out.add(m.group(1))
+    return out
+
+
+def _is_time_call(node: ast.Call) -> str | None:
+    f = node.func
+    if isinstance(f, ast.Attribute) and f.attr in _TIME_FUNCS and \
+            isinstance(f.value, ast.Name) and f.value.id == "time":
+        return f"time.{f.attr}"
+    return None
+
+
+def _literal_tuple(node) -> bool:
+    return isinstance(node, (ast.Tuple, ast.List)) and node.elts and all(
+        isinstance(e, ast.Constant) and isinstance(e.value, int)
+        for e in node.elts)
+
+
+class _Visitor(ast.NodeVisitor):
+    def __init__(self, rel: str, lines, is_timing_harness: bool,
+                 is_tuning: bool):
+        self.rel = rel
+        self.lines = lines
+        self.is_timing_harness = is_timing_harness
+        self.is_tuning = is_tuning
+        self.findings: list = []
+        self.uint64_sites: list = []      # (lineno,)
+        self.has_x64_guard = False
+
+    def _flag(self, rule: str, lineno: int, msg: str):
+        if rule in _allows(self.lines, lineno):
+            return
+        self.findings.append(Finding(
+            rule, self.rel, msg, source=f"{self.rel}:{lineno}"))
+
+    def visit_Attribute(self, node: ast.Attribute):
+        if node.attr == "uint64" and isinstance(node.value, ast.Name) and \
+                node.value.id in ("jnp", "jax"):
+            self.uint64_sites.append(node.lineno)
+        if node.attr in ("enable_x64", "jax_enable_x64"):
+            self.has_x64_guard = True
+        self.generic_visit(node)
+
+    def visit_Constant(self, node: ast.Constant):
+        if isinstance(node.value, str) and "x64" in node.value:
+            self.has_x64_guard = True
+
+    def visit_Call(self, node: ast.Call):
+        tf = _is_time_call(node)
+        if tf and not self.is_timing_harness:
+            self._flag("timing-outside-harness", node.lineno,
+                       f"bare {tf}() — route timing through "
+                       f"repro.metrics.timing")
+        for kw in node.keywords:
+            if kw.arg == "interpret" and isinstance(kw.value, ast.Constant) \
+                    and kw.value.value is True:
+                self._flag("interpret-literal", node.lineno,
+                           "literal interpret=True — use "
+                           "backend='pallas-interpret'")
+            if kw.arg in ("block", "block_shape") and \
+                    _literal_tuple(kw.value) and not self.is_tuning:
+                self._flag("hardcoded-block", node.lineno,
+                           f"literal {kw.arg}= tuple bypasses the autotune "
+                           f"cache — pass block=None or go through get_op")
+        self.generic_visit(node)
+
+
+def lint_file(path: Path, root: Path) -> list:
+    rel = path.relative_to(root).as_posix()
+    try:
+        src = path.read_text()
+        tree = ast.parse(src)
+    except (SyntaxError, UnicodeDecodeError, OSError) as e:
+        return [Finding("lint-parse", rel, f"unparseable: {e}",
+                        source=rel)]
+    lines = src.splitlines()
+    v = _Visitor(
+        rel, lines,
+        is_timing_harness=rel.endswith("metrics/timing.py"),
+        is_tuning=("/tuning/" in rel or rel.endswith("registry.py")),
+    )
+    v.visit(tree)
+    if v.uint64_sites and not v.has_x64_guard:
+        for ln in v.uint64_sites:
+            if "unguarded-uint64" in _allows(lines, ln):
+                continue
+            v.findings.append(Finding(
+                "unguarded-uint64", rel,
+                "jnp.uint64 in a module with no x64 check — without "
+                "jax_enable_x64 this silently downcasts to uint32",
+                source=f"{rel}:{ln}"))
+    return v.findings
+
+
+def run_lint(root=None) -> list:
+    """Lint the repo; returns sorted Findings (empty == clean)."""
+    if root is None:
+        root = Path(__file__).resolve().parents[3]
+    root = Path(root)
+    findings = []
+    for d in _SCAN_DIRS:
+        base = root / d
+        if not base.is_dir():
+            continue
+        for path in sorted(base.rglob("*.py")):
+            if any(p in _SKIP_PARTS for p in path.parts):
+                continue
+            findings.extend(lint_file(path, root))
+    findings.sort(key=Finding.sort_key)
+    return findings

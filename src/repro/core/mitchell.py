@@ -28,12 +28,14 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from .annotations import ensure_range, require_range
 from .fastpath import fastpath_enabled
 
 __all__ = [
     "SUPPORTED_WIDTHS",
     "frac_bits",
     "work_dtype",
+    "lane_max_float",
     "leading_one",
     "leading_one_cascade",
     "leading_one_clz",
@@ -63,6 +65,22 @@ def work_dtype(width: int):
             "width-32 Mitchell ops need uint64; call repro.core.enable_x64() first"
         )
     return jnp.uint64
+
+
+def lane_max_float(width: int) -> float:
+    """Largest float32 <= 2^width - 1: the safe clamp bound when quantizing
+    floats into a width-bit lane.
+
+    For width > 24 the obvious ``float32(2^width - 1)`` rounds *up* to
+    2^width — one past the lane maximum — so a clip against it can admit an
+    operand the log datapath's leading-one detector maps to ``k == width``,
+    driving the fraction-alignment shift ``F - k`` negative (undefined).
+    ``2^width - 2^(width-24)`` is the largest float32 below that (24-bit
+    mantissa), and equals 2^width - 1 exactly for width <= 24.
+    """
+    if width not in SUPPORTED_WIDTHS:
+        raise ValueError(f"width must be one of {SUPPORTED_WIDTHS}, got {width}")
+    return float((1 << width) - (1 << max(width - 24, 0)))
 
 
 def _signed(dtype):
@@ -131,11 +149,23 @@ def mitchell_log(a: jax.Array, width: int,
     """
     F = frac_bits(width)
     dt = a.dtype
+    # analyzer contract: the packing below is disjoint only relationally
+    # (frac < 2^(k+1) left-aligned by F - k), which the non-relational
+    # interval x bits domain cannot see. The precondition is *checked*
+    # (an operand past the lane maximum is a finding right here); the
+    # postcondition is backed by the exhaustive bit-parity suites.
+    a = require_range(
+        a, hi=(1 << width) - 1, what=f"mitchell_log/{width} lane operand",
+        assume=("lane-overlap",))
     k = leading_one(a, width, fast=fast)
     one = jnp.asarray(1, dt)
     frac = a ^ (one << k)                      # strip the leading one
     x_fp = frac << (jnp.asarray(F, dt) - k)    # left-align into F bits
-    return (k << jnp.asarray(F, dt)) | x_fp
+    L = (k << jnp.asarray(F, dt)) | x_fp
+    return ensure_range(
+        L, hi=width * (1 << F) - 1,
+        bits=(1 << (F + max((width - 1).bit_length(), 1))) - 1,
+        what=f"mitchell_log/{width} log value")
 
 
 def _pow2_f32(e: jax.Array) -> jax.Array:
@@ -204,6 +234,15 @@ def _antilog_floor(ls: jax.Array, width: int, round_out: bool = False,
         return _antilog_floor_fast(ls, width, round_out=round_out)
     F = frac_bits(width)
     dt = ls.dtype
+    # analyzer contract: the saturation select below caps the result at the
+    # 2*width-bit bus maximum, but the interval domain loses the
+    # mant * 2^shl correlation (worst mant and worst shl never coincide).
+    # Precondition: ls is a summed pair of in-range log values plus a
+    # sub-2^F correction; postcondition: the bus invariant, backed by the
+    # exhaustive w8 / sampled w16+ bit-parity suites.
+    ls = require_range(
+        ls, hi=(1 << (F + 7)) - 1,
+        what=f"antilog/{width} summed log")
     fF = jnp.asarray(F, dt)
     I = ls >> fF
     Xs = ls & ((jnp.asarray(1, dt) << fF) - jnp.asarray(1, dt))
@@ -225,7 +264,9 @@ def _antilog_floor(ls: jax.Array, width: int, round_out: bool = False,
     else:
         max_out = (jnp.asarray(1, dt) << jnp.asarray(2 * width, dt)) \
             - jnp.asarray(1, dt)
-    return jnp.where(over, max_out, out)
+    return ensure_range(
+        jnp.where(over, max_out, out), hi=(1 << (2 * width)) - 1,
+        what=f"antilog/{width} product bus")
 
 
 def mitchell_antilog_mul(l1: jax.Array, l2: jax.Array, width: int,

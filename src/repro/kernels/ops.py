@@ -15,7 +15,9 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.analysis.domain import ArgSpec, TraceCase
 from repro.core.fastpath import fastpath_enabled
 from repro.core.simdive import SimdiveSpec, simdive_mul
 from . import ref as _ref
@@ -234,6 +236,176 @@ def _sqrt_ref(a, *, spec, frac_out=0):
     return simdive_sqrt(a, spec.width, frac_out=frac_out)
 
 
+# ------------------------------------------------------- widthcheck meta --
+# Analysis metadata for repro.analysis.widthcheck: per op and width, the
+# pure traceable functions + abstract operand domains that *are* the
+# arithmetic the backends execute (kernel bodies and faithful ref stages,
+# not pallas_call wrappers). A returned string is a declared, auditable
+# skip; None means the width is out of the op's domain.
+
+_AN_IB = 3                                   # 64-region tables everywhere
+#: coeff_bits exercised per width: the shipped BENCH/serve configs
+#: (8b/cb6, 16b/cb8, 16b/cb0 zero-table, 32b/cb8)
+_AN_COEFF = {8: (6,), 16: (8, 0), 32: (8,)}
+_AN_DIV_FO = {8: 8, 16: 15, 32: 16}          # shipped div frac_out per width
+
+
+def _lane_arg(width, shape=(8, 128)):
+    dt = np.uint64 if width > 16 else np.uint32
+    return ArgSpec(tuple(shape), dt, 0, (1 << width) - 1)
+
+
+def _elemwise_analysis(width):
+    from . import datapath as dp
+
+    if width not in (8, 16, 32):
+        return None
+    cases = []
+    fo_div = _AN_DIV_FO[width]
+    for cb in _AN_COEFF[width]:
+        for op, fo in (("mul", 0), ("div", fo_div), ("mixed", min(fo_div, 8))):
+            tab = dp.op_table(op, width, cb, _AN_IB)
+            for ik in (False, True):
+                la = _lane_arg(width)
+                args = (la, la)
+                if op == "mixed":
+                    args += (ArgSpec(la.shape, np.uint32, 0, 1),)
+
+                def fn(a, b, m=None, *, _t=tab, _o=op, _f=fo, _k=ik):
+                    return dp.lane_op(
+                        a, b, _t, width=width, index_bits=_AN_IB, op=_o,
+                        frac_out=_f, mode=m, round_out=True, in_kernel=_k)
+
+                cases.append(TraceCase(
+                    label=(f"elemwise/{op} w{width} cb{cb} fo{fo} "
+                           f"{'kernel' if ik else 'ref'}"),
+                    fn=fn, args=args, requires_x64=width > 16))
+    return cases
+
+
+def _packed_analysis(width):
+    from .packed_simd import packed_word_op
+
+    if width not in (8, 16):
+        return ("packed lanes need >= 2 per 32-bit word; width 32 is the "
+                "elemwise (full-word) path")
+    cases = []
+    cb = _AN_COEFF[width][0]
+    word = ArgSpec((8, 64), np.uint32, 0, (1 << 32) - 1)
+    for op, fo in (("mul", 0), ("div", 8), ("mixed", 8)):
+        from . import datapath as dp
+        tab = dp.op_table(op, width, cb, _AN_IB)
+        spec = SimdiveSpec(width=width, coeff_bits=cb, index_bits=_AN_IB)
+        args = (word, word) + ((word,) if op == "mixed" else ())
+
+        def fn(aw, bw, mw=None, *, _t=tab, _s=spec, _o=op, _f=fo):
+            return packed_word_op(aw, bw, _t, mw, spec=_s, op=_o, frac_out=_f)
+
+        cases.append(TraceCase(
+            label=f"packed/{op} w{width} cb{cb} fo{fo} kernel",
+            fn=fn, args=args,
+            note="ref path shares dp.lane_op (proved under elemwise)"))
+    return cases
+
+
+def _matmul_int_analysis(width):
+    from . import datapath as dp
+    from .logmatmul import _tile_partial
+
+    if width == 8:
+        cases = []
+        cb = _AN_COEFF[8][0]
+        tab = dp.op_table("mul", 8, cb, _AN_IB)
+        spec = SimdiveSpec(width=8, coeff_bits=cb, index_bits=_AN_IB)
+        lane = (1 << 8) - 1
+        for K in (32, 128, 512):             # the BENCH K sweep
+            x = ArgSpec((8, K), np.int32, -lane, lane)
+            w = ArgSpec((K, 128), np.int32, -lane, lane)
+
+            def fn(xt, wt, *, _t=tab, _s=spec, _k=K):
+                return _tile_partial(xt, wt, _t, spec=_s, bk=_k, k_unroll=8)
+
+            cases.append(TraceCase(
+                label=f"matmul_int w8 cb{cb} K{K} kernel tile",
+                fn=fn, args=(x, w),
+                note="int32 accumulator; operands are lane-width "
+                     "magnitudes with sign (sign_split clamps)"))
+        return cases
+    if width == 16:
+        return ("int32 accumulator is exact only while K * max_product < "
+                "2^31; callers scale operands per the logmatmul.py "
+                "contract — not provable width-generically")
+    if width == 32:
+        return ("width-32 matmul is not shipped; the 64-bit product bus "
+                "exceeds every accumulator the kernel offers")
+    return None
+
+
+def _matmul_emul_analysis(width):
+    if width not in (8, 16):
+        if width == 32:
+            return ("width-32 emulated matmul is not shipped (64-bit "
+                    "product bus exceeds the int64 accumulator)")
+        return None
+    lane = (1 << width) - 1
+    spec = SimdiveSpec(width=width, coeff_bits=_AN_COEFF[width][0],
+                       index_bits=_AN_IB)
+    M, K, N = 8, 256, 16
+    qx = ArgSpec((M, K), np.uint32, 0, lane)
+    sx = ArgSpec((M, K), np.int32, -1, 1)
+    qw = ArgSpec((K, N), np.uint32, 0, lane)
+    sw = ArgSpec((K, N), np.int32, -1, 1)
+
+    def fn(a, b, c, d, *, _s=spec):
+        return _matmul_emul_ref(a, b, c, d, spec=_s)
+
+    return [TraceCase(
+        label=f"matmul_emul w{width} ref K{K}",
+        fn=fn, args=(qx, sx, qw, sw),
+        note="pallas path recombines signs into matmul_int (proved there)")]
+
+
+def _attention_analysis(width):
+    from .flash_attention import _div_table, softmax_div
+
+    if width not in (8, 16, 32):
+        return None
+    cb = _AN_COEFF[width][0]
+    tab = _div_table(width, cb, _AN_IB)
+    fo = min(_AN_DIV_FO[width], 15)
+    acc = ArgSpec((8, 64), np.float32, -1e30, 1e30)
+    l = ArgSpec((8,), np.float32, 0.0, 1e30)
+    cases = []
+    for ik in (False, True):
+        def fn(a, d, *, _t=tab, _k=ik):
+            return softmax_div(a, d, _t, width=width, index_bits=_AN_IB,
+                               frac_out=fo, round_out=True, in_kernel=_k)
+
+        cases.append(TraceCase(
+            label=(f"attention/softmax_div w{width} cb{cb} fo{fo} "
+                   f"{'kernel' if ik else 'ref'}"),
+            fn=fn, args=(acc, l), requires_x64=width > 16,
+            note="float accumulator stages are out of integer scope; "
+                 "the quantize-clip-divide ladder is what is proved"))
+    return cases
+
+
+def _sqrt_analysis(width):
+    from repro.core.simdive import simdive_sqrt
+
+    if width not in (8, 16, 32):
+        return None
+    cases = []
+    for fo in (0, 8):
+        def fn(a, *, _f=fo):
+            return simdive_sqrt(a, width, frac_out=_f)
+
+        cases.append(TraceCase(
+            label=f"sqrt w{width} fo{fo} ref",
+            fn=fn, args=(_lane_arg(width),), requires_x64=width > 16))
+    return cases
+
+
 # ----------------------------------------------------------- registration --
 register_op(
     "elemwise",
@@ -241,6 +413,7 @@ register_op(
     pallas=_elemwise_pallas,
     default_block=ELEMWISE_BLOCK,
     block_candidates=((128, 256), (256, 512), (512, 512)),
+    analysis=_elemwise_analysis,
 )
 register_op(
     "packed",
@@ -248,6 +421,7 @@ register_op(
     pallas=_packed_pallas,
     default_block=PACKED_BLOCK,
     block_candidates=((64, 128), (128, 256), (256, 256)),
+    analysis=_packed_analysis,
 )
 # matmul blocks carry the k_unroll autotune axis as a 4th component and the
 # pipeline_depth axis as a 5th (K_UNROLL_CANDIDATES / PIPELINE_CANDIDATES in
@@ -269,6 +443,7 @@ register_op(
     pallas=_matmul_int_pallas,
     default_block=MATMUL_BLOCKS + (DEFAULT_K_UNROLL,),
     block_candidates=_MATMUL_CANDIDATES,
+    analysis=_matmul_int_analysis,
 )
 register_op(
     "matmul_emul",
@@ -276,6 +451,7 @@ register_op(
     pallas=_matmul_emul_pallas,
     default_block=MATMUL_BLOCKS + (DEFAULT_K_UNROLL,),
     block_candidates=_MATMUL_CANDIDATES,
+    analysis=_matmul_emul_analysis,
 )
 # attention blocks are (q_chunk, kv_chunk[, pipeline_depth]); the depth
 # variants run the explicit double-buffered kv sweep (bit-identical output)
@@ -291,8 +467,10 @@ register_op(
     pallas=_attention_pallas,
     default_block=(512, 512),
     block_candidates=_ATTENTION_CANDIDATES,
+    analysis=_attention_analysis,
 )
-register_op("sqrt", ref=_sqrt_ref)   # Pallas impl: future PR, plugs in here
+register_op("sqrt", ref=_sqrt_ref,   # Pallas impl: future PR, plugs in here
+            analysis=_sqrt_analysis)
 
 
 # ------------------------------------------------------------- public API --

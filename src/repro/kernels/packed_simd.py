@@ -29,19 +29,25 @@ from jax.experimental import pallas as pl
 from repro.core.simdive import SimdiveSpec
 from . import datapath as dp
 
-__all__ = ["packed_pallas"]
+__all__ = ["packed_pallas", "packed_word_op"]
 
 DEFAULT_BLOCK = (128, 256)
 
 
-def _kernel(a_ref, b_ref, tab_ref, mode_ref, o_ref, *, spec: SimdiveSpec,
-            op: str, frac_out: int):
+def packed_word_op(aw, bw, tab, mode=None, *, spec: SimdiveSpec, op: str,
+                   frac_out: int):
+    """The packed kernel body as a pure word->word function: expand lanes,
+    run the shared SISD datapath per lane, repack onto the doubled bus.
+
+    Factored out of the Pallas kernel so the static analyzer
+    (:mod:`repro.analysis.widthcheck`) traces exactly the arithmetic the
+    kernel executes — lane isolation is *proved* on this function.
+    """
     width = spec.width                      # 8 (4 lanes) or 16 (2 lanes)
-    tab = tab_ref[...]
-    a_lanes = dp.lane_expand(a_ref[...], width)
-    b_lanes = dp.lane_expand(b_ref[...], width)
+    a_lanes = dp.lane_expand(aw, width)
+    b_lanes = dp.lane_expand(bw, width)
     if op == "mixed":
-        m_lanes = dp.lane_expand(mode_ref[...], width)
+        m_lanes = dp.lane_expand(mode, width)
     else:
         m_lanes = [None] * len(a_lanes)
     outs = [
@@ -50,7 +56,14 @@ def _kernel(a_ref, b_ref, tab_ref, mode_ref, o_ref, *, spec: SimdiveSpec,
                    round_out=spec.round_output, in_kernel=True)
         for a, b, m in zip(a_lanes, b_lanes, m_lanes)
     ]
-    o_ref[...] = dp.lane_repack(outs, 2 * width)
+    return dp.lane_repack(outs, 2 * width)
+
+
+def _kernel(a_ref, b_ref, tab_ref, mode_ref, o_ref, *, spec: SimdiveSpec,
+            op: str, frac_out: int):
+    mode = mode_ref[...] if op == "mixed" else None
+    o_ref[...] = packed_word_op(a_ref[...], b_ref[...], tab_ref[...], mode,
+                                spec=spec, op=op, frac_out=frac_out)
 
 
 @functools.partial(

@@ -36,6 +36,7 @@ __all__ = [
     "BoundOp",
     "register_op",
     "registered_ops",
+    "all_ops",
     "op_default_block",
     "get_op",
     "resolve_backend",
@@ -63,6 +64,11 @@ class OpImpl:
     pallas: Callable[..., Any] | None = None
     default_block: tuple | None = None
     block_candidates: tuple = ()
+    #: analysis metadata for repro.analysis.widthcheck: ``analysis(width)``
+    #: returns a list of TraceCase (verify these), a str (declared skip
+    #: with reason), or None (width unsupported). Ops registered without
+    #: it show up as coverage gaps and fail the --gate run.
+    analysis: Callable[[int], Any] | None = None
 
 
 _REGISTRY: dict[str, OpImpl] = {}
@@ -73,10 +79,12 @@ _BUILTINS_LOADED = False
 def register_op(name: str, *, ref: Callable, pallas: Callable | None = None,
                 default_block: tuple | None = None,
                 block_candidates: tuple = (),
+                analysis: Callable | None = None,
                 override: bool = False) -> OpImpl:
     """Register a new op under ``name``; the hook for plugging in ops
     without touching ops.py. ``override=True`` replaces an existing entry
-    (tests / experiments)."""
+    (tests / experiments). ``analysis`` is the widthcheck metadata hook —
+    see :class:`OpImpl` and kernels/README.md "Static analysis"."""
     if name in _REGISTRY and not override:
         raise ValueError(f"op {name!r} already registered "
                          "(pass override=True to replace)")
@@ -86,7 +94,8 @@ def register_op(name: str, *, ref: Callable, pallas: Callable | None = None,
             "block_candidates (the registry passes block= to every call)")
     entry = OpImpl(name=name, ref=ref, pallas=pallas,
                    default_block=default_block,
-                   block_candidates=tuple(block_candidates))
+                   block_candidates=tuple(block_candidates),
+                   analysis=analysis)
     _REGISTRY[name] = entry
     return entry
 
@@ -101,6 +110,13 @@ def _ensure_builtin_ops() -> None:
 def registered_ops() -> tuple[str, ...]:
     _ensure_builtin_ops()
     return tuple(sorted(_REGISTRY))
+
+
+def all_ops() -> tuple[OpImpl, ...]:
+    """Every registered OpImpl, name-sorted — the enumeration the static
+    analyzer (repro.analysis) iterates to build its ops x widths matrix."""
+    _ensure_builtin_ops()
+    return tuple(_REGISTRY[k] for k in sorted(_REGISTRY))
 
 
 def op_default_block(name: str) -> tuple | None:
@@ -234,9 +250,14 @@ def _is_concrete(arrays) -> bool:
 
 
 def _time_once(fn: Callable, *args, **kw) -> float:
+    # Relative A/B candidate timing only; metrics.timing imports this
+    # module, and absolute accuracy is irrelevant for picking the faster
+    # block, so the harness is deliberately not used here.
     jax.block_until_ready(fn(*args, **kw))          # warm / compile
+    # simdive-lint: allow(timing-outside-harness): A/B block pick, see above
     t0 = time.perf_counter()
     jax.block_until_ready(fn(*args, **kw))
+    # simdive-lint: allow(timing-outside-harness): A/B block pick, see above
     return time.perf_counter() - t0
 
 
@@ -308,6 +329,15 @@ def get_op(op: str, spec, backend: str = "auto", *,
     if entry is None:
         raise KeyError(
             f"unknown op {op!r}; registered: {sorted(_REGISTRY)}")
+    if getattr(spec, "width", 0) > 16 and not jax.config.read("jax_enable_x64"):
+        # Loud instead of silent: width-32 lanes need uint64 intermediates.
+        # Before this guard, sensitivity-ladder pruning just auto-excluded
+        # these configs and callers saw nothing; now misconfiguration fails
+        # at dispatch with the fix spelled out.
+        raise RuntimeError(
+            f"op {op!r} at width {spec.width} needs uint64 intermediates: "
+            "enable x64 (jax.config.update('jax_enable_x64', True) or "
+            "JAX_ENABLE_X64=1) or use width <= 16")
     resolved = resolve_backend(backend)
     if resolved != "ref" and entry.pallas is None:
         if backend == "auto":
