@@ -43,7 +43,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.error_lut import build_table
-from repro.core.mitchell import work_dtype
+from repro.core.mitchell import lane_max_float, work_dtype
 from repro.core.simdive import SimdiveSpec
 from . import datapath as dp
 from .registry import resolve_backend
@@ -88,7 +88,11 @@ def softmax_div(acc, l, tab, *, width: int, index_bits: int = 3,
     top = jnp.maximum(jnp.max(num, axis=-1, keepdims=True), den)
     ex = jnp.floor(jnp.log2(jnp.maximum(top, jnp.float32(1e-30))))
     sc = jnp.exp2(jnp.float32(width - 2) - ex)
-    lim = jnp.float32((1 << width) - 1)
+    # NOT float32(2^width - 1): at width 32 that rounds up to 2^width, and a
+    # clip against it admits an operand one past the lane maximum (the LOD
+    # then yields k == width and the fraction shift F - k goes negative).
+    # Found by repro.analysis.widthcheck (lane-domain, w32).
+    lim = jnp.float32(lane_max_float(width))
     dt = work_dtype(width)
     qn = jnp.clip(jnp.round(num * sc), 0.0, lim).astype(dt)
     qd = jnp.clip(jnp.round(den * sc), 1.0, lim).astype(dt)
