@@ -48,6 +48,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.registry import get_op
+from .mitchell import lane_max_float, work_dtype
 from .simdive import SimdiveSpec
 
 __all__ = [
@@ -277,15 +278,20 @@ def _fixed_point_div(num: jax.Array, den: jax.Array, cfg: ApproxConfig):
     spec, backend = cfg.resolve("div", cfg.div_width)
     w = spec.width
     if w > 16:
+        # clip both sides to the *lane* maximum, not the carrier dtype's:
+        # the old 2^63 bound admitted operands far past 2^width - 1, which
+        # the log datapath's LOD maps outside the F-bit fraction field.
+        # Found by repro.analysis.widthcheck (lane-domain, w32).
         SC = jnp.float32(2 ** 16)
-        qn = jnp.clip(jnp.round(num * SC), 0, 2.0 ** 63).astype(jnp.uint64)
-        qd = jnp.maximum(jnp.round(den * SC), 1).astype(jnp.uint64)
+        lim = jnp.float32(lane_max_float(w))
+        qn = jnp.clip(jnp.round(num * SC), 0, lim).astype(work_dtype(w))
+        qd = jnp.clip(jnp.round(den * SC), 1, lim).astype(work_dtype(w))
     else:
         # shared per-call exponent so the larger side fills the lane
         top = jnp.maximum(jnp.max(num), jnp.max(den))
         ex = jnp.floor(jnp.log2(jnp.maximum(top, 1e-30)))
         SC = jnp.exp2(jnp.float32(w - 1) - ex - 1)
-        lim = jnp.float32(2 ** w - 1)
+        lim = jnp.float32(lane_max_float(w))
         qn = jnp.clip(jnp.round(num * SC), 0, lim).astype(jnp.uint32)
         qd = jnp.clip(jnp.round(den * SC), 1, lim).astype(jnp.uint32)
     div = get_op("elemwise", spec, backend=backend)
@@ -313,8 +319,11 @@ def attention_div(acc: jax.Array, l: jax.Array, cfg: ApproxConfig):
     top = jnp.maximum(jnp.max(num, axis=-1, keepdims=True), den)
     ex = jnp.floor(jnp.log2(jnp.maximum(top, 1e-30)))
     sc = jnp.exp2(jnp.float32(w - 2) - ex)
-    lim = jnp.float32(2 ** w - 1)
-    dt = jnp.uint64 if w > 16 else jnp.uint32
+    # float32(2^32 - 1) rounds UP to 2^32, so at w=32 the old
+    # `2 ** w - 1` limit let a clipped operand land one past the lane
+    # maximum. Found by repro.analysis.widthcheck (lane-domain, w32).
+    lim = jnp.float32(lane_max_float(w))
+    dt = work_dtype(w)
     qn = jnp.clip(jnp.round(num * sc), 0, lim).astype(dt)
     qd = jnp.clip(jnp.round(den * sc), 1, lim).astype(dt)
     div = get_op("elemwise", spec, backend=backend)
@@ -372,7 +381,12 @@ def _approx_rmsnorm_impl(x, gamma, eps, cfg):
         #   r  = sqrt(qm)           = sqrt(m) * 2^16
         #   q  = (2^31 / r) * 2^16  = rsqrt(m) * 2^31
         spec, backend = cfg.resolve("div", cfg.div_width)
-        qm = jnp.maximum(jnp.round((ms + eps) * jnp.float32(2.0 ** 32)), 1.0)
+        # qm feeds lod_log(., width) directly, so it must stay inside the
+        # spec.width-bit lane; ms >= 1 would otherwise push qm past 2^32 - 1
+        # (and float32 cannot even represent that limit — it rounds up to
+        # 2^32). Found by repro.analysis.widthcheck (lane-domain, w32).
+        qm = jnp.clip(jnp.round((ms + eps) * jnp.float32(2.0 ** 32)),
+                      1.0, jnp.float32(lane_max_float(spec.width)))
         qm = qm.astype(jnp.uint64)
         # sqrt has no Pallas impl yet — 'auto' serves it from ref on any host
         sqrt_op = get_op(
