@@ -1,0 +1,244 @@
+"""repro.analysis tests: the widthcheck abstract interpreter + lint gate.
+
+Three layers:
+
+* **gate** — the full ops x widths matrix proves clean, every registered op
+  carries analysis metadata, the report is byte-deterministic, and the AST
+  lint pass has no findings (grandfathered sites carry allow comments).
+* **mutations** — re-introduce the bug classes the analyzer exists to catch
+  (dropped repack guard, unconditional anti-log shift, too-narrow
+  accumulator, the float32 ``2^32 - 1`` clip limit) and assert each one is
+  detected with a source-located diagnostic.
+* **regressions** — pin the concrete numeric facts behind the real bugs
+  this pass found in the tree (float32 rounds ``2^32 - 1`` *up* to
+  ``2^32``; ``lane_max_float`` is the largest safe clip limit).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import (ArgSpec, TraceCase, check_case, render_text,
+                            run_lint, run_matrix, to_json)
+from repro.core import SimdiveSpec
+from repro.core.mitchell import frac_bits, lane_max_float
+from repro.kernels import datapath as dp
+from repro.kernels import registry
+from repro.kernels.registry import get_op
+
+_IB = 3
+
+
+def _findings(fn, args, label="mutant", requires_x64=False):
+    rep = check_case(TraceCase(label=label, fn=fn, args=args,
+                               requires_x64=requires_x64))
+    return rep.findings
+
+
+# ================================================================== gate ==
+def test_full_matrix_proves_clean():
+    res = run_matrix()
+    assert res.ok, "\n".join(f.render() for f in res.findings)
+    assert not res.gaps
+    assert res.reports, "matrix ran no cases"
+
+
+def test_every_registered_op_has_analysis_metadata():
+    ops = registry.all_ops()
+    assert ops, "registry is empty"
+    missing = [impl.name for impl in ops if impl.analysis is None]
+    assert not missing, f"ops without analysis metadata: {missing}"
+
+
+def test_lint_is_clean():
+    fs = run_lint()
+    assert fs == [], "\n".join(f.render() for f in fs)
+
+
+def test_report_is_byte_deterministic():
+    import json
+    a, b = run_matrix(ops=["sqrt"]), run_matrix(ops=["sqrt"])
+    assert render_text(a) == render_text(b)
+    assert json.dumps(to_json(a), sort_keys=True) == \
+        json.dumps(to_json(b), sort_keys=True)
+
+
+def test_declared_skips_are_reasoned():
+    res = run_matrix()
+    for op, w, reason in res.skips:
+        assert reason and reason != "width not supported" or w not in (8, 16, 32)
+    skipped = {(op, w) for op, w, _ in res.skips}
+    # the audited exclusion list — additions must be deliberate
+    assert skipped == {("matmul_emul", 32), ("matmul_int", 16),
+                       ("matmul_int", 32), ("packed", 32)}
+
+
+def test_antilog_bus_contract_is_recorded():
+    # the interval domain can't see the mant*2^shl correlation; the proof
+    # leans on the require/ensure pair — make sure the report says so
+    res = run_matrix(ops=["elemwise"], widths=[8])
+    assert res.ok
+    assumed = [a for r in res.reports for a in r.assumed]
+    assert any("antilog/8 product bus" in a for a in assumed)
+
+
+def test_x64_guard_is_loud():
+    spec = SimdiveSpec(width=32, coeff_bits=8)
+    try:
+        jax.config.update("jax_enable_x64", False)
+        with pytest.raises(RuntimeError, match="uint64|x64"):
+            get_op("elemwise", spec, backend="ref")
+    finally:
+        jax.config.update("jax_enable_x64", True)
+    get_op("elemwise", spec, backend="ref")     # guard passes with x64 on
+
+
+# ============================================================= mutations ==
+def test_mutation_repack_without_guard_is_lane_overlap():
+    # drop lane_repack's output-bus guard: stride by the *input* width with
+    # no `& omask` — 16-bit products land 8 bits apart and smear into the
+    # neighbor lane
+    width, owidth = 8, 16
+    tab = dp.op_table("mul", width, 6, _IB)
+
+    def mutant(aw, bw):
+        a_lanes = dp.lane_expand(aw, width)
+        b_lanes = dp.lane_expand(bw, width)
+        outs = [dp.lane_op(a, b, tab, width=width, index_bits=_IB, op="mul",
+                           in_kernel=True)
+                for a, b in zip(a_lanes, b_lanes)]
+        w = jnp.zeros_like(outs[0])
+        for i, lane in enumerate(outs[:2]):
+            w = w | (lane << jnp.uint32(width * i))     # BUG: width stride
+        return w
+
+    word = ArgSpec((8, 64), np.uint32, 0, (1 << 32) - 1)
+    fs = _findings(mutant, (word, word))
+    assert any(f.rule == "lane-overlap" for f in fs), \
+        "\n".join(f.render() for f in fs)
+    assert any("test_analysis" in f.source
+               for f in fs if f.rule == "lane-overlap")
+
+
+def test_mutation_unconditional_antilog_shift_is_caught():
+    # the anti-log barrel shifter guards I - F behind `I >= F`; the mutant
+    # subtracts unconditionally, so small log values wrap to ~2^32 shifts
+    width = 8
+    F = frac_bits(width)
+
+    def mutant(ls):
+        fF = jnp.asarray(F, ls.dtype)
+        Xs = ls & ((jnp.asarray(1, ls.dtype) << fF) - 1)
+        mant = (jnp.asarray(1, ls.dtype) << fF) + Xs
+        shl = (ls >> fF) - fF                   # BUG: no `I >= F` guard
+        return mant << shl
+
+    ls = ArgSpec((64,), np.uint32, 0, (1 << (F + 5)) - 1)
+    fs = _findings(mutant, (ls,))
+    assert fs, "unguarded unsigned underflow escaped the analyzer"
+    assert any("underflow" in f.message or f.rule == "shift-range"
+               for f in fs), "\n".join(f.render() for f in fs)
+    assert all(f.source for f in fs)
+
+
+def test_mutation_narrow_accumulator_is_caught():
+    # width-16 products fill the full 32-bit bus; accumulating K=512 of
+    # them in a 32-bit register overflows (this is exactly why matmul_int
+    # w16 is a declared skip, not a proved case)
+    width, K = 16, 512
+    tab = dp.op_table("mul", width, 8, _IB)
+
+    def mutant(a, b):
+        p = dp.lane_op(a, b, tab, width=width, index_bits=_IB, op="mul",
+                       in_kernel=True)
+        return jnp.sum(p, axis=1, dtype=jnp.uint32)     # BUG: 32-bit acc
+
+    lane = ArgSpec((8, K), np.uint32, 0, (1 << width) - 1)
+    fs = _findings(mutant, (lane, lane))
+    assert any(f.rule == "overflow" for f in fs), \
+        "\n".join(f.render() for f in fs)
+
+
+def test_mutation_int32_accumulator_is_signedness_crossing():
+    # the same accumulator narrowed to *signed* int32: the uint32 product
+    # bus doesn't fit, and the conversion itself is the bug
+    width = 16
+    tab = dp.op_table("mul", width, 8, _IB)
+
+    def mutant(a, b):
+        p = dp.lane_op(a, b, tab, width=width, index_bits=_IB, op="mul",
+                       in_kernel=True)
+        return jnp.sum(p.astype(jnp.int32), axis=1)     # BUG: signed cast
+
+    lane = ArgSpec((8, 512), np.uint32, 0, (1 << width) - 1)
+    fs = _findings(mutant, (lane, lane))
+    assert any(f.rule in ("signedness", "overflow") for f in fs), \
+        "\n".join(f.render() for f in fs)
+
+
+def test_mutation_float32_lane_limit_is_lane_domain():
+    # the bug this pass found in the tree: float32(2^32 - 1) rounds UP to
+    # 2^32, so clipping against it admits an operand one past the lane
+    # maximum and the LOD's fraction shift goes negative
+    def mutant(x):
+        lim = jnp.float32((1 << 32) - 1)        # BUG: not representable
+        q = jnp.clip(jnp.round(x), 0, lim).astype(jnp.uint64)
+        return dp.lod_log(q, 32)
+
+    x = ArgSpec((64,), np.float32, 0.0, 1e30)
+    fs = _findings(mutant, (x,), requires_x64=True)
+    assert any(f.rule == "lane-domain" for f in fs), \
+        "\n".join(f.render() for f in fs)
+
+    def fixed(x):
+        lim = jnp.float32(lane_max_float(32))
+        q = jnp.clip(jnp.round(x), 0, lim).astype(jnp.uint64)
+        return dp.lod_log(q, 32)
+
+    assert _findings(fixed, (x,), requires_x64=True) == []
+
+
+def test_guarded_unsigned_sub_proves_clean_and_bare_sub_does_not():
+    # the deferred-underflow mechanism: where(a >= b, a - b, _) is the
+    # datapath's barrel-shifter idiom and must not be flagged
+    u = ArgSpec((16,), np.uint32, 0, 1000)
+
+    def guarded(a, b):
+        return jnp.where(a >= b, a - b, jnp.zeros_like(a))
+
+    assert _findings(guarded, (u, u)) == []
+    fs = _findings(lambda a, b: a - b, (u, u))
+    assert fs and any("underflow" in f.message for f in fs)
+
+
+# ============================================================ regressions ==
+def test_float32_cannot_represent_uint32_max():
+    # the root numeric fact: rounding goes UP, past the lane edge
+    assert float(jnp.float32((1 << 32) - 1)) == 2.0 ** 32
+    assert float(jnp.float32((1 << 16) - 1)) == 65535.0   # w16 is exact
+
+
+def test_lane_max_float_is_largest_safe_clip():
+    assert lane_max_float(8) == 255.0
+    assert lane_max_float(16) == 65535.0
+    assert lane_max_float(32) == 4294967040.0
+    for w in (8, 16, 32):
+        m = lane_max_float(w)
+        assert float(jnp.float32(m)) == m       # representable exactly
+        assert m <= (1 << w) - 1
+
+
+def test_clip_cast_stays_in_lane_at_width_32():
+    big = jnp.float32(1e30)
+    good = jnp.clip(big, 0, jnp.float32(lane_max_float(32))).astype(jnp.uint64)
+    assert int(good) <= (1 << 32) - 1
+    bad = jnp.clip(big, 0, jnp.float32((1 << 32) - 1)).astype(jnp.uint64)
+    assert int(bad) == 1 << 32                  # one past the lane: the bug
+
+
+def test_softmax_div_w32_proves_clean():
+    # regression for the flash-attention finalize fix: the quantize ladder
+    # at width 32 must carry no lane-domain finding
+    res = run_matrix(ops=["attention"], widths=[32])
+    assert res.ok, "\n".join(f.render() for f in res.findings)
+    assert res.reports
