@@ -1,0 +1,21 @@
+"""CI-facing alias for ``python -m repro.analysis``.
+
+The static gate lives next to the other gate entrypoints
+(``benchmarks/compare.py``, ``benchmarks/tune.py``) so one directory holds
+everything CI runs; all logic is in :mod:`repro.analysis`.
+
+Usage (same flags as the module CLI):
+
+  python benchmarks/analyze.py --gate
+  python benchmarks/analyze.py --json --out results/analysis_report.json
+  python benchmarks/analyze.py --op elemwise --width 8
+"""
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+from repro.analysis.__main__ import main  # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -27,6 +27,10 @@ def main():
     ap.add_argument("--sp", action="store_true")
     ap.add_argument("--multi", action="store_true")
     ap.add_argument("--dump", default=None, help="write full HLO text here")
+    ap.add_argument("--analysis-width", type=int, default=16,
+                    help="lane width for the static-analysis verdicts")
+    ap.add_argument("--no-analysis", action="store_true",
+                    help="skip the per-op widthcheck verdict footer")
     args = ap.parse_args()
 
     from repro.launch.dryrun import lower_cell, _DTYPE_BYTES
@@ -90,11 +94,24 @@ def main():
         print(f"{n/2**30:9.3f} GiB  x{mat_count[key]:<4d} {key}")
 
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):      # CPU host returns [dict]
+        cost = cost[0] if cost else {}
     print(f"flops/device: {cost.get('flops', 0):.4g}   "
           f"bytes(xla): {cost.get('bytes accessed', 0):.4g}")
     mem = compiled.memory_analysis()
     print(f"peak bytes/device: "
           f"{(mem.argument_size_in_bytes + mem.output_size_in_bytes + mem.temp_size_in_bytes - mem.alias_size_in_bytes)/2**30:.2f} GiB")
+
+    if not args.no_analysis:
+        # the perf profile above says where the bytes go; this footer says
+        # whether the integer datapath behind those ops is *proved* safe
+        # at the inspected lane width (repro.analysis.widthcheck)
+        from repro.analysis import verdict_for
+        from repro.kernels import registry
+        w = args.analysis_width
+        print(f"-- static analysis verdicts (width {w}) --")
+        for impl in registry.all_ops():
+            print(f"{impl.name:>12}: {verdict_for(impl.name, w)}")
 
 
 if __name__ == "__main__":

@@ -80,6 +80,7 @@ def main(report=print, quick=False):
 
     # pallas kernel (interpret) single-shot sanity at reduced size
     small_a, small_b = aw[:16, :64], bw[:16, :64]
+    # simdive-lint: allow(hardcoded-block): single-shot interpret sanity
     out = get_op("packed", spec, backend="pallas",
                  block=(16, 64))(small_a, small_b, op="mul")
     report(f"table3,pallas-packed-kernel validated,{out.shape},shape"

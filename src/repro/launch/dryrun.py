@@ -522,9 +522,9 @@ def _attention_fuse_pairs(cfg) -> tuple:
 
 def analyze(lowered, mesh, meta, arch=None, shape_name=None,
             multi_pod=False, cost_variants=True, **lower_kw) -> dict:
-    t0 = time.time()
+    t0 = time.time()  # simdive-lint: allow(timing-outside-harness): compile wall-clock, not kernel timing
     compiled = lowered.compile()
-    compile_s = time.time() - t0
+    compile_s = time.time() - t0  # simdive-lint: allow(timing-outside-harness): compile wall-clock, not kernel timing
     mem = compiled.memory_analysis()
     result = {
         **meta,

@@ -114,14 +114,14 @@ def train(cfg, shape: ShapeConfig, *, steps: int, ckpt_dir: str | None,
             jitted = jax.jit(step_fn, donate_argnums=(0, 1))
 
         losses = []
-        t0 = time.time()
+        t0 = time.time()  # simdive-lint: allow(timing-outside-harness): step wall-clock for throughput logging
         for step in range(start_step, steps):
             batch = {k: jnp.asarray(v) for k, v in source.batch(step).items()}
             params, opt_state, metrics = jitted(params, opt_state, batch)
             loss = float(metrics["loss"])
             losses.append(loss)
             if step % log_every == 0 or step == steps - 1:
-                dt = time.time() - t0
+                dt = time.time() - t0  # simdive-lint: allow(timing-outside-harness): step wall-clock for throughput logging
                 print(f"[step {step:5d}] loss={loss:.4f} "
                       f"gnorm={float(metrics['grad_norm']):.3f} "
                       f"lr={float(metrics['lr']):.2e} ({dt:.1f}s)", flush=True)
