@@ -54,6 +54,7 @@ def _load_trajectory_module():
         sys.modules[name] = mod      # dataclasses resolve via sys.modules
         try:
             spec.loader.exec_module(mod)
+        # simdive-lint: allow(swallowed-exception): sys.modules cleanup only — re-raised
         except BaseException:
             sys.modules.pop(name, None)
             raise

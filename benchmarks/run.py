@@ -178,6 +178,19 @@ def _grid_configs(quick: bool):
         yield dict(kernel="serve", op="serve", width=width, coeff_bits=cb,
                    backend="ref", arch="smollm-360m", batch=4, prompt=32,
                    gen=8, **common)
+    # fault: the SEU resilience family (repro.faults.campaign) — per-site
+    # error amplification of the elemwise datapath under the deterministic
+    # default site set, plus guard/scrub detectability counts. Fully
+    # deterministic end to end (fixed operand sets, seeded hash-pattern
+    # transient strikes), so the w8 rows gate in the exhaustive class;
+    # the gate catches fault *containment* regressing — a datapath change
+    # that lets the same upset corrupt more, or corrupt harder
+    for op in ("mul", "div"):
+        yield dict(kernel="fault", op=op, width=8, coeff_bits=6,
+                   backend="ref", **common)
+        if not quick:
+            yield dict(kernel="fault", op=op, width=16, coeff_bits=8,
+                       backend="ref", **common)
 
 
 def _cfg_geometry(cfg: dict, quick: bool) -> dict:
@@ -219,6 +232,14 @@ def _cfg_geometry(cfg: dict, quick: bool) -> dict:
         shapes = ((cfg["batch"], cfg["prompt"]),)
         g = {"batch": cfg["batch"], "prompt": cfg["prompt"],
              "gen": cfg["gen"]}
+    elif cfg["kernel"] == "fault":
+        # same operand sets as the elemwise family: the w8 rows sweep the
+        # exhaustive grid, w16 the fixed-seed sample (fault rows never
+        # time anything, so the key's buckets are always declared here)
+        exhaustive = cfg["width"] == 8
+        n = 65025 if exhaustive else 65536
+        shapes = ((n,), (n,))
+        g = {"exhaustive": exhaustive, "n": n}
     else:                                  # matmul_int / matmul_emul
         m = 32 if interp else 64
         shapes = ((m, cfg["k"]), (cfg["k"], m))
@@ -464,6 +485,41 @@ def _run_serve(cfg: dict, quick: bool) -> dict:
     }
 
 
+def _run_fault(cfg: dict, quick: bool) -> dict:
+    """SEU resilience row: the deterministic fault-site sweep of one
+    (op, width, coeff_bits) through :mod:`repro.faults.campaign`.
+
+    The gated ``error`` object carries per-field maxima across the site
+    set — the worst faulted ARE%, worst-case error, changed-output rate —
+    so the gate flags a change that weakens the datapath's fault
+    containment (the same upset suddenly corrupting more outputs, or
+    corrupting them harder). Detectability (guard trips + scrub hits) is
+    recorded per site; the tier-1 campaign smoke asserts it, the BENCH
+    row makes it auditable.
+    """
+    from repro.faults.campaign import default_sites, measure_site
+
+    op, width, cb = cfg["op"], cfg["width"], cfg["coeff_bits"]
+    geo = _cfg_geometry(cfg, quick)
+    results = [measure_site(s, op, width=width, coeff_bits=cb,
+                            n=geo["n"], seed=GRID_SEED)
+               for s in default_sites(op, width)]
+    return {
+        "n": geo["n"], "seed": GRID_SEED,
+        "exhaustive": geo["exhaustive"],
+        "shape_buckets": geo["shape_buckets"],
+        "frac_out": 0 if op == "mul" else DIV_FRAC_OUT,
+        "sites": [r.as_dict() for r in results],
+        "n_sites": len(results),
+        "detected_sites": sum(r.detected for r in results),
+        "error": {
+            "are_pct": max(r.are_fault_pct for r in results),
+            "wce": max(r.wce_fault for r in results),
+            "error_rate": max(r.changed_rate for r in results),
+        },
+    }
+
+
 _GRID_RUNNERS = {
     "elemwise": _run_elemwise,
     "packed": _run_packed,
@@ -471,6 +527,7 @@ _GRID_RUNNERS = {
     "matmul_emul": _run_matmul,
     "attention": _run_attention,
     "serve": _run_serve,
+    "fault": _run_fault,
 }
 
 
@@ -514,10 +571,19 @@ def run_grid(report, quick: bool, records: list[dict],
         try:
             rec = {**base, "status": "ok",
                    **_GRID_RUNNERS[cfg["kernel"]](cfg, quick)}
-            err, tp = rec["error"], rec["throughput"]
-            report(f"grid,{_cfg_label(cfg)},ARE%={err['are_pct']:.4f},"
-                   f"NMED={err['nmed']:.3e},PRE%={err['pre_pct']:.3f},"
-                   f"mean_us={tp['mean_us']:.0f}")
+            if cfg["kernel"] == "fault" and "n_sites" in rec:
+                # fault rows time nothing; their headline is containment
+                report(f"grid,{_cfg_label(cfg)},"
+                       f"worstARE%={rec['error']['are_pct']:.4f},"
+                       f"changed={rec['error'].get('error_rate', 0.0):.3f},"
+                       f"detected={rec['detected_sites']}/"
+                       f"{rec['n_sites']}")
+            else:
+                err, tp = rec["error"], rec["throughput"]
+                report(f"grid,{_cfg_label(cfg)},ARE%={err['are_pct']:.4f},"
+                       f"NMED={err['nmed']:.3e},PRE%={err['pre_pct']:.3f},"
+                       f"mean_us={tp['mean_us']:.0f}")
+        # simdive-lint: allow(swallowed-exception): becomes a gated "failed" record, not silence
         except Exception as e:  # noqa: BLE001 — keep the sweep going
             failures += 1
             rec = {**base, "status": "failed",
@@ -527,6 +593,7 @@ def run_grid(report, quick: bool, records: list[dict],
                 # as its healthy baseline twin (it never timed anything)
                 rec["shape_buckets"] = _cfg_geometry(cfg, quick)[
                     "shape_buckets"]
+            # simdive-lint: allow(swallowed-exception): geometry must never mask the recorded failure
             except Exception:  # noqa: BLE001 — geometry must never mask
                 pass           # the original failure
             report(f"# !!! grid config {_cfg_label(cfg)} FAILED: "
@@ -572,6 +639,7 @@ def run_suites(report, wanted, quick: bool):
             suites[name] = {"status": "ok", "seconds": round(dt, 2),
                             "rows": _jsonify(rows)}
             report(f"# --- {name} done in {dt:.1f}s")
+        # simdive-lint: allow(swallowed-exception): recorded as a failed suite, counted against exit status
         except Exception as e:  # noqa: BLE001 — keep the harness sweeping
             failures += 1
             suites[name] = {"status": "failed",
@@ -615,6 +683,7 @@ def reuse_autotune(path: str) -> tuple[int, str]:
                 doc = migrate_doc(json.load(f))
         except FileNotFoundError:
             continue                   # scratch --bench-out: expected
+        # simdive-lint: allow(swallowed-exception): warned + next source; autotune preload is best-effort
         except Exception as e:  # noqa: BLE001 — corrupt: warn, fall back
             warn(f"{src} is not a readable trajectory "
                  f"({type(e).__name__}: {e}); trying the next source")
@@ -665,24 +734,56 @@ def append_trajectory(path: str, run_record: dict) -> None:
     aside to ``<path>.corrupt-<runid>`` — the accumulated history is the
     very thing the regression gate diffs against, so it is *never*
     silently discarded — and the run starts a fresh document.
+
+    Crash- and race-safe: the whole read-modify-write cycle holds an
+    exclusive ``flock`` on ``<path>.lock`` (two overlapping runs
+    serialize; neither append is lost) and the rewrite lands via
+    write-to-temp + ``os.replace``, so a crash mid-write leaves the
+    previous history intact instead of a truncated JSON document.
     """
-    doc = {"schema": SCHEMA_V2, "runs": []}
-    if os.path.exists(path):
+    import tempfile
+    try:
+        import fcntl
+    except ImportError:        # non-POSIX host: atomic replace still holds
+        fcntl = None
+    path = os.path.abspath(path)
+    lock = open(path + ".lock", "w")
+    try:
+        if fcntl is not None:
+            fcntl.flock(lock, fcntl.LOCK_EX)
+        doc = {"schema": SCHEMA_V2, "runs": []}
+        if os.path.exists(path):
+            try:
+                with open(path) as f:
+                    prev = json.load(f)
+                doc = migrate_doc(prev)
+            except (json.JSONDecodeError, OSError, TrajectoryError) as e:
+                runid = run_record.get("created_unix", "unknown")
+                aside = f"{path}.corrupt-{runid}"
+                os.replace(path, aside)
+                print(f"# !!! {path} is not a readable trajectory "
+                      f"({type(e).__name__}: {e}); kept it at {aside} and "
+                      "started a fresh history", file=sys.stderr)
+        doc["runs"].append(run_record)
+        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path),
+                                   prefix=os.path.basename(path) + ".",
+                                   suffix=".tmp")
         try:
-            with open(path) as f:
-                prev = json.load(f)
-            doc = migrate_doc(prev)
-        except (json.JSONDecodeError, OSError, TrajectoryError) as e:
-            runid = run_record.get("created_unix", "unknown")
-            aside = f"{path}.corrupt-{runid}"
-            os.replace(path, aside)
-            print(f"# !!! {path} is not a readable trajectory "
-                  f"({type(e).__name__}: {e}); kept it at {aside} and "
-                  "started a fresh history", file=sys.stderr)
-    doc["runs"].append(run_record)
-    with open(path, "w") as f:
-        json.dump(doc, f, indent=1)
-        f.write("\n")
+            with os.fdopen(fd, "w") as f:
+                json.dump(doc, f, indent=1)
+                f.write("\n")
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, path)
+        # simdive-lint: allow(swallowed-exception): cleanup only — re-raised below
+        except BaseException:
+            try:
+                os.unlink(tmp)   # never leave temp droppings behind
+            except OSError:
+                pass
+            raise
+    finally:
+        lock.close()
 
 
 def main() -> None:
@@ -716,9 +817,10 @@ def main() -> None:
         policy_record = {"path": os.path.basename(args.policy),
                          **policy.as_dict()}
     wanted = set(args.only.split(",")) if args.only else None
-    # 'attention' / 'serve' are the grid restricted to those kernels —
-    # handy when iterating on one path without re-sweeping every op
-    grid_kernels = {"attention", "serve"}
+    # 'attention' / 'serve' / 'fault' are the grid restricted to those
+    # kernels — handy when iterating on one path without re-sweeping
+    # every op
+    grid_kernels = {"attention", "serve", "fault"}
     valid = {name for name, _, _, _ in SUITES} | {"grid"} | grid_kernels
     if wanted is not None and not wanted <= valid:
         # a typo'd suite name must not append an empty trajectory record
@@ -751,6 +853,7 @@ def main() -> None:
         try:
             grid_failures = run_grid(
                 report, args.quick, grid_records, kernels=kernels)
+        # simdive-lint: allow(swallowed-exception): harness breakage is counted as a failure and fails the run
         except Exception as e:  # noqa: BLE001 — per-config capture is in
             # run_grid; this catches harness-level breakage, and the
             # records accumulated so far survive in grid_records

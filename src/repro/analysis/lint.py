@@ -17,6 +17,13 @@ Rules:
   checks/enables x64. Without ``jax_enable_x64`` jnp silently downcasts
   to uint32, which truncates 32-bit lane intermediates (the width-32
   hazard class the widthcheck pass proves against).
+* ``swallowed-exception`` — a bare ``except:`` / ``except Exception`` /
+  ``except BaseException`` in the serving stack (``launch/``) or the
+  benchmark harness (``benchmarks/``). Those are exactly the layers the
+  fault-injection subsystem hardens: a broad catch there can silently
+  serve a guard-tripped result or bury a failed sweep config. Catch the
+  specific exception (``GuardTripped``, ``TrajectoryError``, ...) or
+  annotate the site with why swallowing is the contract.
 
 Suppression: a ``# simdive-lint: allow(<rule>): <reason>`` comment on the
 offending line (or the line above) suppresses that rule there. The reason
@@ -37,6 +44,7 @@ LINT_RULES = {
     "interpret-literal": "select interpreter via backend='pallas-interpret'",
     "hardcoded-block": "block shapes come from the autotune cache",
     "unguarded-uint64": "jnp.uint64 needs an explicit x64 check",
+    "swallowed-exception": "serving/benchmark code must not blanket-catch",
 }
 
 _ALLOW_RE = re.compile(r"#\s*simdive-lint:\s*allow\(([a-z0-9-]+)\)\s*:\s*\S")
@@ -72,13 +80,30 @@ def _literal_tuple(node) -> bool:
         for e in node.elts)
 
 
+_BROAD_EXC = ("Exception", "BaseException")
+
+
+def _broad_handler(node: ast.ExceptHandler) -> str | None:
+    """'bare'/'Exception'/'BaseException' if the handler is a blanket
+    catch, else None. Tuple clauses count if any member is broad."""
+    t = node.type
+    if t is None:
+        return "bare except:"
+    names = t.elts if isinstance(t, ast.Tuple) else [t]
+    for n in names:
+        if isinstance(n, ast.Name) and n.id in _BROAD_EXC:
+            return f"except {n.id}"
+    return None
+
+
 class _Visitor(ast.NodeVisitor):
     def __init__(self, rel: str, lines, is_timing_harness: bool,
-                 is_tuning: bool):
+                 is_tuning: bool, is_resilient_layer: bool = False):
         self.rel = rel
         self.lines = lines
         self.is_timing_harness = is_timing_harness
         self.is_tuning = is_tuning
+        self.is_resilient_layer = is_resilient_layer
         self.findings: list = []
         self.uint64_sites: list = []      # (lineno,)
         self.has_x64_guard = False
@@ -120,6 +145,17 @@ class _Visitor(ast.NodeVisitor):
                            f"cache — pass block=None or go through get_op")
         self.generic_visit(node)
 
+    def visit_ExceptHandler(self, node: ast.ExceptHandler):
+        if self.is_resilient_layer:
+            broad = _broad_handler(node)
+            if broad:
+                self._flag(
+                    "swallowed-exception", node.lineno,
+                    f"{broad} in the serving/benchmark layer — catch the "
+                    "specific exception (GuardTripped, TrajectoryError, "
+                    "...) so faults fail loudly instead of being served")
+        self.generic_visit(node)
+
 
 def lint_file(path: Path, root: Path) -> list:
     rel = path.relative_to(root).as_posix()
@@ -134,6 +170,8 @@ def lint_file(path: Path, root: Path) -> list:
         rel, lines,
         is_timing_harness=rel.endswith("metrics/timing.py"),
         is_tuning=("/tuning/" in rel or rel.endswith("registry.py")),
+        is_resilient_layer=("/launch/" in rel
+                            or rel.startswith("benchmarks/")),
     )
     v.visit(tree)
     if v.uint64_sites and not v.has_x64_guard:

@@ -85,6 +85,12 @@ class ApproxConfig:
     # budget-selected policy drives every knob without model-code edits
     policy: object | None = None
     layer: str | None = None       # layer label for policy lookup
+    # guarded dispatch: every get_op below validates concrete outputs and
+    # raises registry.GuardTripped on violation (see kernels/README.md
+    # "Robustness"). Off by default: guards read outputs back to host, so
+    # they are for eager/campaign paths — jitted serving uses the
+    # scheduler watchdog instead.
+    guard: bool = False
 
     @property
     def enabled(self) -> bool:
@@ -212,7 +218,7 @@ def _approx_matmul_fwd_impl(x, w, cfg):
     spec, backend = cfg.resolve("matmul")
     qx, sx, scx = quantize_sign_magnitude(x2, spec.width)
     qw, sw, scw = quantize_sign_magnitude(w, spec.width, axis=0)
-    mm = get_op("matmul_emul", spec, backend=backend)
+    mm = get_op("matmul_emul", spec, backend=backend, guard=cfg.guard)
     acc = mm(qx, sx, qw, sw, k_chunk=cfg.k_chunk)
     out = acc.astype(jnp.float32) * (scx * scw)
     return out.reshape(*lead, w.shape[1]).astype(x.dtype)
@@ -261,7 +267,7 @@ def approx_matmul_int8(x: jax.Array, q: jax.Array, scale: jax.Array,
     qi = q.astype(jnp.int32)
     qw = jnp.abs(qi).astype(jnp.uint32)
     sw = jnp.where(qi < 0, -1, 1).astype(jnp.int32)
-    mm = get_op("matmul_emul", spec, backend=backend)
+    mm = get_op("matmul_emul", spec, backend=backend, guard=cfg.guard)
     acc = mm(qx, sx, qw, sw, k_chunk=cfg.k_chunk)
     out = acc.astype(jnp.float32) * (scx * scale.astype(jnp.float32))
     return out.reshape(*lead, q.shape[-1]).astype(x.dtype)
@@ -294,7 +300,7 @@ def _fixed_point_div(num: jax.Array, den: jax.Array, cfg: ApproxConfig):
         lim = jnp.float32(lane_max_float(w))
         qn = jnp.clip(jnp.round(num * SC), 0, lim).astype(jnp.uint32)
         qd = jnp.clip(jnp.round(den * SC), 1, lim).astype(jnp.uint32)
-    div = get_op("elemwise", spec, backend=backend)
+    div = get_op("elemwise", spec, backend=backend, guard=cfg.guard)
     q = div(qn, qd, op="div", frac_out=cfg.frac_out)
     return q.astype(jnp.float32) / jnp.float32(2 ** cfg.frac_out)
 
@@ -326,7 +332,7 @@ def attention_div(acc: jax.Array, l: jax.Array, cfg: ApproxConfig):
     dt = work_dtype(w)
     qn = jnp.clip(jnp.round(num * sc), 0, lim).astype(dt)
     qd = jnp.clip(jnp.round(den * sc), 1, lim).astype(dt)
-    div = get_op("elemwise", spec, backend=backend)
+    div = get_op("elemwise", spec, backend=backend, guard=cfg.guard)
     quot = div(qn, jnp.broadcast_to(qd, qn.shape), op="div",
                frac_out=frac_out)
     out = quot.astype(jnp.float32) * jnp.float32(2.0 ** -frac_out)
@@ -390,11 +396,11 @@ def _approx_rmsnorm_impl(x, gamma, eps, cfg):
         qm = qm.astype(jnp.uint64)
         # sqrt has no Pallas impl yet — 'auto' serves it from ref on any host
         sqrt_op = get_op(
-            "sqrt", spec,
+            "sqrt", spec, guard=cfg.guard,
             backend=backend if backend == "ref" else "auto")
         r = jnp.maximum(sqrt_op(qm), 1)
         one = jnp.full_like(r, jnp.uint64(1) << jnp.uint64(31))
-        div = get_op("elemwise", spec, backend=backend)
+        div = get_op("elemwise", spec, backend=backend, guard=cfg.guard)
         q = div(one, r, op="div", frac_out=16)
         inv = q.astype(jnp.float32) * jnp.float32(2.0 ** -31)
     return (x.astype(jnp.float32) * inv * gamma.astype(jnp.float32)).astype(x.dtype)

@@ -32,12 +32,15 @@ from functools import lru_cache
 import numpy as np
 import jax.numpy as jnp
 
+from repro.faults.inject import apply_table_faults, faults_enabled
+
 from .mitchell import frac_bits
 
 __all__ = [
     "ideal_correction_mul",
     "ideal_correction_div",
     "build_table",
+    "build_table_clean",
     "table_for",
     "region_index",
 ]
@@ -58,20 +61,8 @@ def ideal_correction_div(x1: np.ndarray, x2: np.ndarray) -> np.ndarray:
 
 
 @lru_cache(maxsize=None)
-def build_table(op: str, width: int, coeff_bits: int,
-                index_bits: int = 3) -> np.ndarray:
-    """Region-mean correction table as int32 in units of 2^-F.
-
-    op          : 'mul' or 'div'
-    width       : lane width (8/16/32) -- sets F = width-1
-    coeff_bits  : number of coefficient bits kept (0 => all-zero table, i.e.
-                  plain Mitchell). Quantization step = 2^(F-2-coeff_bits),
-                  floored at 1 integer unit: the paper's "one more LUT adds
-                  one bit of coefficient precision".
-    index_bits  : MSBs of each fraction used for the region index. 3 is the
-                  paper's 6-LUT scheme (64 regions); 4 models the 8-input
-                  ALM variant of §3.4 (256 regions).
-    """
+def _build_table_impl(op: str, width: int, coeff_bits: int,
+                      index_bits: int = 3) -> np.ndarray:
     if op not in ("mul", "div"):
         raise ValueError(op)
     F = frac_bits(width)
@@ -94,6 +85,39 @@ def build_table(op: str, width: int, coeff_bits: int,
     # keep the corrected mantissa inside its field: |c| < 2^(F-1)
     lim = (1 << (F - 1)) - 1
     return np.clip(q, -lim, lim).astype(np.int32)
+
+
+def build_table_clean(op: str, width: int, coeff_bits: int,
+                      index_bits: int = 3) -> np.ndarray:
+    """The pristine (never fault-injected) correction table — the oracle
+    :mod:`repro.faults.scrub` compares the live table against. Everything
+    else should call :func:`build_table`."""
+    return _build_table_impl(op, width, coeff_bits, index_bits)
+
+
+def build_table(op: str, width: int, coeff_bits: int,
+                index_bits: int = 3) -> np.ndarray:
+    """Region-mean correction table as int32 in units of 2^-F.
+
+    op          : 'mul' or 'div'
+    width       : lane width (8/16/32) -- sets F = width-1
+    coeff_bits  : number of coefficient bits kept (0 => all-zero table, i.e.
+                  plain Mitchell). Quantization step = 2^(F-2-coeff_bits),
+                  floored at 1 integer unit: the paper's "one more LUT adds
+                  one bit of coefficient precision".
+    index_bits  : MSBs of each fraction used for the region index. 3 is the
+                  paper's 6-LUT scheme (64 regions); 4 models the 8-input
+                  ALM variant of §3.4 (256 regions).
+
+    This is the single point every consumer reads tables through, so it
+    is also where :mod:`repro.faults` upsets configuration memory: armed
+    table faults corrupt a *copy* after the cached pristine build.
+    Disarmed, the lru-cached array is returned as-is — bit-identical.
+    """
+    tab = _build_table_impl(op, width, coeff_bits, index_bits)
+    if faults_enabled():
+        tab = apply_table_faults(tab, op=op, width=width)
+    return tab
 
 
 def table_for(op: str, width: int, coeff_bits: int,

@@ -1,0 +1,46 @@
+"""Fault injection & resilience measurement for the SIMDive datapath.
+
+SIMDive's correction terms live in FPGA configuration memory (LUTs), and
+its target domain is explicitly error-resilient applications — so a
+deployed soft multiplier-divider faces *soft errors* (SEU bit flips in
+correction tables and datapath registers) on top of its designed
+approximation. This package emulates exactly that fault class through
+the software datapath and measures what survives:
+
+  inject.py    FaultSpec + arm/disarm hooks (mirrors core/fastpath.py):
+               stuck-at / bit-flip, persistent / transient, targeting
+               correction-table entries, log-stage lane bits, and
+               packed-lane repack boundaries. Bit-identical and zero
+               overhead when disarmed.
+  scrub.py     Correction-table integrity scrub — the software analogue
+               of FPGA configuration-memory scrubbing. Deterministic
+               detection of persistent table upsets (which corrupt
+               results while staying finite, so output guards alone
+               cannot see them).
+  campaign.py  Fault-site sweeps per (op, width, coeff_bits) reporting
+               error amplification through repro.metrics (ARE/WCE delta,
+               NaN/Inf rate, ANN classification-accuracy drop).
+               ``python -m repro.faults.campaign`` is the CLI.
+
+Only the injection layer is imported eagerly; ``scrub`` and ``campaign``
+pull in the metrics/kernels layers and are imported explicitly.
+"""
+from .inject import (  # noqa: F401
+    FaultSpec,
+    active_faults,
+    apply_lane_faults,
+    apply_table_faults,
+    fault_injection,
+    faults_enabled,
+    set_faults,
+)
+
+__all__ = [
+    "FaultSpec",
+    "active_faults",
+    "apply_lane_faults",
+    "apply_table_faults",
+    "fault_injection",
+    "faults_enabled",
+    "set_faults",
+]

@@ -1,0 +1,241 @@
+"""SEU emulation hooks for the SIMDive datapath (one flag, one place).
+
+Fault model — the three places a single-event upset lands in the FPGA
+design this repo reproduces, and where the corresponding hook sits in
+the software datapath:
+
+  ``table``   a flipped bit in a correction-coefficient LUT
+              (configuration memory). Hook: ``core.error_lut.build_table``
+              applies the fault *after* the pristine lru-cached build, so
+              every consumer — ``table_for``, ``op_table``,
+              ``SimdiveSpec.tables``, the flash-attention divider —
+              sees the upset table. Always **persistent**: configuration
+              memory stays corrupted until scrubbed/reloaded
+              (see :mod:`repro.faults.scrub`).
+  ``log``     an upset bit on the log-stage output register
+              ``L = (k << F) | x_fp``. Hook: ``kernels.datapath.lod_log``.
+  ``pack``    an upset bit on the packed output bus where 2w-bit lane
+              results interleave into uint32 words. Hook:
+              ``kernels.datapath.lane_repack``.
+
+Lane faults may be **persistent** (every element, the stuck-at view of a
+latched upset) or **transient** (a seeded per-element strike pattern at
+``rate``, the radiation-flux view). Transient strikes are a deterministic
+hash of the lane value itself — kernel-safe, reproducible, and identical
+across backends, which is what a gated BENCH row family needs.
+
+Arm/disarm mirrors :mod:`repro.core.fastpath` exactly: a module-level
+tuple read at *trace* time, so :func:`set_faults` clears jax's
+compilation caches (stale executables of the other arming would
+otherwise keep serving) and resets timing warm-tracking. Disarmed, every
+hook is a no-op returning its input unchanged — bit-identical, zero
+traced ops.
+
+This module must not import anything from ``repro`` at module scope:
+``core.error_lut`` and ``kernels.datapath`` import *it*.
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+from dataclasses import dataclass
+
+import numpy as np
+import jax.numpy as jnp
+
+__all__ = [
+    "FaultSpec",
+    "active_faults",
+    "apply_lane_faults",
+    "apply_table_faults",
+    "fault_injection",
+    "faults_enabled",
+    "set_faults",
+]
+
+_SITES = ("table", "log", "pack")
+_KINDS = ("flip", "stuck0", "stuck1")
+_PERSISTENCE = ("persistent", "transient")
+
+
+@dataclass(frozen=True)
+class FaultSpec:
+    """One injected upset. Frozen + hashable so arming states compare.
+
+    site         'table' | 'log' | 'pack' — where the upset lands.
+    bit          upset bit position within the 32-bit entry / lane word.
+    kind         'flip' (XOR) | 'stuck0' (AND-NOT) | 'stuck1' (OR).
+    persistence  'persistent' | 'transient'. Table upsets are
+                 configuration memory and must be persistent.
+    op           table site only: 'mul' | 'div' restricts the upset to
+                 one op's table; None hits both.
+    width        restrict to one lane width (None = any width).
+    index        table site only: the upset entry (None = every entry,
+                 i.e. a stuck output bit on the whole LUT column).
+    rate         transient only: per-element strike probability.
+    seed         transient only: strike-pattern seed.
+    """
+
+    site: str
+    bit: int
+    kind: str = "flip"
+    persistence: str = "persistent"
+    op: str | None = None
+    width: int | None = None
+    index: int | None = None
+    rate: float = 1e-3
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.site not in _SITES:
+            raise ValueError(f"site must be one of {_SITES}, got {self.site!r}")
+        if self.kind not in _KINDS:
+            raise ValueError(f"kind must be one of {_KINDS}, got {self.kind!r}")
+        if self.persistence not in _PERSISTENCE:
+            raise ValueError(
+                f"persistence must be one of {_PERSISTENCE}, "
+                f"got {self.persistence!r}")
+        if not 0 <= int(self.bit) < 32:
+            raise ValueError(f"bit must be in [0, 32), got {self.bit}")
+        if self.op not in (None, "mul", "div"):
+            raise ValueError(f"op must be None | 'mul' | 'div', got {self.op!r}")
+        if self.site != "table":
+            if self.op is not None:
+                raise ValueError("op targets correction tables; "
+                                 f"meaningless for site={self.site!r}")
+            if self.index is not None:
+                raise ValueError("index targets correction-table entries; "
+                                 f"meaningless for site={self.site!r}")
+        else:
+            if self.persistence != "persistent":
+                raise ValueError(
+                    "table upsets are configuration memory: persistent "
+                    "until scrubbed — 'transient' is not a table fault")
+            if self.index is not None and int(self.index) < 0:
+                raise ValueError(f"index must be >= 0, got {self.index}")
+        if self.width is not None and self.width not in (8, 16, 32):
+            raise ValueError(f"width must be None | 8 | 16 | 32, "
+                             f"got {self.width}")
+        if self.persistence == "transient" and not 0.0 < self.rate <= 1.0:
+            raise ValueError(f"rate must be in (0, 1], got {self.rate}")
+
+
+_ACTIVE: tuple[FaultSpec, ...] = ()
+
+
+def active_faults() -> tuple[FaultSpec, ...]:
+    """The currently armed fault set (empty tuple when disarmed)."""
+    return _ACTIVE
+
+
+def faults_enabled() -> bool:
+    """True when at least one fault is armed. Every hook checks this
+    first so the disarmed path costs one tuple-truthiness test."""
+    return bool(_ACTIVE)
+
+
+def set_faults(specs=()) -> None:
+    """Arm exactly ``specs`` (empty = disarm). Clears jax compilation
+    caches: hooks are resolved at trace time, so cached executables of
+    the previous arming must not keep serving (same contract as
+    :func:`repro.core.fastpath.set_faithful`)."""
+    global _ACTIVE
+    specs = tuple(specs)
+    for s in specs:
+        if not isinstance(s, FaultSpec):
+            raise TypeError(f"expected FaultSpec, got {type(s).__name__}")
+    if specs == _ACTIVE:
+        return
+    _ACTIVE = specs
+    import jax
+
+    jax.clear_caches()
+    try:
+        # previously-warmed timing signatures must re-warm: their
+        # compiled executables are gone
+        from repro.metrics.timing import reset_warm_tracking
+
+        reset_warm_tracking()
+    except ImportError:  # metrics layer optional at this level
+        pass
+
+
+@contextmanager
+def fault_injection(*specs: FaultSpec):
+    """Arm ``specs`` for the dynamic extent, restoring the previous
+    arming (usually: disarmed) on exit — exception-safe."""
+    prev = _ACTIVE
+    set_faults(specs)
+    try:
+        yield
+    finally:
+        set_faults(prev)
+
+
+# ------------------------------------------------------------ table site --
+def apply_table_faults(tab: np.ndarray, *, op: str, width: int) -> np.ndarray:
+    """Upset a host-side int32 correction table. Returns the input object
+    itself when no armed fault matches (preserving the lru-cache identity
+    of the pristine table); otherwise a corrupted copy — the cached
+    original is never mutated."""
+    out = None
+    for s in _ACTIVE:
+        if s.site != "table":
+            continue
+        if s.op is not None and s.op != op:
+            continue
+        if s.width is not None and s.width != width:
+            continue
+        if out is None:
+            out = np.array(tab, dtype=np.int32, copy=True)
+        if s.index is not None and s.index >= out.size:
+            raise ValueError(
+                f"fault index {s.index} out of range for the {op} table's "
+                f"{out.size} entries (index_bits too small?)")
+        u = out.view(np.uint32)
+        m = np.uint32(1 << s.bit)
+        sel = slice(None) if s.index is None else s.index
+        if s.kind == "flip":
+            u[sel] ^= m
+        elif s.kind == "stuck1":
+            u[sel] |= m
+        else:  # stuck0
+            u[sel] &= ~m
+    return tab if out is None else out
+
+
+# ------------------------------------------------------------- lane sites --
+def _strike(x: jnp.ndarray, rate: float, seed: int) -> jnp.ndarray:
+    """Deterministic per-element strike pattern for transient faults:
+    a murmur-style avalanche of the lane value, thresholded at ``rate``.
+    Pure elementwise uint32 ops — safe inside Pallas kernel bodies and
+    bit-identical across backends."""
+    h = x.astype(jnp.uint32)
+    h = h ^ jnp.uint32((seed * 0x9E3779B9 + 0x6A09E667) & 0xFFFFFFFF)
+    h = h * jnp.uint32(0x85EBCA6B)
+    h = (h ^ (h >> jnp.uint32(13))) * jnp.uint32(0xC2B2AE35)
+    h = h ^ (h >> jnp.uint32(16))
+    thresh = np.uint32(min(int(rate * 4294967296.0), 0xFFFFFFFF))
+    return h < thresh
+
+
+def apply_lane_faults(x: jnp.ndarray, *, site: str, width: int) -> jnp.ndarray:
+    """Upset lane words at a datapath stage ('log' or 'pack'). Traceable
+    jnp, elementwise only — identical code runs in kernel bodies and the
+    ref oracle. Returns ``x`` untouched when no armed fault matches."""
+    for s in _ACTIVE:
+        if s.site != site:
+            continue
+        if s.width is not None and s.width != width:
+            continue
+        m = jnp.asarray(np.uint32(1 << s.bit)).astype(x.dtype)
+        if s.kind == "flip":
+            y = x ^ m
+        elif s.kind == "stuck1":
+            y = x | m
+        else:  # stuck0
+            y = x & ~m
+        if s.persistence == "transient":
+            x = jnp.where(_strike(x, s.rate, s.seed), y, x)
+        else:
+            x = y
+    return x

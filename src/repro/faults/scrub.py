@@ -1,0 +1,105 @@
+"""Correction-table integrity scrub — configuration-memory scrubbing.
+
+FPGA deployments counter SEUs in configuration memory by *scrubbing*:
+periodically reading frames back and comparing against the golden
+bitstream. The SIMDive analogue: the correction tables are the design's
+configuration memory, and a persistent table upset corrupts quotients
+while keeping them **finite and in-lane** (entries are clipped to
+|c| < 2^(F-1), so a flipped coefficient bends results rather than
+exploding them) — output guards and non-finite-logit watchdogs cannot
+see it. Deterministic detection has to read the memory back, exactly
+like the hardware: compare the *live* table (what ``build_table``
+currently serves, faults and all) against the pristine oracle
+(:func:`repro.core.error_lut.build_table_clean`).
+
+:class:`repro.launch.scheduler.Scheduler` runs this scrub on a tick
+period (``scrub_every``) over the table identities its ladder's configs
+resolve to, quarantining in-flight work when corruption is found.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+
+import numpy as np
+
+from repro.core.error_lut import build_table, build_table_clean
+
+__all__ = [
+    "ScrubFinding",
+    "config_table_identities",
+    "scrub_tables",
+]
+
+
+@dataclass(frozen=True)
+class ScrubFinding:
+    """One corrupted correction table found by a scrub pass."""
+
+    op: str
+    width: int
+    coeff_bits: int
+    index_bits: int
+    entries: int   # corrupted table entries
+    bits: int      # total upset bits across those entries
+
+    def __str__(self):  # log-line friendly
+        return (f"{self.op} w{self.width} cb{self.coeff_bits} "
+                f"ib{self.index_bits}: {self.bits} bit(s) upset across "
+                f"{self.entries} entr{'y' if self.entries == 1 else 'ies'}")
+
+
+def config_table_identities(cfg, n_layers: int = 0
+                            ) -> tuple[tuple[str, int, int, int], ...]:
+    """Correction-table identities ``(op, width, coeff_bits, index_bits)``
+    an ApproxConfig's dispatch can read.
+
+    Covers the three resolution paths (matmul -> 'mul' table, generic
+    divider and attention divider -> 'div' tables). With a policy and
+    ``n_layers > 0`` the union is taken over every layer label, so a
+    heterogeneous per-layer policy contributes each rung's tables.
+    Exact mode touches no tables.
+    """
+    if not getattr(cfg, "enabled", False):
+        return ()
+    cfgs = [cfg]
+    if getattr(cfg, "policy", None) is not None and n_layers > 0:
+        from repro.core.approx import layer_label
+
+        cfgs = [replace(cfg, layer=layer_label(i)) for i in range(n_layers)]
+    seen: set = set()
+    out: list[tuple[str, int, int, int]] = []
+    for c in cfgs:
+        idents = []
+        if c.use_in_linear:
+            spec, _ = c.resolve("matmul")
+            idents.append(("mul", spec.width, spec.coeff_bits, spec.index_bits))
+        spec, _ = c.resolve("div", c.div_width)
+        idents.append(("div", spec.width, spec.coeff_bits, spec.index_bits))
+        spec, _, _ = c.resolve_attention()
+        idents.append(("div", spec.width, spec.coeff_bits, spec.index_bits))
+        for t in idents:
+            if t not in seen:
+                seen.add(t)
+                out.append(t)
+    return tuple(out)
+
+
+def scrub_tables(identities) -> tuple[ScrubFinding, ...]:
+    """Read back each identified table and diff it against the pristine
+    oracle. Returns a finding per corrupted table (empty = clean pass).
+    Host-side numpy only — cheap enough for a per-tick watchdog."""
+    findings = []
+    for op, width, coeff_bits, index_bits in identities:
+        live = build_table(op, width, coeff_bits, index_bits)
+        clean = build_table_clean(op, width, coeff_bits, index_bits)
+        if live is clean:      # disarmed fast path: cached identity
+            continue
+        diff = live.view(np.uint32) ^ clean.view(np.uint32)
+        if diff.any():
+            findings.append(ScrubFinding(
+                op=op, width=width, coeff_bits=coeff_bits,
+                index_bits=index_bits,
+                entries=int((diff != 0).sum()),
+                bits=int(np.unpackbits(diff.view(np.uint8)).sum()),
+            ))
+    return tuple(findings)

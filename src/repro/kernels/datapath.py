@@ -35,6 +35,7 @@ import jax.numpy as jnp
 
 from repro.core.error_lut import region_index, table_for
 from repro.core.fastpath import fastpath_enabled
+from repro.faults.inject import apply_lane_faults, faults_enabled
 from repro.core.mitchell import (
     frac_bits,
     mitchell_antilog_div,
@@ -106,12 +107,19 @@ def lod_log(a: jnp.ndarray, width: int, *,
     which costs more than the cascade it saves (see kernels/README.md).
     Kernel bodies pass ``in_kernel=True`` and keep the Mosaic-safe
     masked-shift cascade (gathers/clz are host-cheap, not TPU-kernel-safe).
+
+    Fault hook: site='log' upsets land on this stage's output register
+    ``L`` (see :mod:`repro.faults.inject`); disarmed the hook is a no-op.
     """
     if in_kernel or not fastpath_enabled():
-        return mitchell_log(a, width, fast=False)
-    if lut and width == 8:
-        return log8_table()[a].astype(a.dtype)
-    return mitchell_log(a, width, fast=True)
+        L = mitchell_log(a, width, fast=False)
+    elif lut and width == 8:
+        L = log8_table()[a].astype(a.dtype)
+    else:
+        L = mitchell_log(a, width, fast=True)
+    if faults_enabled():
+        L = apply_lane_faults(L, site="log", width=width)
+    return L
 
 
 # ------------------------------------------------------------ correction --
@@ -316,6 +324,9 @@ def lane_repack(lanes: list[jnp.ndarray], owidth: int) -> jnp.ndarray:
     Little-endian lane order, interleaved along the last axis: for 8-bit
     inputs, lanes (0, 1) -> output word 2k and lanes (2, 3) -> word 2k+1.
     ``owidth >= 32`` degenerates to one result per output word.
+
+    Fault hook: site='pack' upsets land on the packed output bus words
+    (see :mod:`repro.faults.inject`); disarmed the hook is a no-op.
     """
     olpw = max(32 // owidth, 1)
     omask = jnp.uint32((1 << min(owidth, 32)) - 1)
@@ -327,7 +338,10 @@ def lane_repack(lanes: list[jnp.ndarray], owidth: int) -> jnp.ndarray:
             w = w | ((lanes[j * olpw + i] & omask) << jnp.uint32(owidth * i))
         words.append(w)
     lead = lanes[0].shape[:-1]
-    return jnp.stack(words, axis=-1).reshape(*lead, -1)
+    out = jnp.stack(words, axis=-1).reshape(*lead, -1)
+    if faults_enabled():
+        out = apply_lane_faults(out, site="pack", width=owidth)
+    return out
 
 
 # -------------------------------------------------------- composed SISD --

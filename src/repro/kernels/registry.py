@@ -30,8 +30,10 @@ from dataclasses import dataclass
 from typing import Any, Callable
 
 import jax
+import numpy as np
 
 __all__ = [
+    "GuardTripped",
     "OpImpl",
     "BoundOp",
     "register_op",
@@ -49,6 +51,28 @@ __all__ = [
 
 #: backends accepted by :func:`get_op`; 'auto'/'pallas' resolve per-host.
 BACKENDS = ("auto", "ref", "pallas", "pallas-interpret", "pallas-tpu")
+
+
+class GuardTripped(RuntimeError):
+    """An output guard rejected a kernel result — loud and structured.
+
+    Raised by guarded dispatch (``get_op(..., guard=True)``) when a
+    concrete op output violates its invariant: non-finite floats, or
+    integer results outside the lane-derived range (the signature of an
+    upset datapath — see :mod:`repro.faults`). Carries the dispatch
+    identity so the serving watchdog can attribute and retry."""
+
+    def __init__(self, *, op: str, backend: str, width: int, reason: str,
+                 bad: int, total: int):
+        self.op = op
+        self.backend = backend
+        self.width = width
+        self.reason = reason
+        self.bad = int(bad)
+        self.total = int(total)
+        super().__init__(
+            f"output guard tripped on op {op!r} (backend {backend}, "
+            f"width {width}): {reason} [{self.bad}/{self.total} elements]")
 
 
 @dataclass(frozen=True)
@@ -294,6 +318,96 @@ def _pick_block(entry: OpImpl, spec, backend: str, arrays, kw) -> tuple:
     return best
 
 
+# ---------------------------------------------------------- output guard --
+def _guard_check(name: str, spec, backend: str, arrays, kw, out) -> None:
+    """Validate one concrete op output: finite floats, integers inside
+    the lane-derived range. The bounds are loose by design — legitimate
+    approximation error never approaches them; only an upset datapath
+    (or a real kernel bug) does. Tracers pass through unchecked: values
+    do not exist mid-trace, so guarded *serving* relies on the
+    scheduler-level watchdog (logit checks + table scrub) instead.
+    """
+    if isinstance(out, jax.core.Tracer):
+        return
+    o = np.asarray(out)
+    total = o.size
+    w = int(spec.width)
+    frac = int(kw.get("frac_out", 0) or 0)
+
+    def trip(reason, bad):
+        raise GuardTripped(op=name, backend=backend, width=w,
+                           reason=reason, bad=bad, total=total)
+
+    if np.issubdtype(o.dtype, np.floating):
+        nbad = total - int(np.isfinite(o).sum())
+        if nbad:
+            trip("non-finite output", nbad)
+    if name == "attention":
+        # softmax-weighted rows are near-convex combinations of v; even
+        # with Mitchell's worst-case divider error they stay well under
+        # a few times max |v| — far under what a saturated quotient does
+        v = np.asarray(arrays[2])
+        lim = 4.0 * max(float(np.max(np.abs(v))), 1e-30)
+        nbad = int((np.abs(o) > lim).sum())
+        if nbad:
+            trip(f"|output| exceeds {lim:.3g} (4x max |v|)", nbad)
+    elif name == "elemwise":
+        kind = kw.get("op", "mul")
+        sat = np.iinfo(o.dtype).max      # the divider's x/0 saturation word
+        mul_lim = (1 << (2 * w)) - 1
+        div_lim = 1 << (w + frac)
+        if kind == "mul":
+            ok = o <= mul_lim
+        elif kind == "div":
+            ok = (o <= div_lim) | (o == sat)
+        else:                            # mixed: either bound + saturation
+            ok = (o <= max(mul_lim, div_lim)) | (o == sat)
+        nbad = total - int(ok.sum())
+        if nbad:
+            trip(f"{kind} result outside the width-{w} lane range", nbad)
+        if kind in ("div", "mixed"):
+            # the datapath saturates to all-ones ONLY on a zero
+            # denominator (x/0); a saturated quotient anywhere else is
+            # the signature of an upset correction table or log stage —
+            # the datapath's internal clipping keeps those finite and
+            # in-lane, so this input-conditioned invariant is the one
+            # range check that still sees them
+            den = np.asarray(arrays[1])
+            nbad = int(((o == sat) & (den != 0)).sum())
+            if nbad:
+                trip("saturated quotient with nonzero denominator", nbad)
+        if kind == "div" and frac >= 4:
+            # a >= b > 0 means the true ratio is >= 1, so the quotient is
+            # >= ~0.97 * 2^frac on every shipped config (measured over
+            # the exhaustive width-8 sweep and width-16 edge cases);
+            # 2^(frac-2) keeps a 4x margin. An upset correction term
+            # drives the log difference negative and collapses exactly
+            # these quotients toward zero — the counterpart of the
+            # spurious-saturation signature above. frac < 4 configs skip:
+            # legitimate floor-to-zero quotients live down there.
+            num = np.asarray(arrays[0])
+            den = np.asarray(arrays[1])
+            floor = 1 << (frac - 2)
+            nbad = int(((num >= den) & (den != 0) & (o < floor)).sum())
+            if nbad:
+                trip(f"quotient below 2^{frac - 2} with ratio >= 1", nbad)
+    elif name in ("matmul_int", "matmul_emul"):
+        K = int(arrays[0].shape[-1])
+        lim = K * ((1 << w) - 1) ** 2
+        if lim < np.iinfo(np.int64).max:     # w=32 bound: vacuous in int64
+            nbad = int((np.abs(o.astype(np.int64)) > lim).sum())
+            if nbad:
+                trip(f"|accumulator| exceeds K * (2^{w}-1)^2", nbad)
+    elif name == "sqrt":
+        lim = 1 << ((w + 1) // 2 + frac + 1)
+        nbad = int((o > lim).sum())
+        if nbad:
+            trip(f"sqrt result exceeds 2^{(w + 1) // 2 + frac + 1}", nbad)
+    # 'packed': output words legitimately span the full uint32 range —
+    # the range check is vacuous, so packed relies on the disassembled
+    # lane checks its callers apply
+
+
 # ------------------------------------------------------------- dispatch --
 @dataclass(frozen=True)
 class BoundOp:
@@ -302,27 +416,39 @@ class BoundOp:
     spec: Any
     backend: str            # resolved: 'ref' | 'pallas-interpret' | 'pallas-tpu'
     block: tuple | None     # None => registry picks (autotune cache)
+    guard: bool = False     # validate concrete outputs (GuardTripped)
 
     def __call__(self, *arrays, **kw):
         if self.backend == "ref":
-            return self.entry.ref(*arrays, spec=self.spec, **kw)
-        block = self.block
-        if block is None:
-            block = _pick_block(self.entry, self.spec, self.backend,
-                                arrays, kw)
-        return self.entry.pallas(
-            *arrays, spec=self.spec, block=block,
-            interpret=self.backend != "pallas-tpu", **kw)
+            out = self.entry.ref(*arrays, spec=self.spec, **kw)
+        else:
+            block = self.block
+            if block is None:
+                block = _pick_block(self.entry, self.spec, self.backend,
+                                    arrays, kw)
+            out = self.entry.pallas(
+                *arrays, spec=self.spec, block=block,
+                interpret=self.backend != "pallas-tpu", **kw)
+        if self.guard:
+            _guard_check(self.entry.name, self.spec, self.backend,
+                         arrays, kw, out)
+        return out
 
 
 def get_op(op: str, spec, backend: str = "auto", *,
-           block: tuple | None = None) -> BoundOp:
+           block: tuple | None = None, guard: bool = False) -> BoundOp:
     """Resolve ``op`` to a callable bound to ``spec``/``backend``/``block``.
 
     The returned :class:`BoundOp` takes the op's arrays plus per-call
     keywords (``op=``, ``mode=``, ``frac_out=``, ...). Ops registered
     without a Pallas impl silently serve the 'auto' backend from their
     reference impl; asking for a Pallas backend explicitly raises.
+
+    ``guard=True`` validates every *concrete* output (finite floats,
+    lane-range integers) and raises :class:`GuardTripped` on violation —
+    the dispatch-level half of the fault-resilience story (see
+    :mod:`repro.faults` and kernels/README.md "Robustness"). Outputs
+    still inside a jit trace pass through unchecked.
     """
     _ensure_builtin_ops()
     entry = _REGISTRY.get(op)
@@ -345,4 +471,5 @@ def get_op(op: str, spec, backend: str = "auto", *,
         else:
             raise ValueError(f"op {op!r} has no Pallas implementation "
                              f"(requested backend {backend!r})")
-    return BoundOp(entry=entry, spec=spec, backend=resolved, block=block)
+    return BoundOp(entry=entry, spec=spec, backend=resolved, block=block,
+                   guard=guard)

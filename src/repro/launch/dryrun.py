@@ -616,6 +616,7 @@ def run_cell(arch, shape_name, multi_pod, out_dir=None, **kw):
         res = analyze(lowered, mesh, meta, arch=arch, shape_name=shape_name,
                       multi_pod=multi_pod, cost_variants=not multi_pod, **kw)
         res["status"] = "ok"
+    # simdive-lint: allow(swallowed-exception): recorded as a status=error artifact with traceback
     except Exception as e:  # noqa: BLE001 — record failures, keep sweeping
         res = {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
                "status": "error", "error": f"{type(e).__name__}: {e}",

@@ -25,6 +25,25 @@ a different precompiled step — and when the queue drains to
 Attention-family archs only (the shared cache is the stacked (L,B,S,KV,dh)
 KV pytree; ssm/hybrid recurrent state has no per-slot seq axis to fan
 into).
+
+Self-healing (``self_heal=True``, the default): the ladder grows one
+internal **recovery rung** — the base config forced exact, touching no
+correction tables — and a per-tick watchdog feeds it. The watchdog
+detects poisoned work three ways: per-row non-finite logits at prefill
+and decode (``watch_logits``), a correction-table integrity scrub every
+``scrub_every`` ticks (:mod:`repro.faults.scrub` — the FPGA
+configuration-memory scrubbing analogue, and the only deterministic
+detector for persistent table upsets, which corrupt results while
+staying finite), and :class:`~repro.kernels.registry.GuardTripped`
+escaping an eager dispatch. Detected work is **quarantined**: the slot
+is freed, the request's partial tokens are discarded, and it re-enters
+the queue pinned to the recovery rung after an exponential backoff
+(``retry_backoff ** retries`` ticks), up to ``max_retries`` — then it is
+*failed loudly* (``stats()['failed']``), never silently served. A
+``tick_budget`` bounds any request's wall-ticks since admission the same
+way. Everything is surfaced in ``stats()``: ``guard_trips``,
+``quarantines``, ``retries``, ``timeouts``, ``failed``, plus per-token
+rung attribution (retried tokens count against ``'recovery'``).
 """
 from __future__ import annotations
 
@@ -36,6 +55,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.approx import ApproxConfig
+from repro.kernels.registry import GuardTripped
 from repro.models import build
 
 __all__ = [
@@ -58,6 +78,12 @@ class Request:
     submitted: int = -1          # ticks (scheduler time, not wall-clock)
     started: int = -1
     finished: int = -1
+    # --- watchdog / retry state ---
+    retries: int = 0             # quarantine-and-retry count so far
+    not_before: int = 0          # earliest re-admission tick (backoff)
+    pinned_exact: bool = False   # retried: serve on the recovery rung only
+    failed: bool = False         # gave up after max_retries (loud, never
+    fail_reason: str = ""        # silently served) — see Scheduler._bounce
 
 
 @dataclass(frozen=True)
@@ -107,19 +133,43 @@ class Scheduler:
                  batch: int = 4, prompt_len: int = 32,
                  max_seq: int | None = None,
                  shed_depth: int = 4, recover_depth: int = 1,
-                 seed: int = 0):
+                 seed: int = 0,
+                 self_heal: bool = True, max_retries: int = 2,
+                 retry_backoff: int = 2, tick_budget: int | None = None,
+                 scrub_every: int = 0, watch_logits: bool = True):
         if cfg.family in ("ssm", "hybrid"):
             raise ValueError(
                 f"Scheduler needs an attention-family cache, got family "
                 f"{cfg.family!r} (recurrent state has no per-slot seq axis)")
+        if prompt_len <= 0:
+            raise ValueError(
+                f"prompt_len must be positive, got {prompt_len} — a "
+                "zero-length prompt has no tokens to prefill (admit a "
+                "BOS-padded prompt upstream instead)")
         if levels is None:
             levels = default_ladder(cfg.approx)
+        levels = tuple(levels)
         if recover_depth >= shed_depth:
             raise ValueError(
                 f"recover_depth ({recover_depth}) must be < shed_depth "
                 f"({shed_depth}) — equal thresholds oscillate every tick")
+        if max_retries < 0:
+            raise ValueError(f"max_retries must be >= 0, got {max_retries}")
         self.cfg = cfg
-        self.levels = tuple(levels)
+        self.self_heal = bool(self_heal)
+        self.max_retries = int(max_retries)
+        self.retry_backoff = max(int(retry_backoff), 1)
+        self.tick_budget = tick_budget
+        self.scrub_every = int(scrub_every)
+        self.watch_logits = bool(watch_logits)
+        # the load-shed ladder spans [0, _ladder_n); the recovery rung
+        # (base config forced exact — reads no correction tables) sits
+        # past it, reachable only through the watchdog, never by shedding
+        self._ladder_n = len(levels)
+        if self.self_heal and all(lv.name != "recovery" for lv in levels):
+            levels = levels + (ServeLevel("recovery", replace(
+                levels[0].approx, mode="exact", policy=None, layer=None)),)
+        self.levels = levels
         self.batch = batch
         self.prompt_len = prompt_len
         self.max_seq = max_seq or prompt_len * 2
@@ -141,10 +191,26 @@ class Scheduler:
         self.slots: list[Request | None] = [None] * batch
         self.queue: deque[Request] = deque()
         self.done: list[Request] = []
+        self.failed: list[Request] = []
+        self.retryq: list[Request] = []      # quarantined, backing off
         self.level = 0
         self.tick_no = 0
         self.events: list[tuple[int, str, object]] = []
         self._next_rid = 0
+        self._poisoned = False               # last scrub found corruption
+        self.counters = {"guard_trips": 0, "quarantines": 0,
+                         "retries": 0, "timeouts": 0}
+        if self.scrub_every > 0:
+            from repro.faults.scrub import config_table_identities
+            idents: list = []
+            for lv in self.levels:
+                for t in config_table_identities(
+                        lv.approx, n_layers=getattr(cfg, "n_layers", 0)):
+                    if t not in idents:
+                        idents.append(t)
+            self._scrub_idents = tuple(idents)
+        else:
+            self._scrub_idents = ()
 
     # ------------------------------------------------------------ intake --
     def submit(self, prompt, max_new: int) -> Request:
@@ -207,8 +273,10 @@ class Scheduler:
         return jax.tree_util.tree_map_with_path(ins, full, pre)
 
     def _adjust_level(self):
+        # sheds move within the ladder only — the recovery rung past
+        # _ladder_n belongs to the watchdog, never to queue pressure
         depth = len(self.queue)
-        if depth >= self.shed_depth and self.level < len(self.levels) - 1:
+        if depth >= self.shed_depth and self.level < self._ladder_n - 1:
             self.level += 1
             self.events.append(
                 (self.tick_no, "shed", self.levels[self.level].name))
@@ -216,6 +284,98 @@ class Scheduler:
             self.level -= 1
             self.events.append(
                 (self.tick_no, "recover", self.levels[self.level].name))
+
+    # ---------------------------------------------------------- watchdog --
+    def _effective_level(self, admitting=()) -> int:
+        """The level this tick actually dispatches at: the recovery rung
+        while the tables scrub dirty or any live/admitting request is
+        pinned there (exact is the finest rung, so forcing the shared
+        batch up never serves anyone *coarser* than their ladder level);
+        otherwise the shed ladder's current level."""
+        if self.self_heal and (self._poisoned or any(
+                r is not None and r.pinned_exact
+                for r in list(self.slots) + list(admitting))):
+            return len(self.levels) - 1
+        return self.level
+
+    def _rows_ok(self, logits) -> np.ndarray:
+        """Per-row logit health (batch,): finite everywhere. Non-finite
+        rows mean the slot's state is poisoned — quarantine, don't argmax
+        garbage into someone's completion."""
+        if not (self.self_heal and self.watch_logits):
+            return np.ones(self.batch, bool)
+        return np.asarray(jnp.isfinite(logits).all(axis=-1))
+
+    def _bounce(self, req: Request, reason: str):
+        """Discard a poisoned request's partial work and either requeue
+        it pinned to the recovery rung (exponential backoff) or fail it
+        loudly after ``max_retries`` — never silently serve it."""
+        req.tokens.clear()
+        req.levels.clear()
+        req.started = -1
+        if req.retries >= self.max_retries:
+            req.failed = True
+            req.fail_reason = reason
+            req.finished = self.tick_no
+            self.failed.append(req)
+            self.events.append((self.tick_no, "fail", req.rid))
+            return
+        req.retries += 1
+        self.counters["retries"] += 1
+        req.not_before = self.tick_no + self.retry_backoff ** req.retries
+        req.pinned_exact = True
+        self.retryq.append(req)
+        self.events.append((self.tick_no, "retry", req.rid))
+
+    def _quarantine(self, s: int, req: Request, reason: str):
+        """Free a poisoned slot and bounce its request."""
+        self.counters["quarantines"] += 1
+        self.slots[s] = None
+        self.pos[s] = 0
+        self.tok[s] = 0
+        self.events.append((self.tick_no, "quarantine", req.rid))
+        self._bounce(req, reason)
+
+    def _watchdog(self):
+        """Per-tick health pass: table scrub, tick budgets, due retries.
+
+        Runs before admit/decode, so corruption found here quarantines
+        in-flight work *before* another token is computed through it.
+        """
+        if self.scrub_every > 0 and self.tick_no % self.scrub_every == 0:
+            from repro.faults.scrub import scrub_tables
+
+            findings = scrub_tables(self._scrub_idents)
+            if findings and not self._poisoned:
+                self._poisoned = True
+                self.events.append((self.tick_no, "scrub-dirty",
+                                    "; ".join(str(f) for f in findings)))
+                # every unpinned in-flight token went through the
+                # corrupted tables — discard and retry on the exact rung
+                for s, req in enumerate(self.slots):
+                    if req is not None and not req.pinned_exact:
+                        self._quarantine(s, req,
+                                         f"table scrub: {findings[0]}")
+            elif not findings and self._poisoned:
+                # transient upset cleared / table repaired: lift the pin
+                self._poisoned = False
+                self.events.append((self.tick_no, "scrub-clean", ""))
+        if self.tick_budget is not None:
+            for s, req in enumerate(self.slots):
+                if req is not None and req.started >= 0 and \
+                        self.tick_no - req.started > self.tick_budget:
+                    self.counters["timeouts"] += 1
+                    self.events.append((self.tick_no, "timeout", req.rid))
+                    self._quarantine(
+                        s, req,
+                        f"tick budget {self.tick_budget} exceeded")
+        if self.retryq:
+            due = [r for r in self.retryq if r.not_before <= self.tick_no]
+            if due:
+                self.retryq = [r for r in self.retryq
+                               if r.not_before > self.tick_no]
+                for r in reversed(due):    # retries go to the queue front
+                    self.queue.appendleft(r)
 
     def _admit(self):
         free = [i for i, r in enumerate(self.slots) if r is None]
@@ -229,12 +389,28 @@ class Scheduler:
         for j, req in enumerate(reqs):
             prompts[j] = req.prompt
             slot_ix[j] = free[j]
-        lm = self.lms[self.level]
-        logits, pre = lm.prefill(self.params, {"tokens": jnp.asarray(prompts)})
+        lvl = self._effective_level(reqs)
+        lm = self.lms[lvl]
+        try:
+            logits, pre = lm.prefill(self.params,
+                                     {"tokens": jnp.asarray(prompts)})
+            first = np.asarray(jnp.argmax(logits, -1)).astype(np.int32)
+            rowok = self._rows_ok(logits)
+        except GuardTripped as e:
+            # eager guarded dispatch rejected the whole prefill batch
+            self.counters["guard_trips"] += 1
+            self.events.append((self.tick_no, "guard", str(e)))
+            for req in reqs:
+                self._bounce(req, f"guard: {e.reason}")
+            return
         self.cache = self._insert(self.cache, pre, jnp.asarray(slot_ix))
-        first = np.asarray(jnp.argmax(logits, -1)).astype(np.int32)
-        name = self.levels[self.level].name
+        name = self.levels[lvl].name
         for j, req in enumerate(reqs):
+            if not rowok[j]:
+                self.counters["quarantines"] += 1
+                self.events.append((self.tick_no, "quarantine", req.rid))
+                self._bounce(req, "non-finite prefill logits")
+                continue
             s = free[j]
             self.slots[s] = req
             self.pos[s] = self.prompt_len
@@ -255,14 +431,27 @@ class Scheduler:
     def _decode(self):
         if not any(r is not None for r in self.slots):
             return
-        step = self.steps[self.level]
-        logits, self.cache = step(self.params, self.cache,
-                                  jnp.asarray(self.tok),
-                                  jnp.asarray(self.pos))
+        lvl = self._effective_level()
+        try:
+            logits, cache = self.steps[lvl](self.params, self.cache,
+                                            jnp.asarray(self.tok),
+                                            jnp.asarray(self.pos))
+        except GuardTripped as e:
+            self.counters["guard_trips"] += 1
+            self.events.append((self.tick_no, "guard", str(e)))
+            for s, req in enumerate(self.slots):
+                if req is not None:
+                    self._quarantine(s, req, f"guard: {e.reason}")
+            return
+        self.cache = cache
         nxt = np.asarray(jnp.argmax(logits, -1)).astype(np.int32)
-        name = self.levels[self.level].name
+        rowok = self._rows_ok(logits)
+        name = self.levels[lvl].name
         for s, req in enumerate(self.slots):
             if req is None:
+                continue
+            if not rowok[s]:
+                self._quarantine(s, req, "non-finite decode logits")
                 continue
             self.pos[s] += 1
             if len(req.tokens) >= req.max_new:
@@ -276,19 +465,24 @@ class Scheduler:
                 self._retire(s, req)
 
     def step(self):
-        """One scheduler tick: adjust level, admit, decode."""
+        """One scheduler tick: watchdog, adjust level, admit, decode."""
         self.tick_no += 1
+        if self.self_heal:
+            self._watchdog()
         self._adjust_level()
         self._admit()
         self._decode()
 
     def run(self, max_ticks: int = 10_000) -> dict:
-        """Tick until every submitted request retires; returns stats."""
-        while (self.queue or any(r is not None for r in self.slots)):
+        """Tick until every submitted request retires (or fails loudly
+        after its retry budget); returns stats."""
+        while (self.queue or self.retryq
+               or any(r is not None for r in self.slots)):
             if self.tick_no >= max_ticks:
                 raise RuntimeError(
                     f"scheduler did not drain in {max_ticks} ticks "
-                    f"(queue={len(self.queue)}, active="
+                    f"(queue={len(self.queue)}, "
+                    f"retrying={len(self.retryq)}, active="
                     f"{sum(r is not None for r in self.slots)})")
             self.step()
         return self.stats()
@@ -301,12 +495,18 @@ class Scheduler:
                 per_level[name] += 1
         return {
             "completed": len(self.done),
+            "failed": len(self.failed),
             "ticks": self.tick_no,
             "tokens": sum(per_level.values()),
             "tokens_per_level": per_level,
             "sheds": sum(1 for _, kind, _ in self.events if kind == "shed"),
             "recovers": sum(1 for _, kind, _ in self.events
                             if kind == "recover"),
+            "guard_trips": self.counters["guard_trips"],
+            "quarantines": self.counters["quarantines"],
+            "retries": self.counters["retries"],
+            "timeouts": self.counters["timeouts"],
+            "poisoned": self._poisoned,
             "events": list(self.events),
         }
 

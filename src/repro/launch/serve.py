@@ -31,6 +31,7 @@ Usage (CPU smoke):
 from __future__ import annotations
 
 import argparse
+import sys
 from dataclasses import dataclass
 from functools import lru_cache
 
@@ -262,6 +263,12 @@ def main():
     ap.add_argument("--scheduler", action="store_true",
                     help="run the continuous-batching load-shed drill "
                          "instead of a single batched generate")
+    ap.add_argument("--chaos", action="store_true",
+                    help="scheduler drill under a seeded persistent "
+                         "correction-table fault: the watchdog must "
+                         "quarantine, retry on the recovery rung, and "
+                         "complete every admitted request (exit 1 on "
+                         "any violation); implies --scheduler")
     ap.add_argument("--requests", type=int, default=12,
                     help="scheduler drill: how many requests to flood")
     ap.add_argument("--shed-depth", type=int, default=4)
@@ -296,27 +303,69 @@ def main():
         params = quantize_params(params)
     max_seq = args.prompt_len + args.gen
 
-    if args.scheduler:
+    if args.scheduler or args.chaos:
         from repro.launch.scheduler import Scheduler, default_ladder
         sched = Scheduler(
             cfg, params=params, levels=default_ladder(cfg.approx),
             batch=args.batch, prompt_len=args.prompt_len, max_seq=max_seq,
-            shed_depth=args.shed_depth, recover_depth=args.recover_depth)
+            shed_depth=args.shed_depth, recover_depth=args.recover_depth,
+            scrub_every=1 if args.chaos else 0)
         compiled = sched.warmup()
         print(f"# scheduler: precompiled {compiled} executable(s) across "
               f"{len(sched.levels)} policy level(s)")
         for _ in range(args.requests):
             sched.submit(rng.integers(0, cfg.vocab_size, args.prompt_len,
                                       dtype=np.int32), max_new=args.gen)
-        stats = sched.run()
+        if args.chaos:
+            # strike every div correction table the ladder can read —
+            # the attention softmax divider runs on every decode tick,
+            # so undetected corruption would poison every completion.
+            # Armed mid-flight (after the first admission tick) so the
+            # scrub catches requests already in their decode loop.
+            from repro.faults.inject import FaultSpec, set_faults
+            sched.step()
+            spec = FaultSpec(site="table", bit=20, kind="stuck1", op="div")
+            set_faults([spec])
+            print(f"# chaos: armed {spec} at tick {sched.tick_no}")
+            try:
+                stats = sched.run()
+            finally:
+                set_faults([])
+        else:
+            stats = sched.run()
         step_t = sched.measure_decode()
         print(f"# drill: {stats['completed']} request(s) in "
               f"{stats['ticks']} tick(s); tokens/level="
               f"{stats['tokens_per_level']}; sheds={stats['sheds']} "
               f"recovers={stats['recovers']}")
-        print(f"decode step {step_t.best_s * 1e6:.0f}us best "
-              f"({step_t.items_per_s:.1f} tok/s steady-state, "
-              f"iters={step_t.iters}, synced)")
+        if sched.self_heal:
+            print(f"# watchdog: guard_trips={stats['guard_trips']} "
+                  f"quarantines={stats['quarantines']} "
+                  f"retries={stats['retries']} "
+                  f"timeouts={stats['timeouts']} failed={stats['failed']}")
+        step_msg = (f"decode step {step_t.best_s * 1e6:.0f}us best "
+                    f"({step_t.items_per_s:.1f} tok/s steady-state, "
+                    f"iters={step_t.iters}, synced)")
+        print(step_msg)
+        if args.chaos:
+            violations = []
+            if stats["completed"] != args.requests:
+                violations.append(
+                    f"completed {stats['completed']}/{args.requests}")
+            if stats["failed"]:
+                violations.append(f"{stats['failed']} request(s) failed")
+            if stats["quarantines"] < 1:
+                violations.append("watchdog never quarantined — the "
+                                  "armed fault went unnoticed")
+            rec = stats["tokens_per_level"].get("recovery", 0)
+            if rec < 1:
+                violations.append("no tokens attributed to the recovery "
+                                  "rung")
+            if violations:
+                print("# chaos: FAIL — " + "; ".join(violations))
+                sys.exit(1)
+            print(f"# chaos: PASS — every admitted request completed; "
+                  f"{rec} token(s) re-served on the recovery rung")
         return
 
     prompts = jnp.asarray(rng.integers(

@@ -162,6 +162,15 @@ class TuningPolicy:
             raise ValueError(
                 f"not a tuning policy (expected schema {POLICY_SCHEMA!r}, "
                 f"got {d.get('schema') if isinstance(d, dict) else type(d)})")
+        unknown = sorted(set(d) - {"schema", "meta", "entries"})
+        if unknown:
+            # same-schema documents from a newer writer: loadable, but the
+            # extra fields are dropped on round-trip — say so out loud
+            import warnings
+            warnings.warn(
+                f"tuning policy has unknown top-level field(s) {unknown}; "
+                f"this {POLICY_SCHEMA} reader ignores them and they will "
+                "not survive a re-save", stacklevel=2)
         entries = tuple(PolicyEntry.from_dict(e)
                         for e in d.get("entries", []))
         meta = tuple(sorted((d.get("meta") or {}).items()))

@@ -242,3 +242,40 @@ def test_softmax_div_w32_proves_clean():
     res = run_matrix(ops=["attention"], widths=[32])
     assert res.ok, "\n".join(f.render() for f in res.findings)
     assert res.reports
+
+
+def test_lint_flags_swallowed_exceptions_in_resilient_layers(tmp_path):
+    """The swallowed-exception rule fires only under launch/ and
+    benchmarks/, honours allow-comments, and names each broad form."""
+    from repro.analysis.lint import lint_file
+
+    body = (
+        "try:\n    x = 1\nexcept Exception:\n    pass\n"
+        "try:\n    y = 2\nexcept (ValueError, BaseException):\n    pass\n"
+        "try:\n    z = 3\n"
+        "# simdive-lint: allow(swallowed-exception): test grandfather\n"
+        "except Exception:\n    pass\n"
+        "try:\n    w = 4\nexcept ValueError:\n    pass\n"
+    )
+    launch = tmp_path / "src" / "repro" / "launch"
+    launch.mkdir(parents=True)
+    (launch / "mod.py").write_text(body)
+    fs = lint_file(launch / "mod.py", tmp_path)
+    msgs = [f.message for f in fs if f.rule == "swallowed-exception"]
+    assert len(msgs) == 2                     # allow-comment + ValueError ok
+    assert any("except Exception" in m for m in msgs)
+    assert any("BaseException" in m for m in msgs)
+
+    bench = tmp_path / "benchmarks"
+    bench.mkdir()
+    (bench / "mod.py").write_text("try:\n    x = 1\nexcept:\n    pass\n")
+    fs = lint_file(bench / "mod.py", tmp_path)
+    assert [f.rule for f in fs] == ["swallowed-exception"]
+    assert "bare except:" in fs[0].message
+
+    # same code outside the resilient layers is none of this rule's business
+    core = tmp_path / "src" / "repro" / "core"
+    core.mkdir(parents=True)
+    (core / "mod.py").write_text("try:\n    x = 1\nexcept Exception:\n    pass\n")
+    assert [f for f in lint_file(core / "mod.py", tmp_path)
+            if f.rule == "swallowed-exception"] == []

@@ -1,0 +1,276 @@
+"""Fault-injection subsystem tests (repro.faults): SEU emulation hooks,
+guarded dispatch, table scrub, and the resilience campaign.
+
+Four layers:
+
+* **spec** — FaultSpec validation rejects malformed sites loudly.
+* **inject** — armed hooks corrupt exactly their target (op/width/index
+  selectivity, transient determinism); disarmed hooks are *bit-identical*
+  no-ops returning the lru-cached pristine objects.
+* **detect** — the output guard trips on gross divider corruption, the
+  table scrub deterministically flags any table upset, and neither
+  false-positives on a clean datapath.
+* **campaign** — measure_site quantifies amplification and the tier-1
+  smoke passes end to end.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import SimdiveSpec
+from repro.core.error_lut import build_table, build_table_clean
+from repro.faults.inject import (
+    FaultSpec,
+    active_faults,
+    apply_table_faults,
+    fault_injection,
+    faults_enabled,
+    set_faults,
+)
+from repro.faults.scrub import config_table_identities, scrub_tables
+from repro.kernels import get_op
+from repro.kernels.registry import GuardTripped
+
+W8 = SimdiveSpec(width=8, coeff_bits=6)
+
+
+def _grid8():
+    a = np.arange(1, 256, dtype=np.uint32)
+    A, B = np.meshgrid(a, a)
+    return jnp.asarray(A.ravel()), jnp.asarray(B.ravel())
+
+
+@pytest.fixture(autouse=True)
+def _disarmed():
+    """Every test starts and ends disarmed — a leaked arming would
+    corrupt every test that runs after it."""
+    set_faults([])
+    yield
+    set_faults([])
+
+
+# ================================================================== spec ==
+def test_spec_rejects_bad_site_kind_persistence():
+    with pytest.raises(ValueError, match="site"):
+        FaultSpec(site="alu", bit=0)
+    with pytest.raises(ValueError, match="kind"):
+        FaultSpec(site="log", bit=0, kind="toggle")
+    with pytest.raises(ValueError, match="persistence"):
+        FaultSpec(site="log", bit=0, persistence="forever")
+    with pytest.raises(ValueError, match="bit"):
+        FaultSpec(site="log", bit=32)
+
+
+def test_spec_table_faults_must_be_persistent():
+    with pytest.raises(ValueError, match="persistent"):
+        FaultSpec(site="table", bit=3, persistence="transient")
+
+
+def test_spec_op_and_index_are_table_only():
+    with pytest.raises(ValueError, match="op targets"):
+        FaultSpec(site="log", bit=3, op="mul")
+    with pytest.raises(ValueError, match="index targets"):
+        FaultSpec(site="pack", bit=3, index=4)
+    with pytest.raises(ValueError, match="rate"):
+        FaultSpec(site="log", bit=3, persistence="transient", rate=0.0)
+
+
+def test_set_faults_type_checks():
+    with pytest.raises(TypeError, match="FaultSpec"):
+        set_faults([{"site": "table", "bit": 3}])
+
+
+# ================================================================ inject ==
+def test_disarmed_table_is_the_cached_pristine_object():
+    t = build_table("div", 8, 6)
+    assert t is build_table_clean("div", 8, 6)
+    assert not faults_enabled() and active_faults() == ()
+
+
+def test_armed_then_disarmed_is_bit_identical():
+    a, b = _grid8()
+    bound = get_op("elemwise", W8, "ref")
+    before = np.asarray(bound(a, b, op="div", frac_out=8))
+    with fault_injection(FaultSpec(site="table", bit=20, op="div", width=8)):
+        during = np.asarray(bound(a, b, op="div", frac_out=8))
+        assert (during != before).any(), "armed fault changed nothing"
+    after = np.asarray(bound(a, b, op="div", frac_out=8))
+    np.testing.assert_array_equal(before, after)
+    assert build_table("div", 8, 6) is build_table_clean("div", 8, 6)
+
+
+def test_table_fault_targets_one_op_only():
+    spec = FaultSpec(site="table", bit=20, op="div", width=8)
+    with fault_injection(spec):
+        assert build_table("mul", 8, 6) is build_table_clean("mul", 8, 6)
+        assert (build_table("div", 8, 6)
+                != build_table_clean("div", 8, 6)).any()
+
+
+def test_table_fault_single_entry_and_kinds():
+    clean = build_table_clean("mul", 8, 6)
+    spec = FaultSpec(site="table", bit=5, kind="flip", op="mul", index=27)
+    with fault_injection(spec):
+        live = build_table("mul", 8, 6)
+        diff = live.view(np.uint32) ^ clean.view(np.uint32)
+        assert diff[27] == (1 << 5) and (np.delete(diff, 27) == 0).all()
+    with fault_injection(FaultSpec(site="table", bit=5, kind="stuck1",
+                                   op="mul")):
+        live = build_table("mul", 8, 6)
+        assert (live.view(np.uint32) & (1 << 5) != 0).all()
+    with fault_injection(FaultSpec(site="table", bit=5, kind="stuck0",
+                                   op="mul")):
+        live = build_table("mul", 8, 6)
+        assert (live.view(np.uint32) & (1 << 5) == 0).all()
+
+
+def test_table_fault_out_of_range_index_raises():
+    tab = build_table_clean("mul", 8, 6)
+    set_faults([FaultSpec(site="table", bit=0, op="mul", index=tab.size)])
+    with pytest.raises(ValueError, match="out of range"):
+        apply_table_faults(tab, op="mul", width=8)
+
+
+def test_apply_table_faults_never_mutates_the_cached_table():
+    clean = build_table_clean("div", 8, 6)
+    snapshot = clean.copy()
+    with fault_injection(FaultSpec(site="table", bit=20, op="div")):
+        live = build_table("div", 8, 6)
+        assert live is not clean
+    np.testing.assert_array_equal(clean, snapshot)
+
+
+def test_log_fault_hits_lod_log_stage():
+    a, b = _grid8()
+    bound = get_op("elemwise", W8, "ref")
+    clean = np.asarray(bound(a, b, op="mul"))
+    with fault_injection(FaultSpec(site="log", bit=2, kind="stuck1",
+                                   width=8)):
+        faulted = np.asarray(bound(a, b, op="mul"))
+    assert (faulted != clean).any()
+    # width targeting: a w16-only log fault leaves the w8 path untouched
+    with fault_injection(FaultSpec(site="log", bit=2, kind="stuck1",
+                                   width=16)):
+        untouched = np.asarray(bound(a, b, op="mul"))
+    np.testing.assert_array_equal(clean, untouched)
+
+
+def test_transient_strikes_are_deterministic_and_rate_bounded():
+    a, b = _grid8()
+    bound = get_op("elemwise", W8, "ref")
+    clean = np.asarray(bound(a, b, op="mul"))
+    spec = FaultSpec(site="log", bit=7, persistence="transient",
+                     rate=0.05, seed=3)
+    with fault_injection(spec):
+        f1 = np.asarray(bound(a, b, op="mul"))
+    with fault_injection(spec):
+        f2 = np.asarray(bound(a, b, op="mul"))
+    np.testing.assert_array_equal(f1, f2)       # same seed, same strikes
+    hit = float((f1 != clean).mean())
+    assert 0.0 < hit < 0.25     # ~rate of *log-stage* values get struck
+    with fault_injection(FaultSpec(site="log", bit=7,
+                                   persistence="transient",
+                                   rate=0.05, seed=4)):
+        f3 = np.asarray(bound(a, b, op="mul"))
+    assert (f3 != f1).any()                      # different seed pattern
+
+
+def test_pack_fault_fires_in_the_packed_kernel_only():
+    from repro.core.simd_pack import pack
+    rng = np.random.default_rng(0)
+    a = rng.integers(1, 256, 4096, dtype=np.uint32)
+    b = rng.integers(1, 256, 4096, dtype=np.uint32)
+    aw, bw = pack(jnp.asarray(a), 8), pack(jnp.asarray(b), 8)
+    bound = get_op("packed", W8, "pallas-interpret")
+    clean = np.asarray(bound(aw, bw, op="mul"))
+    # the pack hook sees the output bus width: 2w = 16 for 8-bit lanes
+    with fault_injection(FaultSpec(site="pack", bit=3, width=16)):
+        faulted = np.asarray(bound(aw, bw, op="mul"))
+    assert (faulted != clean).any()
+
+
+# ================================================================ detect ==
+def test_guard_is_clean_safe_on_the_exhaustive_grid():
+    a, b = _grid8()
+    guarded = get_op("elemwise", W8, "ref", guard=True)
+    guarded(a, b, op="mul")
+    guarded(a, b, op="div", frac_out=8)          # must not trip
+
+
+def test_guard_trips_on_divider_table_fault():
+    a, b = _grid8()
+    guarded = get_op("elemwise", W8, "ref", guard=True)
+    with fault_injection(FaultSpec(site="table", bit=20, op="div",
+                                   width=8)):
+        # fastpath clips into a spurious saturation; faithful semantics
+        # surface the same upset as an out-of-lane result instead
+        with pytest.raises(GuardTripped,
+                           match="saturated quotient|outside the width"):
+            guarded(a, b, op="div", frac_out=8)
+
+
+def test_guard_exception_carries_structured_fields():
+    a, b = _grid8()
+    guarded = get_op("elemwise", W8, "ref", guard=True)
+    with fault_injection(FaultSpec(site="table", bit=20, op="div",
+                                   width=8)):
+        with pytest.raises(GuardTripped) as ei:
+            guarded(a, b, op="div", frac_out=8)
+    e = ei.value
+    assert e.op == "elemwise" and e.width == 8 and e.bad > 0
+    assert e.bad <= e.total and e.reason
+
+
+def test_scrub_flags_any_table_upset_and_clears_after_repair():
+    idents = (("mul", 8, 6, 3), ("div", 8, 6, 3))
+    assert scrub_tables(idents) == ()            # clean pass
+    with fault_injection(FaultSpec(site="table", bit=11, op="mul",
+                                   width=8)):
+        findings = scrub_tables(idents)
+        assert len(findings) == 1
+        f = findings[0]
+        assert f.op == "mul" and f.entries == 64 and f.bits == 64
+        assert "mul w8" in str(f)
+    assert scrub_tables(idents) == ()            # repair detected
+
+
+def test_config_table_identities_covers_all_resolution_paths():
+    from repro.core.approx import ApproxConfig
+    assert config_table_identities(ApproxConfig()) == ()     # exact mode
+    cfg = ApproxConfig(mode="simdive", use_in_softmax=True)
+    idents = config_table_identities(cfg)
+    ops = {t[0] for t in idents}
+    assert "div" in ops          # generic divider + attention divider
+    for t in idents:
+        assert len(t) == 4
+
+
+# ============================================================== campaign ==
+def test_measure_site_quantifies_amplification():
+    from repro.faults.campaign import measure_site
+    spec = FaultSpec(site="table", bit=20, op="mul", width=8)
+    r = measure_site(spec, "mul", width=8, coeff_bits=6)
+    assert r.scrub_detected and r.detected
+    assert r.changed_rate > 0 and r.are_delta_pct > 0
+    assert r.nonfinite_rate == 0.0     # the datapath clips, never NaNs
+    d = r.as_dict()
+    assert d["detected"] is True and d["site"] == "table"
+
+
+def test_campaign_smoke_passes():
+    from repro.faults.campaign import smoke
+    lines = []
+    assert smoke(report=lines.append)
+    assert any("PASS" in ln for ln in lines)
+
+
+def test_vacuous_stuck_at_scrubs_clean():
+    # stuck1 on a bit that is already 1 in every entry alters nothing:
+    # the scrub must NOT cry wolf on a semantically-null upset
+    clean = build_table_clean("div", 16, 8).view(np.uint32)
+    always_set = [b for b in range(32) if (clean & (1 << b) != 0).all()]
+    if not always_set:
+        pytest.skip("no universally-set bit in this table")
+    with fault_injection(FaultSpec(site="table", bit=always_set[0],
+                                   kind="stuck1", op="div", width=16)):
+        assert scrub_tables((("div", 16, 8, 3),)) == ()

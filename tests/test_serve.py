@@ -209,7 +209,8 @@ def test_quantize_refuses_narrow_lane_loudly():
 
 
 # -------------------------------------------------------------- scheduler --
-def _scheduler(batch=2, requests=0, shed_depth=3, recover_depth=1, gen=4):
+def _scheduler(batch=2, requests=0, shed_depth=3, recover_depth=1, gen=4,
+               **kw):
     from repro.launch.scheduler import Scheduler, default_ladder
 
     approx = ApproxConfig(mode="simdive", use_in_softmax=True,
@@ -218,7 +219,7 @@ def _scheduler(batch=2, requests=0, shed_depth=3, recover_depth=1, gen=4):
     sched = Scheduler(cfg, levels=default_ladder(approx), batch=batch,
                       prompt_len=P, max_seq=P + gen + 2,
                       shed_depth=shed_depth, recover_depth=recover_depth,
-                      seed=0)
+                      seed=0, **kw)
     rng = np.random.default_rng(7)
     for _ in range(requests):
         sched.submit(rng.integers(0, cfg.vocab_size, P, dtype=np.int32),
@@ -276,3 +277,182 @@ def test_scheduler_validates_geometry():
     with pytest.raises(ValueError, match="recover_depth"):
         Scheduler(cfg, levels=sched.levels, batch=2, prompt_len=P,
                   max_seq=64, shed_depth=2, recover_depth=2)
+
+
+def test_scheduler_refuses_zero_length_prompt_loudly():
+    cfg, sched = _scheduler()
+    from repro.launch.scheduler import Scheduler
+    with pytest.raises(ValueError, match="prompt_len must be positive"):
+        Scheduler(cfg, levels=sched.levels, batch=2, prompt_len=0,
+                  max_seq=64, shed_depth=3, recover_depth=1)
+    with pytest.raises(ValueError, match="max_retries"):
+        Scheduler(cfg, levels=sched.levels, batch=2, prompt_len=P,
+                  max_seq=64, shed_depth=3, recover_depth=1,
+                  max_retries=-1)
+
+
+def test_scheduler_retire_during_active_shed():
+    """A request retiring while the shed rung is active must free its
+    slot for the next queued request at the *current* (shed) level, with
+    every token attributed to the rung that actually produced it."""
+    _, sched = _scheduler(batch=2, requests=8, shed_depth=2,
+                          recover_depth=1, gen=3)
+    sched.warmup()
+    stats = sched.run()
+    assert stats["completed"] == 8
+    shed_tick = next(t for t, k, _ in stats["events"] if k == "shed")
+    recover_tick = next(t for t, k, _ in stats["events"] if k == "recover")
+    retire_ticks = [t for t, k, _ in stats["events"] if k == "retire"]
+    # at least one retirement landed while the shed rung was active ...
+    assert any(shed_tick <= t < recover_tick for t in retire_ticks)
+    # ... and the shed rung produced tokens for it
+    assert stats["tokens_per_level"]["shed"] > 0
+    total = sum(len(r.tokens) for r in sched.done)
+    assert sum(stats["tokens_per_level"].values()) == total
+
+
+def test_scheduler_all_slots_busy_queue_accounting():
+    """With every slot occupied, admission must leave the queue intact —
+    depth only drains as slots free — and nothing is double-admitted."""
+    _, sched = _scheduler(batch=2, requests=6, shed_depth=100, gen=4)
+    sched.warmup()
+    sched.step()                       # admits exactly `batch` requests
+    assert sum(r is not None for r in sched.slots) == 2
+    assert len(sched.queue) == 4
+    depth_before = len(sched.queue)
+    sched.step()                       # slots busy: no admission possible
+    assert len(sched.queue) == depth_before
+    admits = [v for _, k, v in sched.events if k == "admit"]
+    assert len(admits) == len(set(admits)) == 2
+    stats = sched.run()
+    assert stats["completed"] == 6
+    assert len(set(r.rid for r in sched.done)) == 6
+
+
+def test_scheduler_hysteresis_does_not_flap():
+    """A queue sitting strictly between recover_depth and shed_depth
+    must not move the level at all — and a shed is never immediately
+    re-shed/recovered tick-over-tick (the recover_depth < shed_depth
+    gap is the anti-flapping contract)."""
+    _, sched = _scheduler(batch=2, requests=5, shed_depth=6,
+                          recover_depth=1, gen=4)
+    sched.warmup()
+    stats = sched.run()
+    assert stats["completed"] == 5
+    # depth peaks at 5 and drains through the (1, 6) hysteresis band
+    # without ever crossing it -> the ladder never moved
+    assert stats["sheds"] == 0 and stats["recovers"] == 0
+    # and a drill that does shed never alternates on adjacent ticks
+    _, sched2 = _scheduler(batch=2, requests=10, shed_depth=3,
+                           recover_depth=1, gen=3)
+    sched2.warmup()
+    stats2 = sched2.run()
+    moves = [(t, k) for t, k, _ in stats2["events"]
+             if k in ("shed", "recover")]
+    for (t1, k1), (t2, k2) in zip(moves, moves[1:]):
+        if k1 != k2:
+            assert t2 > t1 + 1, f"level flapped {k1}->{k2} on adjacent ticks"
+
+
+# ------------------------------------------------------- watchdog / chaos --
+def test_scheduler_chaos_drill_self_heals():
+    """The ISSUE's acceptance drill: a persistent correction-table fault
+    lands mid-flight; the scrub quarantines poisoned work, retries it on
+    the exact recovery rung, and every admitted request completes with
+    finite outputs — none silently served, none lost."""
+    from repro.faults.inject import FaultSpec, set_faults
+
+    _, sched = _scheduler(batch=2, requests=6, shed_depth=100, gen=4,
+                          scrub_every=1)
+    assert sched.levels[-1].name == "recovery"
+    sched.warmup()
+    sched.step()                     # first admission is in flight
+    set_faults([FaultSpec(site="table", bit=20, kind="stuck1", op="div")])
+    try:
+        stats = sched.run()
+    finally:
+        set_faults([])
+    assert stats["completed"] == 6 and stats["failed"] == 0
+    assert stats["quarantines"] >= 1 and stats["retries"] >= 1
+    assert stats["tokens_per_level"]["recovery"] > 0
+    # quarantined requests were re-served from scratch on the exact rung
+    for req in sched.done:
+        assert len(req.tokens) == req.max_new
+        if req.retries:
+            assert set(req.levels) == {"recovery"}
+    # the scrub saw the corruption and said which table
+    dirty = [v for _, k, v in stats["events"] if k == "scrub-dirty"]
+    assert dirty and "div" in dirty[0]
+
+
+def test_scheduler_scrub_clears_after_repair():
+    """Disarming the fault (config memory repaired) must lift the
+    recovery pin: the scrub logs a clean pass and later admissions run
+    the ladder again."""
+    from repro.faults.inject import FaultSpec, set_faults
+
+    _, sched = _scheduler(batch=2, requests=2, shed_depth=100, gen=4,
+                          scrub_every=1)
+    sched.warmup()
+    sched.step()
+    set_faults([FaultSpec(site="table", bit=20, kind="stuck1", op="div")])
+    try:
+        sched.step()                 # scrub-dirty + quarantine
+        assert sched._poisoned
+    finally:
+        set_faults([])
+    stats = sched.run()
+    assert not stats["poisoned"]
+    kinds = [k for _, k, _ in stats["events"]]
+    assert "scrub-dirty" in kinds and "scrub-clean" in kinds
+    assert kinds.index("scrub-dirty") < kinds.index("scrub-clean")
+    assert stats["completed"] == 2 and stats["failed"] == 0
+
+
+def test_scheduler_tick_budget_times_out_and_retries():
+    """A request overstaying tick_budget is quarantined (counted as a
+    timeout), backed off, and re-served — not left occupying a slot."""
+    _, sched = _scheduler(batch=2, requests=2, shed_depth=100, gen=4,
+                          tick_budget=1)   # gen=4 needs ~4 ticks: must trip
+    sched.warmup()
+    stats = sched.run()
+    assert stats["timeouts"] >= 1
+    assert stats["retries"] >= 1
+    # retried requests still only ever fail loudly, never hang the drain
+    assert stats["completed"] + stats["failed"] == 2
+    for req in sched.failed:
+        assert req.failed and "budget" in req.fail_reason
+
+
+def test_scheduler_exhausted_retries_fail_loudly():
+    """max_retries=0: the first quarantine fails the request outright —
+    it lands in stats['failed'] with a reason, never in done."""
+    from repro.faults.inject import FaultSpec, set_faults
+
+    _, sched = _scheduler(batch=2, requests=2, shed_depth=100, gen=4,
+                          scrub_every=1, max_retries=0)
+    sched.warmup()
+    sched.step()
+    set_faults([FaultSpec(site="table", bit=20, kind="stuck1", op="div")])
+    try:
+        stats = sched.run()
+    finally:
+        set_faults([])
+    assert stats["failed"] == 2 and stats["completed"] == 0
+    assert stats["quarantines"] == 2 and stats["retries"] == 0
+    for req in sched.failed:
+        assert req.failed and req.fail_reason
+        assert req.tokens == []      # partial poisoned work was discarded
+    kinds = [k for _, k, _ in stats["events"]]
+    assert kinds.count("fail") == 2
+
+
+def test_scheduler_self_heal_off_keeps_legacy_shape():
+    """self_heal=False: no recovery rung, no watchdog — the ladder is
+    exactly what the caller passed (the pre-watchdog contract)."""
+    _, sched = _scheduler(batch=2, requests=2, gen=3, self_heal=False)
+    assert [lv.name for lv in sched.levels] == ["fine", "shed"]
+    sched.warmup()
+    stats = sched.run()
+    assert stats["completed"] == 2
+    assert stats["quarantines"] == 0 and stats["guard_trips"] == 0

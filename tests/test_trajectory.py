@@ -384,3 +384,62 @@ def test_append_accumulates_runs(tmp_path):
     doc = json.loads(p.read_text())
     assert doc["schema"] == SCHEMA_V2
     assert [r["created_unix"] for r in doc["runs"]] == [1, 2]
+
+def test_append_is_atomic_no_temp_droppings(tmp_path):
+    p = tmp_path / "BENCH.json"
+    append_trajectory(str(p), {"created_unix": 1, "grid": []})
+    append_trajectory(str(p), {"created_unix": 2, "grid": []})
+    names = sorted(f.name for f in tmp_path.iterdir())
+    # only the document and its lock sidecar — no .tmp files survive
+    assert names == ["BENCH.json", "BENCH.json.lock"]
+
+
+def test_append_crash_mid_write_preserves_previous_history(tmp_path,
+                                                           monkeypatch):
+    import benchmarks.run as run_mod
+    p = tmp_path / "BENCH.json"
+    append_trajectory(str(p), {"created_unix": 1, "grid": []})
+    before = p.read_text()
+
+    real_replace = os.replace
+
+    def exploding_replace(src, dst):
+        if src.endswith(".lock") or dst.endswith(".lock"):
+            return real_replace(src, dst)
+        raise OSError("disk full")       # crash at the commit point
+
+    monkeypatch.setattr(run_mod.os, "replace", exploding_replace)
+    with pytest.raises(OSError, match="disk full"):
+        append_trajectory(str(p), {"created_unix": 2, "grid": []})
+    monkeypatch.undo()
+    # the on-disk history is byte-identical to before the failed append,
+    # and the aborted temp file was cleaned up
+    assert p.read_text() == before
+    assert json.loads(p.read_text())["runs"][-1]["created_unix"] == 1
+    assert not list(tmp_path.glob("*.tmp"))
+
+
+def test_append_serializes_under_the_lock(tmp_path):
+    """Two overlapping appends must both land (the lock serializes the
+    read-modify-write; without it one run's append would be lost)."""
+    import threading
+    p = tmp_path / "BENCH.json"
+    errs = []
+
+    def worker(i):
+        try:
+            for j in range(5):
+                append_trajectory(str(p),
+                                  {"created_unix": i * 100 + j, "grid": []})
+        except Exception as e:           # pragma: no cover - failure path
+            errs.append(e)
+
+    ts = [threading.Thread(target=worker, args=(i,)) for i in range(4)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert not errs
+    doc = json.loads(p.read_text())
+    ids = [r["created_unix"] for r in doc["runs"]]
+    assert len(ids) == 20 and len(set(ids)) == 20    # nothing lost

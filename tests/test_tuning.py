@@ -137,6 +137,26 @@ def test_policy_rejects_wrong_schema():
         TuningPolicy.from_dict({"schema": "not-a-policy", "entries": []})
 
 
+def test_policy_rejects_future_schema_version_by_name():
+    with pytest.raises(ValueError, match="simdive-policy/v1"):
+        TuningPolicy.from_dict({"schema": "simdive-policy/v9",
+                                "entries": []})
+
+
+def test_policy_warns_on_unknown_top_level_fields(tmp_path):
+    doc = _policy().as_dict()
+    doc["calibration"] = {"set": "imagenet"}
+    doc["zz_extra"] = 1
+    with pytest.warns(UserWarning, match="calibration.*zz_extra"):
+        pol = TuningPolicy.from_dict(doc)
+    assert pol == _policy()             # unknown fields ignored, not kept
+    path = tmp_path / "policy.json"
+    import json
+    path.write_text(json.dumps(doc))
+    with pytest.warns(UserWarning, match="will not survive a re-save"):
+        assert TuningPolicy.load(str(path)) == _policy()
+
+
 def test_approxconfig_resolves_policy_entries():
     """ApproxConfig(policy=...) dispatches the entry's knobs through the
     registry; no matching entry falls back to the config's own fields."""
