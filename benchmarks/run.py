@@ -26,7 +26,13 @@ pipelined block so the double-buffered schedule owns a BENCH key) — each
 carrying the full
 :mod:`repro.metrics` error profile (ARE%/MRED/NMED/PRE%/WCE/error-rate
 against the exact result) and a shape-bucketed throughput measurement;
-everything flows through the kernel-registry ``get_op`` entry point. The
+everything flows through the kernel-registry ``get_op`` entry point.
+Three row families measure whole subsystems rather than single kernels:
+``serve`` (policy-resolved decode tok/s + exact-twin accuracy), ``fault``
+(emulated-SEU containment) and ``train`` (exact-vs-approx twin training
+divergence — ARE% = final-loss delta %, WCE = worst per-step |loss
+delta|, NMED = 1 − min gradient cosine; w8-only, since 16-bit matmul
+emulation needs x64 accumulators this driver runs without). The
 ``suites`` section captures each table/figure module's structured rows.
 
 Schema: ``simdive-bench/v2`` (see :mod:`repro.metrics.trajectory`). A
@@ -178,6 +184,21 @@ def _grid_configs(quick: bool):
         yield dict(kernel="serve", op="serve", width=width, coeff_bits=cb,
                    backend="ref", arch="smollm-360m", batch=4, prompt=32,
                    gen=8, **common)
+    # training: the approx-in-the-loop divergence family (repro.train) —
+    # a 20-step smollm-360m smoke trains exact and approximate twins on a
+    # bitwise-identical batch sequence and gates the divergence summary:
+    # ARE% carries the final-loss delta (%), WCE the worst per-step loss
+    # delta, NMED the worst gradient *mis*alignment (1 - min grad
+    # cosine). 'train-bwd' additionally emulates approximate backward
+    # matmuls (ApproxConfig(backward='approx')) — a distinct op name
+    # because backward mode is not part of the gate key. All sampled
+    # class; width stays at 8-bit lanes (the 16-bit matmul emulation
+    # needs x64, which this driver does not enable).
+    for op, cb, bwd in (("train", 6, "exact"), ("train", 4, "exact"),
+                        ("train-bwd", 6, "approx")):
+        yield dict(kernel="train", op=op, width=8, coeff_bits=cb,
+                   backend="ref", arch="smollm-360m", batch=8, seq=128,
+                   steps=20, backward=bwd, **common)
     # fault: the SEU resilience family (repro.faults.campaign) — per-site
     # error amplification of the elemwise datapath under the deterministic
     # default site set, plus guard/scrub detectability counts. Fully
@@ -232,6 +253,12 @@ def _cfg_geometry(cfg: dict, quick: bool) -> dict:
         shapes = ((cfg["batch"], cfg["prompt"]),)
         g = {"batch": cfg["batch"], "prompt": cfg["prompt"],
              "gen": cfg["gen"]}
+    elif cfg["kernel"] == "train":
+        # the twin-run row keys on its (batch, seq) geometry like serve;
+        # the timed callable is the jitted approximate train step
+        shapes = ((cfg["batch"], cfg["seq"]),)
+        g = {"batch": cfg["batch"], "seq": cfg["seq"],
+             "steps": cfg["steps"]}
     elif cfg["kernel"] == "fault":
         # same operand sets as the elemwise family: the w8 rows sweep the
         # exhaustive grid, w16 the fixed-seed sample (fault rows never
@@ -520,6 +547,69 @@ def _run_fault(cfg: dict, quick: bool) -> dict:
     }
 
 
+def _run_train(cfg: dict, quick: bool) -> dict:
+    """Approx-in-the-loop training row: exact-vs-approx twins, gated.
+
+    Runs :func:`repro.train.train_twin` for ``steps`` steps on the smoke
+    model — both twins consume the same (seed, step)-deterministic batch
+    sequence, so the recorded divergence isolates the arithmetic — then
+    times the jitted *approximate* train step on a warmed state (the
+    per-sequence step latency a trainer sees). The ``error`` mapping
+    reuses the gate's field vocabulary for the divergence summary:
+    ``are_pct`` = final loss delta %, ``wce`` = max per-step |loss
+    delta|, ``nmed`` = 1 - min gradient cosine. The full
+    ``simdive-train-divergence/v1`` summary rides along un-gated.
+    """
+    from repro.configs import get_config
+    from repro.configs.base import ShapeConfig
+    from repro.core.approx import ApproxConfig
+    from repro.data import make_source
+    from repro.launch.train import make_train_step
+    from repro.models import build
+    from repro.optim import adamw, cosine_schedule
+    from repro.train import train_twin
+
+    geo = _cfg_geometry(cfg, quick)
+    B, S, steps = geo["batch"], geo["seq"], geo["steps"]
+    base = get_config(cfg["arch"], smoke=True)
+    shape = ShapeConfig("bench-train", S, B, "train")
+    acfg = ApproxConfig(mode="simdive", width=cfg["width"],
+                        coeff_bits=cfg["coeff_bits"],
+                        index_bits=cfg["index_bits"],
+                        backward=cfg["backward"])
+    lr = 1e-3
+    params, trace = train_twin(base, shape, steps=steps, approx=acfg,
+                               seed=GRID_SEED, lr=lr)
+    s = trace.summary()
+    # steady-state approximate train step on the post-run state; the
+    # non-donating jit keeps the timed buffers re-runnable
+    lm_a = build(base.with_approx(acfg))
+    opt = adamw(cosine_schedule(lr, warmup=min(100, steps // 10 + 1),
+                                total=steps))
+    opt_state = jax.jit(opt.init)(params)
+    src = make_source(base, shape, seed=GRID_SEED)
+    batch = {k: jnp.asarray(v) for k, v in src.batch(0).items()}
+    step = jax.jit(make_train_step(lm_a, opt))
+    call = (lambda: step(params, opt_state, batch))
+    t = time_callable(call, iters=5, items=B)
+    tp = t.as_dict()
+    tp["shape_buckets"] = geo["shape_buckets"]
+    return {
+        "n": steps, "seed": GRID_SEED,
+        "exhaustive": False,             # sampled class: the gate's 2% rtol
+        "shape": {"arch": cfg["arch"], "batch": B, "seq": S,
+                  "steps": steps},
+        "backward": cfg["backward"],
+        "divergence": s,
+        "error": {
+            "are_pct": s["final_loss_delta_pct"],
+            "wce": s["max_abs_loss_delta"],
+            "nmed": 1.0 - s["min_grad_cosine"],
+        },
+        "throughput": tp,
+    }
+
+
 _GRID_RUNNERS = {
     "elemwise": _run_elemwise,
     "packed": _run_packed,
@@ -528,6 +618,7 @@ _GRID_RUNNERS = {
     "attention": _run_attention,
     "serve": _run_serve,
     "fault": _run_fault,
+    "train": _run_train,
 }
 
 
@@ -540,6 +631,8 @@ def _cfg_label(cfg: dict) -> str:
         label += f"/{cfg['arch']}/Sq{cfg['sq']}"
     if "prompt" in cfg:
         label += f"/{cfg['arch']}/B{cfg['batch']}xP{cfg['prompt']}"
+    if "seq" in cfg:
+        label += f"/{cfg['arch']}/B{cfg['batch']}xS{cfg['seq']}/{cfg['backward']}-bwd"
     if cfg.get("block") is not None and len(cfg["block"]) > 2:
         label += f"/pipelined-d{cfg['block'][2]}"
     return label
@@ -578,6 +671,13 @@ def run_grid(report, quick: bool, records: list[dict],
                        f"changed={rec['error'].get('error_rate', 0.0):.3f},"
                        f"detected={rec['detected_sites']}/"
                        f"{rec['n_sites']}")
+            elif cfg["kernel"] == "train":
+                # divergence vocabulary, not per-lane error stats
+                err, tp = rec["error"], rec["throughput"]
+                report(f"grid,{_cfg_label(cfg)},"
+                       f"lossDelta%={err['are_pct']:.4f},"
+                       f"1-gcos={err['nmed']:.4f},"
+                       f"mean_us={tp['mean_us']:.0f}")
             else:
                 err, tp = rec["error"], rec["throughput"]
                 report(f"grid,{_cfg_label(cfg)},ARE%={err['are_pct']:.4f},"
@@ -820,7 +920,7 @@ def main() -> None:
     # 'attention' / 'serve' / 'fault' are the grid restricted to those
     # kernels — handy when iterating on one path without re-sweeping
     # every op
-    grid_kernels = {"attention", "serve", "fault"}
+    grid_kernels = {"attention", "serve", "fault", "train"}
     valid = {name for name, _, _, _ in SUITES} | {"grid"} | grid_kernels
     if wanted is not None and not wanted <= valid:
         # a typo'd suite name must not append an empty trajectory record

@@ -180,8 +180,16 @@ def main(argv=None) -> int:
     sub = ap.add_subparsers(dest="cmd")
 
     f = sub.add_parser("frontier", help="print an (op, width) frontier")
-    f.add_argument("--op", required=True, choices=("mul", "div"))
+    f.add_argument("--op", required=True, choices=("mul", "div", "matmul"))
     f.add_argument("--width", type=int, required=True, choices=(8, 16, 32))
+    f.add_argument("--kernel", default="elemwise",
+                   choices=("elemwise", "packed", "matmul_int",
+                            "matmul_emul"),
+                   help="measurement level: per-lane (elemwise), through "
+                        "the SIMD word path (packed), or accumulate-level "
+                        "NMED vs exact int64 (matmul_*; --op matmul)")
+    f.add_argument("--shape", default=None, metavar="M,K,N",
+                   help="matmul problem size (default 64,128,64)")
     f.add_argument("--pareto", action="store_true",
                    help="only the non-dominated points")
     f.add_argument("--json", default=None, metavar="PATH",
@@ -219,16 +227,26 @@ def main(argv=None) -> int:
 
     try:
         if args.cmd == "frontier":
+            shape = None
+            if args.shape:
+                shape = tuple(int(x) for x in args.shape.split(","))
+                if len(shape) != 3:
+                    ap.error("--shape takes M,K,N")
+            if args.kernel.startswith("matmul") != (args.op == "matmul"):
+                ap.error("--op matmul goes with --kernel matmul_int/"
+                         "matmul_emul (and only with them)")
             pts = build_frontier(args.op, width=args.width,
                                  index_bits=args.index_bits,
                                  backend=args.backend,
-                                 bench=_bench_arg(args))
+                                 bench=_bench_arg(args),
+                                 kernel=args.kernel, shape=shape)
             if args.pareto:
                 pts = pareto(pts, args.metric)
             print(frontier_table(pts, args.metric))
             if args.json:
                 with open(args.json, "w") as fh:
                     json.dump([{**dict(p.error), "op": p.op,
+                                "kernel": p.kernel,
                                 "width": p.width,
                                 "coeff_bits": p.coeff_bits,
                                 "index_bits": p.index_bits,

@@ -1,13 +1,16 @@
 """End-to-end driver: train a ~100M-param llama-style LM with the full
-substrate — sharded step, deterministic data, checkpoints, and a simulated
-preemption + restart (the fault-tolerance path).
+substrate AND the approximate-training loop — pick a matmul config off
+the measured accuracy frontier, wrap it in an exact-warmup precision
+schedule, train through a simulated preemption + restart under that
+schedule, then run the exact-vs-approx twin and print the divergence
+report.
 
 Defaults are sized for a real run (~125M params, 300 steps); pass --quick
 for a CI/CPU-smoke variant that finishes in ~a minute.
 
 Run:  PYTHONPATH=src python examples/train_lm.py --quick
       PYTHONPATH=src python examples/train_lm.py              # full ~100M
-      PYTHONPATH=src python examples/train_lm.py --approx simdive   # QAT-ish
+      PYTHONPATH=src python examples/train_lm.py --nmed-budget 0.01
 """
 import argparse
 import dataclasses
@@ -20,6 +23,8 @@ from repro.configs import get_config
 from repro.configs.base import ShapeConfig
 from repro.core.approx import ApproxConfig
 from repro.launch.train import train
+from repro.train import train_twin, warmup_schedule
+from repro.tuning import PolicyEntry, TuningPolicy, build_frontier
 
 
 def lm_100m(quick: bool):
@@ -36,21 +41,41 @@ def lm_100m(quick: bool):
     return cfg
 
 
+def pick_matmul_policy(nmed_budget: float) -> TuningPolicy:
+    """Cheapest coeff_bits whose accumulate-level NMED (emulated SIMDive
+    matmul vs exact int64, measured on a real problem) meets the budget —
+    the tuning story applied to the op training actually dispatches."""
+    pts = build_frontier("matmul", width=8, kernel="matmul_emul",
+                         shape=(64, 128, 64), coeff_sweep=(0, 2, 4, 6, 8),
+                         bench=None)
+    for p in sorted(pts, key=lambda p: p.coeff_bits):
+        nmed = dict(p.error)["nmed"]
+        print(f"  matmul_emul w8 cb{p.coeff_bits}: NMED {nmed:.5f}"
+              f"{'  <- selected' if nmed <= nmed_budget else ''}")
+        if nmed <= nmed_budget:
+            entry = PolicyEntry(op="matmul", width=8,
+                                coeff_bits=p.coeff_bits,
+                                kernel="matmul_emul",
+                                stats=tuple(sorted(dict(p.error).items())))
+            return TuningPolicy(entries=(entry,),
+                                meta=(("nmed_budget", nmed_budget),))
+    raise SystemExit(f"no config meets NMED budget {nmed_budget}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="tiny variant (~1 min on CPU)")
     ap.add_argument("--steps", type=int, default=None)
-    ap.add_argument("--approx", default="exact",
-                    choices=["exact", "mitchell", "simdive"])
+    ap.add_argument("--nmed-budget", type=float, default=0.005,
+                    help="accumulate-level NMED budget for the matmul "
+                         "config the policy pins")
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--report", default=None, metavar="JSON",
+                    help="write the twin divergence report here")
     args = ap.parse_args()
 
     cfg = lm_100m(args.quick)
-    if args.approx != "exact":
-        # divider-softmax on during training; straight-through gradients
-        cfg = cfg.with_approx(ApproxConfig(mode=args.approx, emulate=False,
-                                           use_in_softmax=True))
     steps = args.steps or (30 if args.quick else 300)
     shape = (ShapeConfig("ex", 128, 8, "train") if args.quick
              else ShapeConfig("ex", 512, 16, "train"))
@@ -59,26 +84,52 @@ def main():
     print(f"model {cfg.name}: {n_params/1e6:.1f}M params | "
           f"{steps} steps @ batch {shape.global_batch} x seq {shape.seq_len}")
 
-    # --- phase 1: train, then get preempted at 2/3 of the run -----------
+    # --- phase 0: frontier -> policy -> precision schedule ---------------
+    print(f"[phase 0] matmul frontier, NMED budget {args.nmed_budget}")
+    policy = pick_matmul_policy(args.nmed_budget)
+    warmup = max(steps // 5, 1)
+    sched = warmup_schedule(policy, warmup_steps=warmup,
+                            meta={"nmed_budget": args.nmed_budget})
+    print(sched.render())
+
+    # --- phase 1: train under the schedule, preempted at 2/3 ------------
     kill_at = max(2 * steps // 3, 1)
     save_every = max(steps // 6, 1)
     print(f"[phase 1] training to step {kill_at}, then simulating a kill "
           f"(checkpoint every {save_every})")
     _, losses1 = train(cfg, shape, steps=steps, ckpt_dir=ckpt_dir,
                        save_every=save_every, resume="none",
-                       stop_after=kill_at)
+                       stop_after=kill_at, schedule=sched)
 
-    # --- phase 2: restart from the newest complete checkpoint -----------
+    # --- phase 2: restart; the schedule rung is a pure function of the
+    # step, so the resumed run replays the same precision sequence -------
     print("[phase 2] restarting with --resume auto")
     _, losses2 = train(cfg, shape, steps=steps, ckpt_dir=ckpt_dir,
-                       save_every=save_every, resume="auto")
+                       save_every=save_every, resume="auto",
+                       schedule=sched)
 
     first, last = losses1[0], losses2[-1]
     print(f"loss: {first:.3f} -> {last:.3f} "
           f"({'improved ✓' if last < first else 'NOT improved ✗'})")
+
+    # --- phase 3: the exact-vs-approx twin: how much did the policy's
+    # arithmetic cost, in loss? ------------------------------------------
+    twin_steps = min(steps, 20) if args.quick else min(steps, 60)
+    print(f"[phase 3] twin divergence run ({twin_steps} steps)")
+    base = ApproxConfig(mode="simdive", policy=policy)
+    _, trace = train_twin(cfg, shape, steps=twin_steps, approx=base,
+                          schedule=warmup_schedule(
+                              policy, warmup_steps=max(twin_steps // 5, 1)),
+                          log_every=max(twin_steps // 5, 1))
+    print(trace.render())
+    if args.report:
+        trace.save(args.report)
+        print(f"wrote {args.report}")
+
     if args.ckpt_dir is None:
         shutil.rmtree(ckpt_dir, ignore_errors=True)
     assert last < first, "training did not reduce loss"
+    assert np.isfinite(trace.final_loss_delta_pct()), "twin diverged"
 
 
 def _param_shapes(cfg):

@@ -22,6 +22,10 @@ def main(argv=None) -> int:
                     help="emit the machine-readable report")
     ap.add_argument("--op", action="append", default=None,
                     help="restrict to this registered op (repeatable)")
+    ap.add_argument("--diff", default=None, metavar="REF",
+                    help="analyze only ops whose datapath sources changed "
+                         "vs this git ref (shared-source changes widen to "
+                         "the full matrix; lint always runs repo-wide)")
     ap.add_argument("--width", action="append", type=int, default=None,
                     help="restrict to this lane width (repeatable)")
     ap.add_argument("--no-lint", action="store_true",
@@ -37,7 +41,32 @@ def main(argv=None) -> int:
 
     from . import render_text, run_lint, run_matrix, to_json
 
-    result = run_matrix(ops=args.op, widths=args.width)
+    ops = args.op
+    skip_matrix = False
+    if args.diff is not None:
+        if args.op:
+            ap.error("--diff and --op are mutually exclusive: the diff "
+                     "decides the op set")
+        from repro.kernels import registry
+
+        from .diff import changed_paths, ops_for_paths
+        diff_ops = ops_for_paths(
+            changed_paths(args.diff),
+            [impl.name for impl in registry.all_ops()])
+        if diff_ops is None:
+            print(f"# --diff {args.diff}: shared datapath sources changed "
+                  "-> full matrix")
+        elif not diff_ops:
+            print(f"# --diff {args.diff}: no datapath sources changed "
+                  "-> matrix skipped (lint still runs)")
+            skip_matrix = True
+        else:
+            print(f"# --diff {args.diff}: analyzing {', '.join(diff_ops)}")
+            ops = list(diff_ops)
+
+    from .widthcheck import MatrixResult
+    result = MatrixResult() if skip_matrix \
+        else run_matrix(ops=ops, widths=args.width)
     lint_findings = [] if args.no_lint else run_lint()
 
     text = (json.dumps(to_json(result, lint_findings), indent=2, sort_keys=True)

@@ -1,0 +1,96 @@
+"""Change-scoped analysis: which ops does a diff actually touch?
+
+``python -m repro.analysis --diff <ref>`` analyzes only the ops whose
+datapath sources changed relative to a git ref, instead of the full
+matrix — the per-PR iteration loop (seconds, not the minutes the width-32
+sweeps take) while CI keeps running the complete gate.
+
+The mapping is deliberately coarse and fails safe:
+
+* each registered op owns the kernel files that implement *only* it
+  (:data:`OP_SOURCES`);
+* everything the ops share — the datapath core, the registry, the
+  reference implementations, all of ``core/`` and the analyzer itself —
+  is :data:`SHARED_SOURCES`: touching any of it means "analyze
+  everything" (returns ``None``, the ``run_matrix(ops=None)`` sentinel);
+* a diff touching none of the mapped sources returns ``()`` — no ops to
+  re-verify (the lint pass still runs; it is repo-wide and cheap).
+
+Pure path logic (:func:`ops_for_paths`) is separated from the git query
+(:func:`changed_paths`) so the mapping is unit-testable without a
+repository.
+"""
+from __future__ import annotations
+
+import subprocess
+
+__all__ = ["OP_SOURCES", "SHARED_SOURCES", "changed_paths",
+           "ops_for_paths"]
+
+#: op name -> source files (repo-relative, forward slashes) implementing
+#: only that op. An op absent here (e.g. ``sqrt``) has no exclusive
+#: sources — it is reached only through the shared datapath.
+OP_SOURCES: dict[str, tuple] = {
+    "elemwise": ("src/repro/kernels/elemwise.py",),
+    "packed": ("src/repro/kernels/packed_simd.py",
+               "src/repro/core/simd_pack.py"),
+    "matmul_int": ("src/repro/kernels/logmatmul.py",),
+    "matmul_emul": ("src/repro/kernels/logmatmul.py",),
+    "attention": ("src/repro/kernels/flash_attention.py",),
+}
+
+#: prefixes/files shared by every op: touching any of these re-verifies
+#: the full matrix. Directories end with '/' and match by prefix.
+SHARED_SOURCES: tuple = (
+    "src/repro/kernels/datapath.py",
+    "src/repro/kernels/common.py",
+    "src/repro/kernels/ops.py",
+    "src/repro/kernels/ref.py",
+    "src/repro/kernels/registry.py",
+    "src/repro/core/",
+    "src/repro/analysis/",
+)
+
+
+def changed_paths(ref: str, repo_root: str | None = None) -> tuple:
+    """Repo-relative paths changed vs ``ref`` (committed + worktree).
+
+    ``git diff --name-only <ref>`` — includes uncommitted edits, which is
+    what a pre-push iteration loop wants. Raises ``RuntimeError`` with
+    git's stderr on a bad ref: a typo'd ref must not silently analyze
+    nothing.
+    """
+    cmd = ["git", "diff", "--name-only", ref]
+    proc = subprocess.run(cmd, cwd=repo_root, capture_output=True,
+                          text=True)
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"git diff --name-only {ref!r} failed: "
+            f"{proc.stderr.strip() or proc.stdout.strip()}")
+    return tuple(p.strip() for p in proc.stdout.splitlines() if p.strip())
+
+
+def ops_for_paths(paths, known_ops) -> tuple | None:
+    """The op subset a set of changed paths requires re-analyzing.
+
+    Returns ``None`` for "the full matrix" (a shared source changed, or
+    an op in :data:`OP_SOURCES` is not in ``known_ops`` — a stale map
+    must widen, never narrow), a tuple of op names otherwise (possibly
+    empty: nothing datapath-relevant changed).
+    """
+    known = set(known_ops)
+    # the map widening-checks itself: an OP_SOURCES key the registry no
+    # longer knows means this module is out of date — full matrix
+    if not set(OP_SOURCES) <= known:
+        return None
+    hit: set = set()
+    for p in paths:
+        path = p.replace("\\", "/")
+        for shared in SHARED_SOURCES:
+            if (path.startswith(shared) if shared.endswith("/")
+                    else path == shared):
+                return None
+        for op, sources in OP_SOURCES.items():
+            if path in sources:
+                hit.add(op)
+    return tuple(sorted(hit))

@@ -85,6 +85,18 @@ class ApproxConfig:
     # budget-selected policy drives every knob without model-code edits
     policy: object | None = None
     layer: str | None = None       # layer label for policy lookup
+    # policy_only: approximate ONLY where the policy carries a matching
+    # entry (layer-scoped or op default); call sites whose lookup misses
+    # run exact instead of falling back to this config's own knobs. This
+    # is how a per-layer sensitivity assignment leaves unprofiled layers
+    # untouched (see repro.tuning.sensitivity.train_run_metric).
+    policy_only: bool = False
+    # backward: 'exact' keeps the straight-through custom_vjp (grads flow
+    # through the exact einsum while the forward runs SIMDive — the QAT
+    # default); 'approx' emulates approximate *backward* matmuls too: both
+    # grad GEMMs (dL/dx, dL/dw) run the same quantize + SIMDive emulated
+    # matmul as the forward (see repro/train/).
+    backward: str = "exact"
     # guarded dispatch: every get_op below validates concrete outputs and
     # raises registry.GuardTripped on violation (see kernels/README.md
     # "Robustness"). Off by default: guards read outputs back to host, so
@@ -92,9 +104,30 @@ class ApproxConfig:
     # scheduler watchdog instead.
     guard: bool = False
 
+    def __post_init__(self):
+        if self.backward not in ("exact", "approx"):
+            raise ValueError(f"backward must be 'exact' or 'approx', "
+                             f"got {self.backward!r}")
+
     @property
     def enabled(self) -> bool:
         return self.mode != "exact"
+
+    def active_for(self, op: str) -> bool:
+        """Whether approximation applies to logical ``op`` at this layer.
+
+        Always true when enabled, unless ``policy_only`` is set — then
+        only where the policy resolves a matching entry (layer-scoped
+        first, then the op default). Dispatch sites consult this before
+        quantizing, so a ``policy_only`` config runs every unassigned
+        layer bit-exact rather than on the config's fallback knobs.
+        """
+        if not self.enabled:
+            return False
+        if not self.policy_only:
+            return True
+        return (self.policy is not None
+                and self.policy.lookup(op, self.layer) is not None)
 
     def spec(self, width: int | None = None) -> SimdiveSpec:
         w = self.width if width is None else width
@@ -158,7 +191,10 @@ def _resolution_sig(cfg: ApproxConfig) -> tuple:
     """Everything policy resolution can change for one layer, hashable."""
     spec_a, backend_a, frac = cfg.resolve_attention()
     return (cfg.resolve("matmul"), cfg.resolve("div", cfg.div_width),
-            spec_a, backend_a, frac)
+            spec_a, backend_a, frac,
+            # policy_only flips per-layer *enablement*, not just the spec
+            tuple(cfg.active_for(op)
+                  for op in ("matmul", "div", "attention")))
 
 
 def serving_segments(approx: ApproxConfig, n_layers: int
@@ -211,7 +247,8 @@ def approx_matmul(x: jax.Array, w: jax.Array, cfg: ApproxConfig) -> jax.Array:
 
 
 def _approx_matmul_fwd_impl(x, w, cfg):
-    if not cfg.enabled or not cfg.use_in_linear:
+    if not cfg.enabled or not cfg.use_in_linear \
+            or not cfg.active_for("matmul"):
         return x @ w
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
@@ -230,6 +267,19 @@ def _approx_matmul_fwd(x, w, cfg):
 
 def _approx_matmul_bwd(cfg, res, g):
     x, w = res
+    if cfg.backward == "approx" and cfg.enabled and cfg.use_in_linear \
+            and cfg.active_for("matmul"):
+        # emulate approximate *backward* matmuls: both grad GEMMs run the
+        # same quantize + SIMDive emulated matmul as the forward. This is
+        # the opt-in training mode (repro/train/) — the default below is
+        # the straight-through exact einsum (QAT semantics).
+        gf = g.astype(jnp.float32)
+        wf = w.astype(jnp.float32)
+        gx = _approx_matmul_fwd_impl(gf, wf.T, cfg)
+        x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+        g2 = gf.reshape(-1, gf.shape[-1])
+        gw = _approx_matmul_fwd_impl(x2.T, g2, cfg)
+        return gx.astype(x.dtype), gw.astype(w.dtype)
     gx = jnp.einsum("...n,kn->...k", g, w).astype(x.dtype)
     gw = jnp.einsum("...k,...n->kn", x, g).astype(w.dtype)
     return gx, gw
@@ -255,6 +305,10 @@ def approx_matmul_int8(x: jax.Array, q: jax.Array, scale: jax.Array,
     magnitudes: serving would silently truncate every weight, which is
     exactly the mis-serve this path exists to refuse.
     """
+    if not cfg.active_for("matmul"):
+        # policy_only with no matmul entry at this layer: exact dequant
+        wf = q.astype(jnp.float32) * scale.astype(jnp.float32)
+        return (x.astype(jnp.float32) @ wf).astype(x.dtype)
     spec, backend = cfg.resolve("matmul")
     if spec.width < 8:
         raise ValueError(
@@ -318,6 +372,9 @@ def attention_div(acc: jax.Array, l: jax.Array, cfg: ApproxConfig):
     (..., dh); ``l`` is (...,) > 0. The default 16-bit lane runs in uint32
     everywhere; a 32-bit lane needs jax x64 mode.
     """
+    if not cfg.active_for("attention"):
+        # policy_only with no attention entry at this layer: exact divide
+        return acc / jnp.maximum(l, 1e-30)[..., None]
     spec, backend, frac_out = cfg.resolve_attention()
     w = spec.width
     num = jnp.abs(acc)
@@ -346,7 +403,8 @@ def approx_softmax(x: jax.Array, axis: int, cfg: ApproxConfig) -> jax.Array:
 
 
 def _approx_softmax_impl(x, axis, cfg):
-    if not cfg.enabled or not cfg.use_in_softmax:
+    if not cfg.enabled or not cfg.use_in_softmax \
+            or not cfg.active_for("div"):
         return jax.nn.softmax(x, axis=axis)
     m = jax.lax.stop_gradient(jnp.max(x, axis=axis, keepdims=True))
     e = jnp.exp((x - m).astype(jnp.float32))
@@ -379,7 +437,8 @@ def approx_rmsnorm(x: jax.Array, gamma: jax.Array, eps: float,
 
 def _approx_rmsnorm_impl(x, gamma, eps, cfg):
     ms = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
-    if not cfg.enabled or not cfg.use_in_norm:
+    if not cfg.enabled or not cfg.use_in_norm \
+            or not cfg.active_for("div"):
         inv = jax.lax.rsqrt(ms + eps)
     else:
         # rsqrt in the log domain: sqrt is L >> 1, then one SIMDive divide.

@@ -18,7 +18,16 @@ between the table that reports it and the test that bounds it.
   trajectory                   BENCH_simdive.json schema + migration +
                                the regression gate (diff_runs); pure
                                stdlib, see benchmarks/compare.py
+  divergence                   approx-vs-exact training twins: per-step
+                               loss delta, gradient cosine, parameter
+                               drift (DivergenceTrace; repro.train)
 """
+from .divergence import (
+    DivergenceTrace,
+    grad_cosine,
+    param_drift,
+    tree_norm,
+)
 from .errors import (
     ErrorStats,
     classification_accuracy,
@@ -61,4 +70,8 @@ __all__ = [
     "TrajectoryError",
     "diff_runs",
     "load_trajectory",
+    "DivergenceTrace",
+    "grad_cosine",
+    "param_drift",
+    "tree_norm",
 ]

@@ -90,13 +90,17 @@ def dense(x, w, approx: ApproxConfig = EXACT):
     an exact float matmul. ``approx_matmul_int8`` refuses lanes narrower
     than the 8-bit magnitudes rather than truncating weights.
     """
+    active = approx.enabled and approx.use_in_linear and approx.emulate \
+        and approx.active_for("matmul")
     if isinstance(w, QuantizedWeight):
-        if approx.enabled and approx.use_in_linear and approx.emulate:
+        if active:
             return approx_matmul_int8(x, w.q, w.scale, approx)
         wf = w.q.astype(x.dtype) * w.scale.astype(x.dtype)
         return x @ wf
-    if approx.enabled and approx.use_in_linear and approx.emulate:
+    if active:
         return approx_matmul(x, w.astype(jnp.float32), approx).astype(x.dtype)
+    # inactive (incl. policy_only layers with no matmul entry): the plain
+    # matmul in the model's own dtype — bitwise-identical to exact mode
     return x @ w.astype(x.dtype)
 
 
@@ -207,7 +211,8 @@ def _flash_attention_kernel(q, k, v, *, causal, window, approx: ApproxConfig,
     _, _, frac_out = approx.resolve_attention()
     out = get_op("attention", spec, backend)(
         qf, kf, vf, causal=causal, window=window,
-        approx_div=approx.enabled and approx.use_in_softmax,
+        approx_div=(approx.enabled and approx.use_in_softmax
+                    and approx.active_for("attention")),
         frac_out=frac_out, q_offset=q_offset)
     out = out.reshape(B, KVH, G, Sq, dh).transpose(0, 3, 1, 2, 4)
     return out.astype(q.dtype)

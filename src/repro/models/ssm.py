@@ -22,7 +22,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from .layers import rmsnorm
+from repro.core.approx import EXACT, ApproxConfig
+from .layers import dense, rmsnorm
 
 # =========================================================== RWKV6 (Finch) =
 LORA_R = 32          # token-shift ddlerp low-rank
@@ -100,9 +101,17 @@ def _wkv_chunk(state, r, k, v, w, u):
     return state_new, y
 
 
-def rwkv6_time_mix(p, x, x_prev, state, n_heads, chunk=64, unroll=False):
+def rwkv6_time_mix(p, x, x_prev, state, n_heads, chunk=64, unroll=False,
+                   approx: ApproxConfig = EXACT):
     """x: (B,T,D). x_prev: (B,D) last token of previous segment.
-    state: (B,H,dk,dk). Returns (y, new_x_prev, new_state)."""
+    state: (B,H,dk,dk). Returns (y, new_x_prev, new_state).
+
+    The r/k/v/g/output projections route through :func:`dense`, so approx
+    mode emulates SIMDive matmuls here like it does in attention stacks.
+    The token-shift and decay LoRA paths stay exact: they feed
+    ``exp(-exp(.))`` decay, where Mitchell-family log error compounds
+    multiplicatively across the recurrence.
+    """
     B, T, D = x.shape
     H = n_heads
     dk = D // H
@@ -116,10 +125,10 @@ def rwkv6_time_mix(p, x, x_prev, state, n_heads, chunk=64, unroll=False):
     mix = xf[None] + sx[None] * (p["mu"].astype(jnp.float32)[:, None, None]
                                  + off)
     xr, xk, xv, xw, xg = mix
-    r = (xr @ p["wr"].astype(jnp.float32)).reshape(B, T, H, dk)
-    k = (xk @ p["wk"].astype(jnp.float32)).reshape(B, T, H, dk)
-    v = (xv @ p["wv"].astype(jnp.float32)).reshape(B, T, H, dk)
-    g = xg @ p["wg"].astype(jnp.float32)
+    r = dense(xr, p["wr"], approx).reshape(B, T, H, dk)
+    k = dense(xk, p["wk"], approx).reshape(B, T, H, dk)
+    v = dense(xv, p["wv"], approx).reshape(B, T, H, dk)
+    g = dense(xg, p["wg"], approx)
     dec_raw = p["w0"].astype(jnp.float32) + jnp.tanh(
         xw @ p["wd_a"].astype(jnp.float32)) @ p["wd_b"].astype(jnp.float32)
     w = jnp.exp(-jnp.exp(dec_raw)).reshape(B, T, H, dk)   # (0,1)
@@ -151,31 +160,32 @@ def rwkv6_time_mix(p, x, x_prev, state, n_heads, chunk=64, unroll=False):
     y = ys.transpose(1, 0, 2, 3, 4).reshape(B, Tp, D)[:, :T]
     y = rmsnorm(y, p["ln_x"]["w"])                       # per-channel norm
     y = y * jax.nn.silu(g)
-    out = y.astype(x.dtype) @ p["wo"].astype(x.dtype)
+    out = dense(y.astype(x.dtype), p["wo"], approx)
     return out, xf[:, -1].astype(x.dtype), state_f
 
 
-def rwkv6_channel_mix(p, x, x_prev):
+def rwkv6_channel_mix(p, x, x_prev, approx: ApproxConfig = EXACT):
     xf = x.astype(jnp.float32)
     xs = jnp.concatenate([x_prev[:, None].astype(jnp.float32), xf[:, :-1]], 1)
     sx = xs - xf
     mu = p["cm_mu"].astype(jnp.float32)
     xk = xf + sx * mu[0]
     xr = xf + sx * mu[1]
-    kk = jnp.square(jax.nn.relu(xk @ p["cm_wk"].astype(jnp.float32)))
-    rr = jax.nn.sigmoid(xr @ p["cm_wr"].astype(jnp.float32))
-    out = rr * (kk @ p["cm_wv"].astype(jnp.float32))
+    kk = jnp.square(jax.nn.relu(dense(xk, p["cm_wk"], approx)))
+    rr = jax.nn.sigmoid(dense(xr, p["cm_wr"], approx))
+    out = rr * dense(kk, p["cm_wv"], approx)
     return out.astype(x.dtype), xf[:, -1].astype(x.dtype)
 
 
-def rwkv6_block(p, x, carry, n_heads, chunk=64, unroll=False):
+def rwkv6_block(p, x, carry, n_heads, chunk=64, unroll=False,
+                approx: ApproxConfig = EXACT):
     """carry = dict(att_x, ffn_x, state). x: (B,T,D)."""
     h = rmsnorm(x, p["ln1"]["w"])
     att, ax, st = rwkv6_time_mix(p, h, carry["att_x"], carry["state"],
-                                 n_heads, chunk, unroll)
+                                 n_heads, chunk, unroll, approx)
     x = x + att
     h = rmsnorm(x, p["ln2"]["w"])
-    ffn, fx = rwkv6_channel_mix(p, h, carry["ffn_x"])
+    ffn, fx = rwkv6_channel_mix(p, h, carry["ffn_x"], approx)
     x = x + ffn
     return x, {"att_x": ax, "ffn_x": fx, "state": st}
 
@@ -253,20 +263,25 @@ def _causal_conv(seq, w, bias):
 
 
 def mamba2_mix(p, x, conv_state, ssm_state, d_state, head_dim, chunk=128,
-               unroll=False):
-    """x: (B,T,D). conv_state: (B,CONV_K-1,d_inner+2N). ssm_state: (B,H,N,P)."""
+               unroll=False, approx: ApproxConfig = EXACT):
+    """x: (B,T,D). conv_state: (B,CONV_K-1,d_inner+2N). ssm_state: (B,H,N,P).
+
+    In/out projections (z|x|B|C|dt, out_proj) dispatch through
+    :func:`dense`; the depthwise conv and the SSD recurrence itself stay
+    exact (state carries across the whole sequence — log-mul error there
+    compounds per chunk, not per matmul)."""
     B, T, D = x.shape
     d_inner = 2 * D
     H = d_inner // head_dim
     N = d_state
     xd = x.astype(x.dtype)
-    z = (xd @ p["wz"].astype(x.dtype)).astype(jnp.float32)
+    z = dense(xd, p["wz"], approx).astype(jnp.float32)
     xbc = jnp.concatenate([
-        (xd @ p["wx"].astype(x.dtype)).astype(jnp.float32),
-        (xd @ p["wb"].astype(x.dtype)).astype(jnp.float32),
-        (xd @ p["wc"].astype(x.dtype)).astype(jnp.float32),
+        dense(xd, p["wx"], approx).astype(jnp.float32),
+        dense(xd, p["wb"], approx).astype(jnp.float32),
+        dense(xd, p["wc"], approx).astype(jnp.float32),
     ], axis=-1)
-    dt_raw = (xd @ p["wdt"].astype(x.dtype)).astype(jnp.float32)
+    dt_raw = dense(xd, p["wdt"], approx).astype(jnp.float32)
     seq = jnp.concatenate([conv_state.astype(jnp.float32), xbc], axis=1)
     conv_w = jnp.concatenate([
         p["conv_x"], p["conv_b"], p["conv_c"]], axis=-1)
@@ -303,15 +318,16 @@ def mamba2_mix(p, x, conv_state, ssm_state, d_state, head_dim, chunk=128,
     y = y + xs[:, :T].reshape(B, T, d_inner) * jnp.repeat(
         p["D"].astype(jnp.float32), head_dim)[None, None]
     y = rmsnorm(y * jax.nn.silu(z), p["out_norm"]["w"])
-    out = y.astype(x.dtype) @ p["out_proj"].astype(x.dtype)
+    out = dense(y.astype(x.dtype), p["out_proj"], approx)
     new_conv = seq[:, -(CONV_K - 1):].astype(x.dtype)
     return out, new_conv, s_f
 
 
-def mamba2_block(p, x, carry, d_state, head_dim, chunk=128, unroll=False):
+def mamba2_block(p, x, carry, d_state, head_dim, chunk=128, unroll=False,
+                 approx: ApproxConfig = EXACT):
     h = rmsnorm(x, p["norm"]["w"])
     y, conv, ssm = mamba2_mix(p, h, carry["conv"], carry["ssm"], d_state,
-                              head_dim, chunk, unroll)
+                              head_dim, chunk, unroll, approx)
     return x + y, {"conv": conv, "ssm": ssm}
 
 

@@ -231,8 +231,13 @@ def _approx_segments(cfg: ModelConfig):
     ``cfg`` — the scan-over-layers is exactly the pre-policy trace.
     """
     segs = serving_segments(cfg.approx, cfg.n_layers)
-    if len(segs) == 1:
+    if len(segs) == 1 and segs[0][2] == cfg.approx:
+        # no policy (or disabled): the original unlabelled cfg, one scan
         return ((0, cfg.n_layers, cfg),)
+    # keep the layer-labelled config even for a single segment: a uniform
+    # layer-scoped policy (e.g. a ramp's final rung, or a policy_only
+    # assignment covering every layer) still needs cfg.approx.layer set
+    # for lookup to resolve its entries
     return tuple((lo, hi, replace(cfg, approx=acfg))
                  for lo, hi, acfg in segs)
 
@@ -318,10 +323,11 @@ def stack_train(params, x, cfg: ModelConfig, positions):
                                    cfg.d_model // cfg.d_head, x.dtype)
 
         def body(xc, pl):
-            y, _ = remat(rwkv6_block, static_argnums=(3, 4, 5),
+            y, _ = remat(rwkv6_block, static_argnums=(3, 4, 5, 6),
                          prevent_cse=False)(pl, xc, carry0,
                                             cfg.d_model // cfg.d_head,
-                                            cfg.ssm_chunk, unroll)
+                                            cfg.ssm_chunk, unroll,
+                                            cfg.approx)
             return y, None
 
         x, _ = jax.lax.scan(body, x, params["layers"], unroll=unroll)
@@ -335,10 +341,10 @@ def stack_train(params, x, cfg: ModelConfig, positions):
         aux = jnp.zeros((), jnp.float32)
 
         def body(xc, pl):
-            y, _ = remat(mamba2_block, static_argnums=(3, 4, 5, 6),
+            y, _ = remat(mamba2_block, static_argnums=(3, 4, 5, 6, 7),
                          prevent_cse=False)(pl, xc, carry0, cfg.ssm_state,
                                             cfg.ssm_head_dim, cfg.ssm_chunk,
-                                            unroll)
+                                            unroll, cfg.approx)
             return y, None
 
         for g in range(n_groups):
@@ -389,7 +395,7 @@ def stack_prefill(params, x, cfg: ModelConfig, positions):
 
         def body(xc, pl):
             y, c = rwkv6_block(pl, xc, carry0, cfg.d_model // cfg.d_head,
-                               cfg.ssm_chunk, unroll)
+                               cfg.ssm_chunk, unroll, cfg.approx)
             return y, c
 
         x, states = jax.lax.scan(body, x, params["layers"], unroll=unroll)
@@ -403,7 +409,8 @@ def stack_prefill(params, x, cfg: ModelConfig, positions):
 
         def body(xc, pl):
             y, c = mamba2_block(pl, xc, carry0, cfg.ssm_state,
-                                cfg.ssm_head_dim, cfg.ssm_chunk, unroll)
+                                cfg.ssm_head_dim, cfg.ssm_chunk, unroll,
+                                cfg.approx)
             return y, c
 
         ssm_parts, kparts, vparts = [], [], []
@@ -483,7 +490,8 @@ def stack_decode(params, x, cfg: ModelConfig, cache, pos, positions):
     if cfg.family == "ssm":
         def body(xc, pl_cache):
             pl, c = pl_cache
-            y, c2 = rwkv6_block(pl, xc, c, cfg.d_model // cfg.d_head, 1)
+            y, c2 = rwkv6_block(pl, xc, c, cfg.d_model // cfg.d_head, 1,
+                                approx=cfg.approx)
             return y, c2
 
         x, new_ssm = jax.lax.scan(body, x, (params["layers"], cache["ssm"]),
@@ -497,7 +505,8 @@ def stack_decode(params, x, cfg: ModelConfig, cache, pos, positions):
 
         def body(xc, pl_cache):
             pl, c = pl_cache
-            y, c2 = mamba2_block(pl, xc, c, cfg.ssm_state, cfg.ssm_head_dim, 1)
+            y, c2 = mamba2_block(pl, xc, c, cfg.ssm_state, cfg.ssm_head_dim,
+                                 1, approx=cfg.approx)
             return y, c2
 
         kc, vc = cache["k"], cache["v"]

@@ -1,5 +1,6 @@
 from .optimizers import adamw, lion, momentum, cosine_schedule, clip_by_global_norm
-from .grad_compress import compress_psum, zero_residual
+from .grad_compress import compress_local, compress_psum, zero_residual
 
 __all__ = ["adamw", "lion", "momentum", "cosine_schedule",
-           "clip_by_global_norm", "compress_psum", "zero_residual"]
+           "clip_by_global_norm", "compress_local", "compress_psum",
+           "zero_residual"]

@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["quantize_grad", "dequantize_grad", "compress_psum",
-           "zero_residual"]
+           "compress_local", "zero_residual"]
 
 
 def zero_residual(grads):
@@ -40,6 +40,14 @@ def dequantize_grad(q, scale):
     return q.astype(jnp.float32) * scale
 
 
+def _unzip2(pairs):
+    a = jax.tree.map(lambda t: t[0], pairs,
+                     is_leaf=lambda t: isinstance(t, tuple))
+    b = jax.tree.map(lambda t: t[1], pairs,
+                     is_leaf=lambda t: isinstance(t, tuple))
+    return a, b
+
+
 def compress_psum(grads, residuals, axis: str):
     """psum over ``axis`` with int8 payload + error feedback.
 
@@ -53,9 +61,21 @@ def compress_psum(grads, residuals, axis: str):
         scale_max = jax.lax.pmax(scale, axis)
         return summed.astype(jnp.float32) * scale_max, new_r
 
-    out = jax.tree.map(one, grads, residuals)
-    g2 = jax.tree.map(lambda t: t[0], out,
-                      is_leaf=lambda t: isinstance(t, tuple))
-    r2 = jax.tree.map(lambda t: t[1], out,
-                      is_leaf=lambda t: isinstance(t, tuple))
-    return g2, r2
+    return _unzip2(jax.tree.map(one, grads, residuals))
+
+
+def compress_local(grads, residuals):
+    """The single-host twin of :func:`compress_psum`: quantize ->
+    dequantize with error feedback, no named axis.
+
+    On one device the all-reduce is the identity, so this applies exactly
+    the wire quantization (and carries exactly the residual) the mesh
+    path would — the training loop (:mod:`repro.train`) uses it to
+    compose compressed collectives with approximate matmuls on hosts
+    without a pod axis; inside shard_map, substitute ``compress_psum``.
+    """
+    def one(g, r):
+        q, scale, new_r = quantize_grad(g, r)
+        return dequantize_grad(q, scale), new_r
+
+    return _unzip2(jax.tree.map(one, grads, residuals))

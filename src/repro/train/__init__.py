@@ -1,0 +1,37 @@
+"""repro.train — approximate-in-the-training-loop subsystem.
+
+Brings the SIMDive arithmetic into the optimizer loop, answering the
+paper's open question — does tunable-accuracy multiply/divide hold up
+when the *gradients* flow through it too?
+
+  schedule   PrecisionSchedule / ScheduleRung: JSON-serializable step ->
+             policy rungs (exact warmup -> approximate steady-state,
+             per-layer ramps from a sensitivity assignment)
+  loop       train_twin: exact-vs-approx twins on a bitwise-identical
+             batch sequence, recording a metrics.DivergenceTrace
+             (loss delta, grad cosine, parameter drift) per step
+
+The single-run production path (checkpoints, preemption, resume under a
+schedule) stays in :mod:`repro.launch.train`; this package owns the
+schedule abstraction and the measurement loop. BENCH `train` rows
+(benchmarks/run.py) and the tier-1 divergence smoke are built on
+:func:`train_twin`.
+"""
+from .schedule import (
+    SCHEDULE_SCHEMA,
+    PrecisionSchedule,
+    ScheduleRung,
+    ramp_schedule,
+    warmup_schedule,
+)
+from .loop import make_twin_step, train_twin
+
+__all__ = [
+    "SCHEDULE_SCHEMA",
+    "PrecisionSchedule",
+    "ScheduleRung",
+    "warmup_schedule",
+    "ramp_schedule",
+    "make_twin_step",
+    "train_twin",
+]

@@ -1,0 +1,143 @@
+"""The exact-vs-approximate twin training loop.
+
+:func:`train_twin` trains two copies of one model on a bitwise-identical
+batch sequence — the exact twin (plain float arithmetic) and the
+approximate twin (SIMDive dispatch under an :class:`ApproxConfig`,
+optionally rung-switched by a :class:`PrecisionSchedule`) — from the
+same initialization, under the same optimizer and lr schedule, and
+records a :class:`repro.metrics.DivergenceTrace` per step: loss delta,
+gradient cosine similarity, parameter drift.
+
+Both forward/backward passes and the divergence statistics run inside
+one jitted twin step (one compile per schedule rung — ``ApproxConfig``
+is a static argument, exactly like the serving scheduler's per-rung
+executables). Gradient compression (``optim/grad_compress.py``) is
+applied to the *approximate* twin's gradients with error-feedback
+residuals carried in the loop state, so compressed collectives and
+approximate matmuls compose in the same run; on a host without a pod
+axis the wire quantization runs through
+:func:`repro.optim.grad_compress.compress_local` (the identity
+all-reduce), inside shard_map substitute ``compress_psum``.
+
+The single-run (non-twin) schedule-aware path lives in
+:func:`repro.launch.train.train` — this module is the measurement side.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ShapeConfig
+from repro.core.approx import ApproxConfig, EXACT
+from repro.data import make_source
+from repro.metrics import DivergenceTrace, grad_cosine, param_drift
+from repro.models import build
+from repro.optim import adamw, cosine_schedule
+from repro.optim.grad_compress import compress_local, zero_residual
+
+__all__ = ["make_twin_step", "train_twin"]
+
+
+def make_twin_step(lm_exact, lm_approx, opt, *, grad_compress: bool = False):
+    """One step of both twins + on-device divergence statistics.
+
+    ``step(params_e, opt_e, params_a, opt_a, res, batch)`` returns the
+    advanced states plus a metrics dict. The gradient cosine is measured
+    *before* compression (it isolates the arithmetic's effect on the
+    training signal); parameter drift is measured after both updates.
+    ``res`` is the error-feedback residual tree (``None`` when
+    compression is off — an empty pytree, so the signature is stable).
+    """
+    def step(params_e, opt_e, params_a, opt_a, res, batch):
+        loss_e, grads_e = jax.value_and_grad(lm_exact.train_loss)(
+            params_e, batch)
+        loss_a, grads_a = jax.value_and_grad(lm_approx.train_loss)(
+            params_a, batch)
+        gcos = grad_cosine(grads_a, grads_e)
+        if grad_compress:
+            grads_a, res = compress_local(grads_a, res)
+        params_e, opt_e, m_e = opt.update(grads_e, opt_e, params_e)
+        params_a, opt_a, _ = opt.update(grads_a, opt_a, params_a)
+        metrics = {
+            "loss_exact": loss_e, "loss_approx": loss_a,
+            "grad_cosine": gcos,
+            "param_drift": param_drift(params_a, params_e),
+            "lr": m_e["lr"],
+        }
+        return params_e, opt_e, params_a, opt_a, res, metrics
+    return step
+
+
+def train_twin(cfg, shape: ShapeConfig, *, steps: int,
+               approx: ApproxConfig | None = None, schedule=None,
+               seed: int = 0, lr: float = 1e-3,
+               grad_compress: bool = False, log_every: int = 0,
+               meta: dict | None = None):
+    """Train exact and approximate twins in lockstep; returns
+    ``(params_approx, DivergenceTrace)``.
+
+    ``approx`` is the approximate twin's base config (default: the
+    paper's default policy, ``ApproxConfig(mode='simdive')`` — 8-bit
+    lanes, 6 coefficient bits). ``schedule`` (a
+    :class:`~repro.train.schedule.PrecisionSchedule`) overrides it per
+    step via ``config_at(step, approx)`` — rung boundaries recompile the
+    twin step, nothing else changes. Data order is a pure function of
+    ``(seed, step)`` (:mod:`repro.data`), so both twins consume
+    bitwise-identical batches and the trace measures arithmetic, not
+    data noise.
+    """
+    base = approx if approx is not None else \
+        (cfg.approx if cfg.approx.enabled else ApproxConfig(mode="simdive"))
+    lm_e = build(cfg.with_approx(EXACT))
+    opt = adamw(cosine_schedule(lr, warmup=min(100, steps // 10 + 1),
+                                total=steps))
+    source = make_source(cfg, shape, seed=seed)
+
+    params0 = jax.jit(lm_e.init)(jax.random.PRNGKey(seed))
+    opt0 = jax.jit(opt.init)(params0)
+    params_e = params_a = params0
+    opt_e = opt_a = opt0
+    res = zero_residual(params0) if grad_compress else None
+
+    trace = DivergenceTrace(meta={
+        "arch": cfg.name, "steps": steps, "seed": seed, "lr": lr,
+        "batch": shape.global_batch, "seq": shape.seq_len,
+        "backward": base.backward, "grad_compress": bool(grad_compress),
+        "approx": f"{base.mode}/w{base.width}/cb{base.coeff_bits}",
+        **({"schedule_boundaries": list(schedule.boundaries())}
+           if schedule is not None else {}),
+        **(meta or {}),
+    })
+
+    jitted: dict = {}
+
+    def step_for(acfg: ApproxConfig):
+        fn = jitted.get(acfg)
+        if fn is None:
+            lm_a = build(cfg.with_approx(acfg))
+            fn = jax.jit(make_twin_step(lm_e, lm_a, opt,
+                                        grad_compress=grad_compress))
+            jitted[acfg] = fn
+        return fn
+
+    for step in range(steps):
+        if schedule is not None:
+            rung = schedule.rung_at(step)
+            acfg = schedule.config_at(step, base)
+            label = rung.label or f"rung@{rung.start_step}"
+        else:
+            acfg, label = base, None
+        batch = {k: jnp.asarray(v) for k, v in source.batch(step).items()}
+        params_e, opt_e, params_a, opt_a, res, m = step_for(acfg)(
+            params_e, opt_e, params_a, opt_a, res, batch)
+        rec = trace.record(step, loss_exact=float(m["loss_exact"]),
+                           loss_approx=float(m["loss_approx"]),
+                           grad_cosine=float(m["grad_cosine"]),
+                           param_drift=float(m["param_drift"]),
+                           rung=label)
+        if log_every and (step % log_every == 0 or step == steps - 1):
+            print(f"[twin {step:5d}] exact={rec['loss_exact']:.4f} "
+                  f"approx={rec['loss_approx']:.4f} "
+                  f"gcos={rec['grad_cosine']:.4f}"
+                  + (f" ({label})" if label else ""), flush=True)
+    return params_a, trace

@@ -46,6 +46,8 @@ from .sensitivity import (
     profile_ann,
     profile_imaging,
     profile_layers,
+    profile_train,
+    train_run_metric,
 )
 
 __all__ = [
@@ -73,4 +75,6 @@ __all__ = [
     "profile_ann",
     "profile_imaging",
     "profile_layers",
+    "profile_train",
+    "train_run_metric",
 ]

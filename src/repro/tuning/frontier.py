@@ -117,9 +117,13 @@ def default_bench_path() -> str | None:
 
 
 # ------------------------------------------------------------- errors ----
-# (op, width, coeff_bits, index_bits) -> error tuple; exhaustive/stratified
-# sweeps are deterministic, so per-process memoization is free accuracy
+# (kernel, op, width, coeff_bits, index_bits, shape) -> error tuple;
+# every sweep is deterministic, so per-process memoization is free accuracy
 _ERROR_CACHE: dict[tuple, tuple[tuple, str]] = {}
+
+#: default (M, K, N) problem for the matmul frontier kernels — K sits in
+#: the BENCH grid's sweep so accumulate-length effects are represented
+DEFAULT_MATMUL_SHAPE = (64, 128, 64)
 
 #: seed shared with benchmarks/run.py's grid — same convention, same
 #: reproducibility contract
@@ -142,16 +146,30 @@ def _error_operands(op: str, width: int):
 
 
 def measure_error(op: str, width: int, coeff_bits: int,
-                  index_bits: int = 3) -> tuple[tuple, str]:
-    """Analytic error stats of one elemwise config, via the registry.
+                  index_bits: int = 3, *, kernel: str = "elemwise",
+                  shape: tuple | None = None) -> tuple[tuple, str]:
+    """Analytic error stats of one registry config.
 
-    Returns ``(sorted (stat, value) pairs, source)`` where source is
-    'exhaustive' (width 8: the full operand square) or 'stratified'
-    (16/32: every exponent-pair stratum sampled). Memoized per process.
-    Divider quotients are quantized at the evaluation-wide
-    ``DIV_FRAC_OUT`` fixed-point format, exactly like the BENCH grid.
+    Returns ``(sorted (stat, value) pairs, source)``. ``kernel`` selects
+    the datapath level:
+
+    * ``'elemwise'`` — per-lane stats; source is 'exhaustive' (width 8:
+      the full operand square) or 'stratified' (16/32: every
+      exponent-pair stratum sampled). Divider quotients are quantized at
+      the evaluation-wide ``DIV_FRAC_OUT`` format, like the BENCH grid.
+    * ``'packed'`` — the same per-lane stats but *through* the SIMD
+      pack/unpack word path (all ``32/width`` lanes of every word at
+      once; div quotients at ``PACKED_DIV_FRAC_OUT``): any cross-lane
+      leakage or packing clip shows up against the elemwise twin.
+    * ``'matmul_int'`` / ``'matmul_emul'`` — accumulate-level stats vs
+      the exact int64 matmul (op must be ``'matmul'``; ``shape`` is the
+      ``(M, K, N)`` problem, default :data:`DEFAULT_MATMUL_SHAPE`). NMED
+      is the headline here — cancellation makes per-output relative
+      error meaningless near zero sums. Source is 'sampled'.
+
+    Memoized per process; everything is fixed-seed deterministic.
     """
-    key = (op, width, coeff_bits, index_bits)
+    key = (kernel, op, width, coeff_bits, index_bits, shape)
     hit = _ERROR_CACHE.get(key)
     if hit is not None:
         return hit
@@ -164,26 +182,102 @@ def measure_error(op: str, width: int, coeff_bits: int,
     if width not in SUPPORTED_WIDTHS:
         raise ValueError(f"width must be one of {SUPPORTED_WIDTHS}, "
                          f"got {width}")
-    a_np, b_np, source = _error_operands(op, width)
-    a, b = jnp.asarray(a_np), jnp.asarray(b_np)
-    # same spec construction as benchmarks/run.py's grid: round_output
-    # stays at its default so these stats describe the same configs the
-    # trajectory timed
     spec = SimdiveSpec(width=width, coeff_bits=coeff_bits,
                        index_bits=index_bits)
-    bound = get_op("elemwise", spec, "ref")
-    if op == "mul":
-        out = np.asarray(bound(a, b, op="mul")).astype(np.float64)
-        true = a_np.astype(np.float64) * b_np.astype(np.float64)
-    elif op == "div":
-        out = np.asarray(bound(a, b, op="div", frac_out=DIV_FRAC_OUT)
-                         ).astype(np.float64) / 2.0 ** DIV_FRAC_OUT
-        true = a_np.astype(np.float64) / b_np.astype(np.float64)
+    if kernel == "elemwise":
+        if shape is not None:
+            raise ValueError("shape only applies to the matmul kernels")
+        a_np, b_np, source = _error_operands(op, width)
+        a, b = jnp.asarray(a_np), jnp.asarray(b_np)
+        # same spec construction as benchmarks/run.py's grid:
+        # round_output stays at its default so these stats describe the
+        # same configs the trajectory timed
+        bound = get_op("elemwise", spec, "ref")
+        if op == "mul":
+            out = np.asarray(bound(a, b, op="mul")).astype(np.float64)
+            true = a_np.astype(np.float64) * b_np.astype(np.float64)
+        elif op == "div":
+            out = np.asarray(bound(a, b, op="div", frac_out=DIV_FRAC_OUT)
+                             ).astype(np.float64) / 2.0 ** DIV_FRAC_OUT
+            true = a_np.astype(np.float64) / b_np.astype(np.float64)
+        else:
+            raise ValueError(
+                f"elemwise measure_error handles 'mul'/'div', got {op!r}")
+    elif kernel == "packed":
+        out, true, source = _measure_packed_error(op, width, spec)
+    elif kernel in ("matmul_int", "matmul_emul"):
+        if op != "matmul":
+            raise ValueError(
+                f"kernel {kernel!r} measures op 'matmul', got {op!r}")
+        out, true, source = _measure_matmul_error(
+            kernel, width, spec, shape or DEFAULT_MATMUL_SHAPE)
     else:
-        raise ValueError(f"measure_error handles 'mul'/'div', got {op!r}")
+        raise ValueError(
+            f"measure_error handles kernels 'elemwise'/'packed'/"
+            f"'matmul_int'/'matmul_emul', got {kernel!r}")
     stats = tuple(sorted(error_stats(out, true).as_dict().items()))
     _ERROR_CACHE[key] = (stats, source)
     return stats, source
+
+
+def _measure_packed_error(op: str, width: int, spec):
+    """Per-lane error through the pack -> packed kernel -> unpack path."""
+    import jax.numpy as jnp
+
+    from repro.core.simd_pack import pack, unpack
+    from repro.kernels import get_op
+    from repro.metrics import PACKED_DIV_FRAC_OUT, sample_uints
+
+    if op not in ("mul", "div"):
+        raise ValueError(
+            f"packed measure_error handles 'mul'/'div', got {op!r}")
+    if 32 % width or width > 16:
+        raise ValueError(
+            f"packed lanes must divide the 32-bit word (width 8 or 16), "
+            f"got {width}")
+    n, rows = 16_384, 64           # the BENCH grid's packed sweep size
+    a_np, b_np = sample_uints(width, n, FRONTIER_SEED, b_lo=1)
+    a_l = jnp.asarray(a_np.reshape(rows, -1))
+    b_l = jnp.asarray(b_np.reshape(rows, -1))
+    aw, bw = pack(a_l, width), pack(b_l, width)
+    bound = get_op("packed", spec, "ref")
+    kw = {"op": op} if op == "mul" else \
+        {"op": op, "frac_out": PACKED_DIV_FRAC_OUT}
+    lanes = np.asarray(unpack(jnp.asarray(bound(aw, bw, **kw)), 2 * width)
+                       ).astype(np.float64)
+    af = a_np.reshape(rows, -1).astype(np.float64)
+    bf = b_np.reshape(rows, -1).astype(np.float64)
+    if op == "mul":
+        return lanes, af * bf, "sampled"
+    return lanes / 2.0 ** PACKED_DIV_FRAC_OUT, af / bf, "sampled"
+
+
+def _measure_matmul_error(kernel: str, width: int, spec, shape):
+    """Accumulate-level error of one matmul kernel vs exact int64."""
+    import jax.numpy as jnp
+
+    from repro.core.approx import quantize_sign_magnitude
+    from repro.kernels import get_op
+
+    m, k, n_out = shape
+    rng = np.random.default_rng(FRONTIER_SEED + 2)   # BENCH grid convention
+    bound = get_op(kernel, spec, "ref")
+    if kernel == "matmul_int":
+        hi = (1 << width) - 1
+        x = jnp.asarray(rng.integers(-hi, hi + 1, (m, k), dtype=np.int32))
+        w = jnp.asarray(rng.integers(-hi, hi + 1, (k, n_out),
+                                     dtype=np.int32))
+        appr = np.asarray(bound(x, w)).astype(np.float64)
+        exact = (np.asarray(x, np.int64) @ np.asarray(w, np.int64))
+    else:   # matmul_emul: the model-facing quantized emulation
+        xf = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+        wf = jnp.asarray(rng.normal(size=(k, n_out)).astype(np.float32))
+        qx, sx, _ = quantize_sign_magnitude(xf, width)
+        qw, sw, _ = quantize_sign_magnitude(wf, width, axis=0)
+        appr = np.asarray(bound(qx, sx, qw, sw)).astype(np.float64)
+        exact = (np.asarray(qx, np.int64) * np.asarray(sx, np.int64)) @ \
+                (np.asarray(qw, np.int64) * np.asarray(sw, np.int64))
+    return appr, exact, "sampled"
 
 
 # ------------------------------------------------------------- timings ---
@@ -249,28 +343,38 @@ def bench_timings(bench) -> dict:
 # ------------------------------------------------------------ frontier ---
 def build_frontier(op: str, *, width: int, coeff_sweep=DEFAULT_COEFF_SWEEP,
                    index_bits: int = 3, backend: str = "ref",
-                   bench="auto", error_fn=None) -> tuple:
-    """All frontier points of one ``(op, width)`` accuracy/cost sweep.
+                   bench="auto", error_fn=None,
+                   kernel: str = "elemwise",
+                   shape: tuple | None = None) -> tuple:
+    """All frontier points of one ``(kernel, op, width)`` sweep.
 
     ``bench`` joins measured ``best_us``: 'auto' resolves via
     :func:`default_bench_path`, ``None`` skips the join, anything else is
-    passed to :func:`bench_timings`. ``error_fn(op, width, coeff_bits,
-    index_bits) -> (stats_pairs, source)`` overrides the analytic
-    measurement (fixture injection for the CLI self-test and unit tests —
-    production callers never pass it).
+    passed to :func:`bench_timings`. ``kernel`` picks the measurement
+    level (``'elemwise'``/``'packed'``/``'matmul_int'``/
+    ``'matmul_emul'`` — see :func:`measure_error`; ``shape`` is the
+    matmul ``(M, K, N)``) and is part of the timing-join identity, so a
+    packed frontier joins the packed rows' timings, not the elemwise
+    ones. ``error_fn(op, width, coeff_bits, index_bits) ->
+    (stats_pairs, source)`` overrides the analytic measurement (fixture
+    injection for the CLI self-test and unit tests — production callers
+    never pass it; it bypasses the kernel/shape dimensions).
     """
     if bench == "auto":
         bench = default_bench_path()
     timings = bench_timings(bench)
-    err = error_fn or measure_error
     points = []
     for cb in coeff_sweep:
-        stats, source = err(op, width, cb, index_bits)
-        point = FrontierPoint(kernel="elemwise", op=op, width=width,
+        if error_fn is not None:
+            stats, source = error_fn(op, width, cb, index_bits)
+        else:
+            stats, source = measure_error(op, width, cb, index_bits,
+                                          kernel=kernel, shape=shape)
+        point = FrontierPoint(kernel=kernel, op=op, width=width,
                               coeff_bits=cb, index_bits=index_bits,
                               backend=backend, error=tuple(stats),
                               error_source=source)
-        timed = timings.get(("elemwise", op, width, cb, index_bits, backend))
+        timed = timings.get((kernel, op, width, cb, index_bits, backend))
         if timed is not None:
             point = replace(point, best_us=timed[0], items=timed[1])
         points.append(point)

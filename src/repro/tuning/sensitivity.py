@@ -41,6 +41,8 @@ __all__ = [
     "ann_policy_metric",
     "imaging_run_metric",
     "profile_imaging",
+    "train_run_metric",
+    "profile_train",
 ]
 
 
@@ -395,3 +397,61 @@ def profile_imaging(*, candidates=None, metric: str = "psnr",
         else tuple(replace(c, op="mul") for c in default_candidates("mul"))
     return profile_layers(imaging_run_metric(metric=metric, seed=seed),
                           [s for s, _ in IMAGING_STAGES], candidates)
+
+
+# ----------------------------------------------------------- training ----
+def train_run_metric(cfg, shape, *, steps: int = 6, seed: int = 0,
+                     lr: float = 1e-3, op: str = "matmul",
+                     backward: str = "exact"):
+    """``run_metric(assignment) -> -final_loss_delta_pct`` closure over a
+    short exact-vs-approx twin run (:func:`repro.train.train_twin`).
+
+    Layers named in the assignment train with SIMDive matmuls under the
+    assignment's per-layer entries (``policy_only`` dispatch — unnamed
+    layers stay exact); the metric is the negated final-loss divergence
+    percentage, so "higher is better" like every other glue and the
+    empty assignment's baseline is exactly ``0.0`` (the twins are the
+    same program). ``backward='approx'`` profiles sensitivity of the
+    backward matmuls too. Lazily imports :mod:`repro.train` — keeps
+    tuning import-light and avoids a tuning <-> train import cycle.
+    """
+    from repro.core.approx import ApproxConfig
+
+    def run_metric(assignment):
+        if not assignment:
+            return 0.0    # identical twins by construction
+        from repro.train import train_twin
+        policy = assignment_policy(assignment, op=op)
+        acfg = ApproxConfig(mode="simdive", policy=policy,
+                            policy_only=True, backward=backward)
+        _, trace = train_twin(cfg, shape, steps=steps, approx=acfg,
+                              seed=seed, lr=lr)
+        return -trace.final_loss_delta_pct()
+
+    return run_metric
+
+
+def profile_train(cfg, shape, *, candidates=None, steps: int = 6,
+                  seed: int = 0, lr: float = 1e-3, op: str = "matmul",
+                  backward: str = "exact") -> SensitivityProfile:
+    """Per-layer training-loss sensitivity of a model config: each layer
+    is perturbed alone (``policy_only``) for a ``steps``-step twin run,
+    end metric = -final loss divergence %% (0 = no divergence).
+
+    The result feeds :func:`greedy_assign` /
+    :func:`greedy_assign_verified` exactly like the ANN and imaging
+    profiles — pass ``train_run_metric(...)`` (same kwargs) as the
+    verified loop's measured metric, and a degradation budget in loss-%%
+    points. Layer names are :func:`repro.core.approx.layer_label`
+    (``L0..L{n-1}``), matching the serving policies' convention, so one
+    assignment can drive both training and serving dispatch.
+    """
+    from repro.core.approx import layer_label
+
+    candidates = tuple(candidates) if candidates is not None \
+        else default_candidates(op)
+    layers = tuple(layer_label(i) for i in range(cfg.n_layers))
+    return profile_layers(
+        train_run_metric(cfg, shape, steps=steps, seed=seed, lr=lr, op=op,
+                         backward=backward),
+        layers, candidates, baseline=0.0)

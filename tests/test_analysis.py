@@ -279,3 +279,38 @@ def test_lint_flags_swallowed_exceptions_in_resilient_layers(tmp_path):
     (core / "mod.py").write_text("try:\n    x = 1\nexcept Exception:\n    pass\n")
     assert [f for f in lint_file(core / "mod.py", tmp_path)
             if f.rule == "swallowed-exception"] == []
+
+
+# --------------------------------------------------- change-scoped diff --
+def test_ops_for_paths_tri_state():
+    from repro.analysis.diff import OP_SOURCES, ops_for_paths
+    known = [impl.name for impl in registry.all_ops()]
+    # exclusive sources -> exactly the owning ops
+    assert ops_for_paths(["src/repro/kernels/elemwise.py"], known) == \
+        ("elemwise",)
+    assert ops_for_paths(["src/repro/kernels/logmatmul.py"], known) == \
+        ("matmul_emul", "matmul_int")
+    # unrelated paths -> nothing to re-verify
+    assert ops_for_paths(["docs/x.md", "tests/test_y.py"], known) == ()
+    # shared sources (incl. anything under core/) widen to the full matrix
+    assert ops_for_paths(["src/repro/kernels/datapath.py"], known) is None
+    assert ops_for_paths(["src/repro/core/approx.py"], known) is None
+    # a stale op map must widen, never narrow
+    assert ops_for_paths(["docs/x.md"], ["attention"]) is None
+    # every mapped op is actually registered (keeps the map honest)
+    assert set(OP_SOURCES) <= set(known)
+
+
+def test_ops_for_paths_sources_exist():
+    import os
+    from repro.analysis.diff import OP_SOURCES, SHARED_SOURCES
+    root = os.path.join(os.path.dirname(__file__), "..")
+    for path in [p for ps in OP_SOURCES.values() for p in ps] + \
+            [s for s in SHARED_SOURCES if not s.endswith("/")]:
+        assert os.path.exists(os.path.join(root, path)), path
+
+
+def test_changed_paths_rejects_bad_ref():
+    from repro.analysis.diff import changed_paths
+    with pytest.raises(RuntimeError, match="git diff"):
+        changed_paths("no-such-ref-xyzzy")

@@ -1,0 +1,259 @@
+"""Approximate-training subsystem tests: precision schedules (round-trip,
+rung resolution, builders), exact-vs-approx twin divergence traces,
+opt-in approximate backward, grad compression inside the twin loop, and
+bitwise checkpoint/resume under a schedule whose rung boundary the
+restart straddles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import ShapeConfig
+from repro.core.approx import EXACT, ApproxConfig, layer_label
+from repro.launch.train import train
+from repro.models import build
+from repro.train import (
+    PrecisionSchedule,
+    ScheduleRung,
+    ramp_schedule,
+    train_twin,
+    warmup_schedule,
+)
+from repro.tuning import PolicyEntry, TuningPolicy
+from repro.tuning.sensitivity import train_run_metric
+
+
+def _policy(**kw):
+    return TuningPolicy(entries=(PolicyEntry(op="matmul", width=8,
+                                             coeff_bits=6, **kw),))
+
+
+def _tiny():
+    return get_config("smollm-360m", smoke=True), \
+        ShapeConfig("t", 32, 2, "train")
+
+
+# ------------------------------------------------------------- schedule --
+def test_schedule_roundtrip():
+    sched = warmup_schedule(_policy(), warmup_steps=5, meta={"budget": 1.0})
+    rt = PrecisionSchedule.from_json(sched.to_json())
+    assert rt == sched
+    assert rt.to_json() == sched.to_json()
+    assert rt.boundaries() == (0, 5)
+    assert "warmup" in rt.render()
+
+
+def test_schedule_rung_resolution():
+    sched = warmup_schedule(_policy(), warmup_steps=5)
+    assert sched.rung_at(0).policy is None
+    assert sched.rung_at(4).policy is None
+    assert sched.rung_at(5).policy is not None
+    assert sched.rung_at(10 ** 9).label == "steady"
+    # exact rung forces mode exact; policy rung promotes a disabled base
+    base = EXACT
+    assert not sched.config_at(2, base).enabled
+    c5 = sched.config_at(5, base)
+    assert c5.enabled and c5.mode == "simdive"
+    assert c5.policy == sched.rungs[1].policy
+    # an enabled base keeps its mode and backward through the rungs
+    base = ApproxConfig(mode="mitchell", backward="approx")
+    c = sched.config_at(7, base)
+    assert c.mode == "mitchell" and c.backward == "approx"
+
+
+def test_schedule_validation():
+    with pytest.raises(ValueError, match="at least one rung"):
+        PrecisionSchedule(rungs=())
+    with pytest.raises(ValueError, match="start at step 0"):
+        PrecisionSchedule(rungs=(ScheduleRung(3, None),))
+    with pytest.raises(ValueError, match="strictly increasing"):
+        PrecisionSchedule(rungs=(ScheduleRung(0, None),
+                                 ScheduleRung(5, None),
+                                 ScheduleRung(5, _policy())))
+    with pytest.raises(ValueError, match="schema"):
+        PrecisionSchedule.from_dict({"schema": "nope", "rungs": []})
+    with pytest.raises(ValueError, match=">= 0"):
+        warmup_schedule(_policy(), warmup_steps=-1)
+
+
+def test_warmup_zero_collapses():
+    sched = warmup_schedule(_policy(), warmup_steps=0)
+    assert len(sched.rungs) == 1
+    assert sched.rung_at(0).policy is not None
+
+
+def test_ramp_schedule():
+    cand = PolicyEntry(op="matmul", width=8, coeff_bits=6)
+    assignment = {layer_label(0): cand, layer_label(1): cand}
+    sched = ramp_schedule(assignment, start_step=2, every=3)
+    assert sched.boundaries() == (0, 2, 5)
+    assert sched.rung_at(1).policy is None             # warmup
+    assert len(sched.rung_at(2).policy.entries) == 1   # first layer in
+    assert len(sched.rung_at(5).policy.entries) == 2   # all layers in
+    # entered layers are layer-scoped, so policy_only runs the rest exact
+    labels = {e.layer for e in sched.rung_at(5).policy.entries}
+    assert labels == {layer_label(0), layer_label(1)}
+    with pytest.raises(ValueError, match="permutation"):
+        ramp_schedule(assignment, order=[layer_label(0)])
+    with pytest.raises(ValueError, match="non-empty"):
+        ramp_schedule({})
+
+
+def test_schedule_file_roundtrip(tmp_path):
+    sched = warmup_schedule(_policy(), warmup_steps=3)
+    p = tmp_path / "sched.json"
+    sched.save(str(p))
+    assert PrecisionSchedule.load(str(p)) == sched
+
+
+# ----------------------------------------------------- forward/backward --
+def test_policy_only_empty_policy_is_exact():
+    """policy_only with no matching entries must be bitwise-exact."""
+    cfg, shape = _tiny()
+    batch = _batch(cfg, shape, 0)
+    params = jax.jit(build(cfg.with_approx(EXACT)).init)(
+        jax.random.PRNGKey(0))
+    loss_e = build(cfg.with_approx(EXACT)).train_loss(params, batch)
+    acfg = ApproxConfig(mode="simdive", policy=TuningPolicy(),
+                        policy_only=True)
+    loss_p = build(cfg.with_approx(acfg)).train_loss(params, batch)
+    assert float(loss_e) == float(loss_p)
+    # ...and a default matmul entry re-enables the approximation
+    acfg = ApproxConfig(mode="simdive", policy=_policy(), policy_only=True)
+    loss_a = build(cfg.with_approx(acfg)).train_loss(params, batch)
+    assert float(loss_a) != float(loss_e)
+
+
+def test_backward_approx_changes_grads_not_forward():
+    cfg, shape = _tiny()
+    batch = _batch(cfg, shape, 0)
+    params = jax.jit(build(cfg.with_approx(EXACT)).init)(
+        jax.random.PRNGKey(0))
+    out = {}
+    for bwd in ("exact", "approx"):
+        lm = build(cfg.with_approx(ApproxConfig(mode="simdive",
+                                                backward=bwd)))
+        out[bwd] = jax.value_and_grad(lm.train_loss)(params, batch)
+    (le, ge), (la, ga) = out["exact"], out["approx"]
+    assert float(le) == float(la), "backward mode must not touch forward"
+    diffs = jax.tree.leaves(jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a - b))), ge, ga))
+    assert max(diffs) > 0, "approx backward must change some gradient"
+
+
+def _batch(cfg, shape, step):
+    from repro.data import make_source
+    return {k: jnp.asarray(v)
+            for k, v in make_source(cfg, shape, seed=0).batch(step).items()}
+
+
+# ----------------------------------------------------------- twin loop --
+def test_train_twin_divergence_trace():
+    cfg, shape = _tiny()
+    _, trace = train_twin(cfg, shape, steps=3, seed=0, lr=1e-3)
+    assert len(trace.records) == 3
+    s = trace.summary()
+    assert np.isfinite(s["final_loss_delta_pct"])
+    assert s["min_grad_cosine"] > 0.5
+    assert s["max_param_drift"] > 0            # trajectories do separate
+    assert trace.meta["arch"] == cfg.name
+    assert trace.meta["backward"] == "exact"
+
+
+def test_train_twin_exact_base_is_zero_divergence():
+    """An 'approx' twin handed exact arithmetic tracks bitwise."""
+    cfg, shape = _tiny()
+    acfg = ApproxConfig(mode="simdive", policy=TuningPolicy(),
+                        policy_only=True)   # dispatches, but all-exact
+    _, trace = train_twin(cfg, shape, steps=2, approx=acfg, seed=0)
+    assert trace.max_abs_loss_delta() == 0.0
+    assert trace.max_param_drift() == 0.0
+
+
+def test_train_twin_under_schedule_records_rungs():
+    cfg, shape = _tiny()
+    sched = warmup_schedule(_policy(), warmup_steps=2)
+    _, trace = train_twin(cfg, shape, steps=4, schedule=sched, seed=0)
+    rungs = [r["rung"] for r in trace.records]
+    assert rungs == ["warmup", "warmup", "steady", "steady"]
+    # warmup rungs are exact-vs-exact: zero divergence until the switch
+    assert trace.records[0]["loss_delta"] == 0.0
+    assert trace.records[1]["loss_delta"] == 0.0
+    assert trace.records[3]["loss_delta"] != 0.0
+    assert trace.meta["schedule_boundaries"] == [0, 2]
+
+
+def test_train_twin_grad_compress_carries_residual():
+    cfg, shape = _tiny()
+    _, plain = train_twin(cfg, shape, steps=3, seed=0)
+    _, comp = train_twin(cfg, shape, steps=3, seed=0, grad_compress=True)
+    assert comp.meta["grad_compress"] is True
+    # compression quantizes only the approx twin's update, so the twin
+    # trajectories separate differently than the uncompressed run
+    assert comp.records[-1]["param_drift"] != \
+        plain.records[-1]["param_drift"]
+    # grad cosine is measured pre-compression: identical both ways
+    assert comp.records[0]["grad_cosine"] == \
+        pytest.approx(plain.records[0]["grad_cosine"], abs=1e-6)
+
+
+def test_compress_psum_matches_local_on_one_device():
+    from repro.optim.grad_compress import (
+        compress_local,
+        compress_psum,
+        zero_residual,
+    )
+    rng = np.random.default_rng(0)
+    grads = {"w": jnp.asarray(rng.normal(size=(8, 4)), jnp.float32),
+             "b": jnp.asarray(rng.normal(size=(4,)), jnp.float32)}
+    res = zero_residual(grads)
+    g_l, r_l = compress_local(grads, res)
+
+    from jax.sharding import Mesh, PartitionSpec as P
+    from jax.experimental.shard_map import shard_map
+    mesh = Mesh(np.asarray(jax.devices()[:1]), ("dp",))
+    fn = shard_map(lambda g, r: compress_psum(g, r, "dp"), mesh=mesh,
+                   in_specs=(P(), P()), out_specs=(P(), P()))
+    g_p, r_p = fn(grads, res)
+    for k in grads:
+        assert np.allclose(g_l[k], g_p[k], rtol=0, atol=0), k
+        assert np.allclose(r_l[k], r_p[k], rtol=0, atol=0), k
+
+
+# ------------------------------------------------- resume under schedule --
+def test_train_resume_bitwise_across_rung_boundary(tmp_path):
+    """Kill at step 3, resume, cross the rung boundary at step 4: the
+    resumed curve must be bitwise-identical to the straight run — the
+    rung, like the batch, is a pure function of the step."""
+    cfg, shape = _tiny()
+    sched = warmup_schedule(_policy(), warmup_steps=4)
+    kw = dict(steps=6, save_every=0, seed=11, log_every=100,
+              schedule=sched)
+    _, full = train(cfg, shape, ckpt_dir=None, **kw)
+    d = str(tmp_path / "ck")
+    train(cfg, shape, ckpt_dir=d, **{**kw, "save_every": 3},
+          stop_after=3)
+    _, tail = train(cfg, shape, ckpt_dir=d, **{**kw, "save_every": 100},
+                    resume="auto")
+    assert np.allclose(full[3:], tail, rtol=0, atol=0), (full, tail)
+    # the switch actually happened: scheduled run differs from unscheduled
+    _, exact = train(cfg, shape, ckpt_dir=None,
+                     **{**kw, "schedule": None})
+    assert full[:4] == exact[:4]
+    assert full[4:] != exact[4:]
+
+
+# ------------------------------------------------------- sensitivity ----
+def test_train_run_metric_empty_assignment_is_baseline():
+    cfg, shape = _tiny()
+    metric = train_run_metric(cfg, shape, steps=2)
+    assert metric({}) == 0.0
+
+
+def test_train_run_metric_penalizes_divergence():
+    cfg, shape = _tiny()
+    metric = train_run_metric(cfg, shape, steps=2)
+    cand = PolicyEntry(op="matmul", width=8, coeff_bits=0)
+    val = metric({layer_label(0): cand, layer_label(1): cand})
+    assert val < 0.0   # negated loss-delta%: worse than the exact baseline

@@ -296,3 +296,57 @@ def test_reuse_autotune_warns_when_nothing_loads(tmp_path, capsys,
     loaded, _ = benchrun.reuse_autotune(str(path))
     assert loaded == 0
     assert "no usable autotune records" in capsys.readouterr().err
+
+
+# ------------------------------------------- frontier kernel coverage --
+def test_measure_error_packed_word_path():
+    """Packed-word measurements run the real pack/unpack datapath and
+    stay close to (but distinct from) the per-lane elemwise stats."""
+    from repro.tuning import measure_error
+    for op in ("mul", "div"):
+        stats, src = measure_error(op, 8, 6, kernel="packed")
+        d = dict(stats)
+        assert src == "sampled"
+        assert d["n"] == 16384
+        assert 0 < d["are_pct"] < 10
+        assert 0 <= d["nmed"] < 0.1
+    # more coefficient bits, less error (same knob the elemwise path has)
+    loose = dict(measure_error("mul", 8, 0, kernel="packed")[0])
+    tight = dict(measure_error("mul", 8, 6, kernel="packed")[0])
+    assert tight["are_pct"] < loose["are_pct"]
+
+
+def test_measure_error_matmul_accumulate_level():
+    """Accumulate-level NMED vs an exact int64 matmul, both emulation
+    levels, monotone in coeff_bits."""
+    from repro.tuning import measure_error
+    shape = (16, 32, 8)
+    for kernel in ("matmul_int", "matmul_emul"):
+        loose = dict(measure_error("matmul", 8, 0, kernel=kernel,
+                                   shape=shape)[0])
+        tight = dict(measure_error("matmul", 8, 8, kernel=kernel,
+                                   shape=shape)[0])
+        assert loose["n"] == 16 * 8
+        assert tight["nmed"] < loose["nmed"], kernel
+        assert tight["are_pct"] < loose["are_pct"], kernel
+
+
+def test_measure_error_kernel_validation():
+    from repro.tuning import measure_error
+    with pytest.raises(ValueError, match="shape"):
+        measure_error("mul", 8, 6, shape=(4, 4, 4))        # elemwise
+    with pytest.raises(ValueError, match="matmul"):
+        measure_error("matmul", 8, 6, kernel="elemwise")
+    with pytest.raises(ValueError, match="width"):
+        measure_error("mul", 12, 6, kernel="packed")
+
+
+def test_build_frontier_carries_kernel():
+    from repro.tuning import build_frontier
+    pts = build_frontier("matmul", width=8, kernel="matmul_emul",
+                         shape=(16, 32, 8), coeff_sweep=(0, 6),
+                         bench=None)
+    assert all(p.kernel == "matmul_emul" for p in pts)
+    assert all(p.op == "matmul" for p in pts)
+    nmeds = {p.coeff_bits: dict(p.error)["nmed"] for p in pts}
+    assert nmeds[6] < nmeds[0]
